@@ -1,0 +1,51 @@
+"""Fig 7 analog: compression latency vs input size for the two extreme
+lineage types (one-to-one element-wise; one-axis aggregation)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import capture as C
+from repro.core.provrc import compress
+
+from .baselines import FORMATS
+
+__all__ = ["run_fig7"]
+
+
+def _time(fn, *args) -> float:
+    t0 = time.perf_counter()
+    fn(*args)
+    return time.perf_counter() - t0
+
+
+def run_fig7(sizes=(10_000, 100_000, 1_000_000), verbose: bool = True):
+    rows = []
+    for n in sizes:
+        side = int(np.sqrt(n))
+        for kind, rel in (
+            ("elementwise", C.identity_lineage((n,))),
+            ("aggregate", C.reduce_lineage((side, side), 1)),
+        ):
+            raw = rel.rows()
+            rec = {"kind": kind, "n_cells": n}
+            for fmt, (enc, _) in FORMATS.items():
+                rec[fmt + "_s"] = _time(enc, raw)
+            rec["provrc_s"] = _time(lambda: compress(rel, method="vector"))
+            rec["provrc_gzip_s"] = _time(
+                lambda: compress(rel, method="vector").serialize(compress=True)
+            )
+            rows.append(rec)
+            if verbose:
+                print(
+                    f"  {kind:12s} n={n:9d} "
+                    + " ".join(
+                        f"{k[:-2]}={rec[k]*1e3:8.1f}ms"
+                        for k in rec
+                        if k.endswith("_s")
+                    ),
+                    flush=True,
+                )
+    return rows

@@ -1,0 +1,223 @@
+"""Figs 8/9 analog: multi-hop forward-query latency vs selectivity.
+
+Workflows: image-like (5 steps), relational-like (5 steps), ResNet-block
+(7 steps), and randomly generated numpy pipelines (5 and 10 ops).
+
+Methods:
+  * ``dslog``         — in-situ θ-joins over ProvRC tables (this paper),
+  * ``dslog_nomerge`` — ablation without the between-hop row merge,
+  * ``raw``           — hash-join over uncompressed rows,
+  * ``parquet_like``  — decode the columnar blobs, then hash-join,
+  * ``rle_like``      — decode RLE blobs, then hash-join,
+  * ``array``         — vectorized equality scan (np.isin) per hop.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import capture as C
+from repro.core.catalog import DSLog
+from repro.core.query import QueryBox
+from repro.core.relation import LineageRelation
+
+from .baselines import (
+    decode_parquet_like,
+    decode_rle_like,
+    encode_parquet_like,
+    encode_rle_like,
+)
+
+__all__ = ["build_workflows", "run_fig89"]
+
+
+# --------------------------------------------------------------------------- #
+# Workflow construction
+# --------------------------------------------------------------------------- #
+def _image_workflow(side=256):
+    h = side
+    rels = [
+        C.slice_lineage((h, h), (0, 0), (h, h), (2, 2)),
+        C.identity_lineage((h // 2, h // 2)),
+        C.transpose_lineage((h // 2, h // 2), (1, 0)),
+        C.flip_lineage((h // 2, h // 2), 1),
+        C.reduce_lineage((h // 2, h // 2), 1),
+    ]
+    return "image", rels
+
+
+def _relational_workflow(n=20_000):
+    rng = np.random.default_rng(3)
+    lk = rng.integers(0, n // 2, n)
+    rk = rng.integers(0, n // 2, n // 2)
+    join_l, _ = C.inner_join_lineage(lk, rk, 3, 2)
+    n_out = join_l.out_shape[0]
+    rels = [
+        join_l,
+        C.identity_lineage(join_l.out_shape),            # filter NaN (pass)
+        C.reduce_lineage(join_l.out_shape, 1),           # add two columns
+        C.identity_lineage((n_out,)),                    # one-hot core dep
+        C.identity_lineage((n_out,)),                    # add constant
+    ]
+    return "relational", rels
+
+
+def _resnet_workflow(side=128):
+    s = side
+    rels = [
+        C.conv2d_lineage(s, s, 3, 3),
+        C.identity_lineage((s - 2, s - 2)),
+        C.conv2d_lineage(s - 2, s - 2, 3, 3),
+        C.identity_lineage((s - 4, s - 4)),
+        C.conv2d_lineage(s - 4, s - 4, 3, 3),
+        C.identity_lineage((s - 6, s - 6)),
+        C.reduce_lineage((s - 6, s - 6), (0, 1)),
+    ]
+    return "resnet", rels
+
+
+_RANDOM_OPS = [
+    lambda shape, rng: ("neg", C.identity_lineage(shape)),
+    lambda shape, rng: ("exp", C.identity_lineage(shape)),
+    lambda shape, rng: ("clip", C.identity_lineage(shape)),
+    lambda shape, rng: ("flip", C.flip_lineage(shape, 0)),
+    lambda shape, rng: ("roll", C.roll_lineage(shape, int(rng.integers(1, 5)), 0)),
+    lambda shape, rng: (
+        "transpose",
+        C.transpose_lineage(shape, tuple(reversed(range(len(shape))))),
+    ),
+    lambda shape, rng: (
+        "reshape",
+        C.reshape_lineage(shape, (int(np.prod(shape)),)),
+    ),
+    lambda shape, rng: ("sort", C.sort_lineage(rng.random(shape), axis=-1)),
+]
+
+
+def _random_workflow(n_ops: int, seed: int, n_cells: int = 40_000):
+    rng = np.random.default_rng(seed)
+    side = int(np.sqrt(n_cells))
+    shape = (side, side)
+    rels = []
+    for _ in range(n_ops):
+        name, rel = _RANDOM_OPS[int(rng.integers(0, len(_RANDOM_OPS)))](shape, rng)
+        rels.append(rel)
+        shape = rel.out_shape
+    return f"random{n_ops}_s{seed}", rels
+
+
+def build_workflows(n_random: int = 6):
+    flows = [_image_workflow(), _relational_workflow(), _resnet_workflow()]
+    for seed in range(n_random):
+        flows.append(_random_workflow(5, seed))
+    for seed in range(n_random // 2):
+        flows.append(_random_workflow(10, 100 + seed))
+    return flows
+
+
+# --------------------------------------------------------------------------- #
+# Query engines
+# --------------------------------------------------------------------------- #
+def _ravel(idx, shape):
+    return np.ravel_multi_index(idx.T, shape)
+
+
+def _forward_join_rows(rels, query_cells):
+    """Hash-join forward propagation over uncompressed row matrices."""
+    cur = _ravel(query_cells, rels[0].in_shape)
+    for rel in rels:
+        in_r = _ravel(rel.in_idx, rel.in_shape)
+        out_r = _ravel(rel.out_idx, rel.out_shape)
+        mask = np.isin(in_r, cur)
+        cur = np.unique(out_r[mask])
+    return cur
+
+
+def _forward_array_scan(rels, query_cells):
+    """Vectorized equality scan per query cell (the Array baseline)."""
+    cur = _ravel(query_cells, rels[0].in_shape)
+    for rel in rels:
+        in_r = _ravel(rel.in_idx, rel.in_shape)
+        out_r = _ravel(rel.out_idx, rel.out_shape)
+        hits = np.zeros(in_r.shape[0], bool)
+        for batch_start in range(0, cur.size, 1000):
+            q = cur[batch_start : batch_start + 1000]
+            hits |= (in_r[:, None] == q[None, :]).any(axis=1)
+        cur = np.unique(out_r[hits])
+    return cur
+
+
+def run_fig89(selectivities=(0.001, 0.01, 0.1), n_random: int = 6,
+              verbose: bool = True):
+    rows = []
+    for wf_name, rels in build_workflows(n_random):
+        # ingest once per workflow
+        log = DSLog(store_forward=True)
+        names = [f"{wf_name}_a0"]
+        log.define_array(names[0], rels[0].in_shape)
+        encoded_pq, encoded_rle, raw_blobs = [], [], []
+        for k, rel in enumerate(rels):
+            names.append(f"{wf_name}_a{k + 1}")
+            log.define_array(names[k + 1], rel.out_shape)
+            log.register_operation(
+                f"{wf_name}_op{k}", [names[k]], [names[k + 1]],
+                capture=lambda r=rel: {(0, 0): r}, reuse=False,
+            )
+            raw = rel.rows()
+            raw_blobs.append((raw, rel))
+            encoded_pq.append(encode_parquet_like(raw))
+            encoded_rle.append(encode_rle_like(raw))
+
+        in_shape = rels[0].in_shape
+        n_cells = int(np.prod(in_shape))
+        for sel in selectivities:
+            k = max(1, int(n_cells * sel))
+            flat = np.arange(n_cells)[: k]
+            cells = np.stack(np.unravel_index(flat, in_shape), axis=1)
+
+            timings = {}
+            t0 = time.perf_counter()
+            res_dslog = log.prov_query(names, cells)
+            timings["dslog"] = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            log.prov_query(names, cells, merge=False)
+            timings["dslog_nomerge"] = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            want = _forward_join_rows(rels, cells)
+            timings["raw"] = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            decoded = [decode_parquet_like(b) for b in encoded_pq]
+            _forward_join_rows(rels, cells)
+            timings["parquet_like"] = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            decoded = [decode_rle_like(b) for b in encoded_rle]
+            _forward_join_rows(rels, cells)
+            timings["rle_like"] = time.perf_counter() - t0
+
+            if n_cells <= 70_000 and k <= 5000:
+                t0 = time.perf_counter()
+                _forward_array_scan(rels, cells)
+                timings["array"] = time.perf_counter() - t0
+
+            # correctness: in-situ result == oracle
+            got = {
+                int(np.ravel_multi_index(c, rels[-1].out_shape))
+                for c in res_dslog.cells()
+            }
+            assert got == set(want.tolist()), f"{wf_name} sel={sel} mismatch"
+
+            rec = {"workflow": wf_name, "selectivity": sel, **timings}
+            rows.append(rec)
+            if verbose:
+                print(
+                    f"  {wf_name:16s} sel={sel:6.3f} "
+                    + " ".join(f"{m}={t*1e3:8.2f}ms" for m, t in timings.items()),
+                    flush=True,
+                )
+    return rows

@@ -1,0 +1,131 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per measured cell) plus a
+human-readable narration to stderr-adjacent stdout sections.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only table7,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _emit(name: str, us: float, derived) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def bench_table7(quick: bool) -> None:
+    from .table7_compression import run_table7
+
+    print("# Table VII — compression ratio per format", flush=True)
+    rows = run_table7(scale=0.25 if quick else 1.0)
+    for r in rows:
+        _emit(f"table7/{r['op']}/provrc", r["provrc_s"] * 1e6,
+              f"bytes={r['provrc']};ratio_pct={r['ratio_provrc_pct']:.5f}")
+        _emit(f"table7/{r['op']}/provrc_gzip", r["provrc_gzip_s"] * 1e6,
+              f"bytes={r['provrc_gzip']}")
+        _emit(f"table7/{r['op']}/parquet_like", r["parquet_like_s"] * 1e6,
+              f"bytes={r['parquet_like']}")
+        _emit(f"table7/{r['op']}/beats_closest", 0.0,
+              f"x{r['beats_closest_x']:.0f}")
+
+
+def bench_fig7(quick: bool) -> None:
+    from .fig7_latency import run_fig7
+
+    print("# Fig 7 — compression latency vs input size", flush=True)
+    sizes = (10_000, 100_000) if quick else (10_000, 100_000, 1_000_000)
+    for r in run_fig7(sizes):
+        for k in r:
+            if k.endswith("_s"):
+                _emit(f"fig7/{r['kind']}/n{r['n_cells']}/{k[:-2]}",
+                      r[k] * 1e6, "")
+
+
+def bench_fig89(quick: bool) -> None:
+    from .fig89_query import run_fig89
+
+    print("# Figs 8/9 — multi-hop query latency vs selectivity", flush=True)
+    rows = run_fig89(n_random=2 if quick else 6)
+    for r in rows:
+        for m, t in r.items():
+            if m in ("workflow", "selectivity"):
+                continue
+            _emit(f"fig89/{r['workflow']}/sel{r['selectivity']}/{m}",
+                  t * 1e6, "")
+
+
+def bench_table9(quick: bool) -> None:
+    from .table9_coverage import run_table9
+
+    print("# Table IX — op coverage of compression + reuse", flush=True)
+    res = run_table9()
+    for cat in ("element", "complex", "total"):
+        r = res[cat]
+        _emit(f"table9/{cat}", 0.0,
+              f"total={r['total']};compressed={r['compressed']};"
+              f"dim={r['dim']};gen={r['gen']};errors={r['err']}")
+
+
+def bench_roofline(quick: bool) -> None:
+    from .roofline import run_roofline
+
+    print("# Roofline — per (arch x shape) from dry-run artifacts", flush=True)
+    try:
+        rows = run_roofline()
+    except Exception as e:
+        print(f"roofline unavailable (run launch.dryrun first): {e}")
+        return
+    for r in rows:
+        _emit(
+            f"roofline/{r['arch']}/{r['shape']}",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+            f"bound={r['dominant']};roofline_pct={100 * r['roofline_fraction']:.2f};"
+            f"useful={r['useful_flop_ratio']:.3f}",
+        )
+
+
+def bench_kernels(quick: bool) -> None:
+    """Production hot-pass throughput (numpy path) + kernel validation note."""
+    import time
+
+    import numpy as np
+
+    from repro.core.capture import identity_lineage
+    from repro.core.provrc import compress
+
+    print("# Kernel-path throughput (CPU production path; Pallas kernels "
+          "validated under interpret=True in tests)", flush=True)
+    n = 200_000 if quick else 1_000_000
+    rel = identity_lineage((n,))
+    t0 = time.perf_counter()
+    compress(rel, method="vector")
+    dt = time.perf_counter() - t0
+    _emit("kernels/encode_1m_rows", dt * 1e6, f"rows_per_s={n / dt:.0f}")
+
+
+BENCHES = {
+    "table7": bench_table7,
+    "fig7": bench_fig7,
+    "fig89": bench_fig89,
+    "table9": bench_table9,
+    "roofline": bench_roofline,
+    "kernels": bench_kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for nm in names:
+        BENCHES[nm](args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Training-data forensics with DSLog: find which corpus documents shaped a
+given training shard row, across the pipeline chain, without decompression.
+
+This is the paper's use case embedded in the training framework: the
+pipeline logs per-step lineage into DSLog; the shuffle gather is
+value-dependent (captured each step) while the shard/microbatch slices hit
+``dim_sig`` reuse after one confirmation — per-step lineage cost collapses
+to (gather rows) only.
+
+    PYTHONPATH=src python examples/lineage_debugging.py
+"""
+
+import numpy as np
+
+from repro.core.catalog import DSLog
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+
+log = DSLog()
+cfg = PipelineConfig(vocab=32000, seq_len=64, global_batch=16, seed=42,
+                     n_source_rows=100_000)
+pipe = TokenPipeline(cfg, data_shards=4, shard_id=0, dslog=log)
+
+for _ in range(4):
+    pipe.next_batch()
+
+n_reused = sum(1 for op in log.ops if op.reused)
+print(f"registered {len(log.ops)} pipeline ops; {n_reused} served by reuse "
+      f"(capture bypassed)")
+print(f"total lineage storage: {log.storage_bytes() / 1024:.1f} KiB")
+
+# ---- backward query: which corpus doc produced shard row 2, token 10, at
+# step 3? ------------------------------------------------------------------
+res = log.prov_query(["shard_s3_k0", "batch_s3", "corpus"], np.array([[2, 10]]))
+docs = sorted({c[0] for c in res.cell_set()})
+truth = pipe.source_rows_for_step(3)[2]
+print(f"shard_s3_k0[2, 10] came from corpus doc(s) {docs} "
+      f"(ground truth: {truth})")
+assert docs == [int(truth)]
+
+# ---- forward query: a suspect document — which rows of data shard 0 did
+# it touch in step 3?  (shard 0 holds global batch rows 0-3) ----------------
+suspect = int(pipe.source_rows_for_step(3)[2])
+fwd = log.prov_query(
+    ["corpus", "batch_s3", "shard_s3_k0"],
+    np.array([[suspect, 0]]),
+)
+rows = sorted({c[0] for c in fwd.cell_set()})
+print(f"corpus doc {suspect} touched shard-0 rows {rows} (expected [2])")
+assert rows == [2]

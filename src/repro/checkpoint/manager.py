@@ -1,0 +1,162 @@
+"""Fault-tolerant checkpointing: atomic, versioned, zstd-compressed, with
+cross-mesh (elastic) restore.
+
+Layout::
+
+    <root>/step_00000420/manifest.json     # tree structure + dtypes/shapes
+    <root>/step_00000420/arrays.bin.zst    # concatenated raw buffers
+    <root>/LATEST                          # atomic pointer file
+
+Writes go to ``<dir>.tmp`` then ``os.replace`` — a crash mid-save can never
+corrupt the pointer or a previous checkpoint.  ``restore`` takes an optional
+``(mesh, spec_tree)`` so a checkpoint written on one mesh restores onto a
+differently-shaped mesh (elastic scaling): arrays are saved unsharded
+(gathered), and resharding happens at ``device_put`` time.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+import zstandard as zstd
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: dict):
+    root: dict = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        cur = root
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return root
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3, async_save: bool = False):
+        self.root = root
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(root, exist_ok=True)
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, tree, extra: dict | None = None) -> str:
+        """Save a pytree of arrays (gathers to host first)."""
+        flat = _flatten(tree)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, extra or {})
+            )
+            self._thread.start()
+            return self._dir(step)
+        self._write(step, host, extra or {})
+        return self._dir(step)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
+
+    def _write(self, step: int, host: dict, extra: dict) -> None:
+        final = self._dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "extra": extra, "arrays": []}
+        cctx = zstd.ZstdCompressor(level=3)
+        with open(os.path.join(tmp, "arrays.bin.zst"), "wb") as f:
+            with cctx.stream_writer(f) as w:
+                for k, a in host.items():
+                    manifest["arrays"].append(
+                        {"path": k, "dtype": str(a.dtype), "shape": list(a.shape)}
+                    )
+                    w.write(np.ascontiguousarray(a).tobytes())
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        # atomic LATEST pointer
+        ptr_tmp = os.path.join(self.root, "LATEST.tmp")
+        with open(ptr_tmp, "w") as f:
+            f.write(os.path.basename(final))
+        os.replace(ptr_tmp, os.path.join(self.root, "LATEST"))
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(
+            d for d in os.listdir(self.root) if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        for d in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.root, d), ignore_errors=True)
+
+    # ------------------------------------------------------------------ #
+    def latest_step(self) -> int | None:
+        ptr = os.path.join(self.root, "LATEST")
+        if not os.path.exists(ptr):
+            return None
+        with open(ptr) as f:
+            name = f.read().strip()
+        if not os.path.exists(os.path.join(self.root, name)):
+            return None
+        return int(name.split("_")[1])
+
+    def restore(self, step: int | None = None, shardings=None):
+        """Load (tree, extra).  ``shardings``: optional flat-matching pytree of
+        ``jax.sharding.Sharding`` for elastic placement on a new mesh."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                return None, None
+        d = self._dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        dctx = zstd.ZstdDecompressor()
+        with open(os.path.join(d, "arrays.bin.zst"), "rb") as f:
+            raw = dctx.stream_reader(f).read()
+        flat = {}
+        off = 0
+        for rec in manifest["arrays"]:
+            dt = np.dtype(rec["dtype"])
+            n = int(np.prod(rec["shape"])) if rec["shape"] else 1
+            nbytes = n * dt.itemsize
+            a = np.frombuffer(raw, dt, count=n, offset=off).reshape(rec["shape"])
+            off += nbytes
+            flat[rec["path"]] = a
+        tree = _unflatten(flat)
+        if shardings is not None:
+            flat_sh = _flatten(shardings)
+            tree = _unflatten(
+                {
+                    k: jax.device_put(v, flat_sh[k]) if k in flat_sh else v
+                    for k, v in _flatten(tree).items()
+                }
+            )
+        return tree, manifest["extra"]

@@ -1,0 +1,21 @@
+"""DSLog core: ProvRC compression, in-situ queries, reuse, catalog.
+
+This package is the paper's contribution (Zhao & Krishnan, "Compression and
+In-Situ Query Processing for Fine-Grained Array Lineage").  Public API:
+
+    from repro.core import DSLog, QueryBox, compress, LineageRelation
+"""
+
+from .capture import capture_jacobian  # noqa: F401
+from .catalog import ArrayDef, DSLog, LineageEntry  # noqa: F401
+from .provrc import compress, compress_both  # noqa: F401
+from .query import (  # noqa: F401
+    QueryBox,
+    merge_boxes,
+    query_path,
+    theta_join,
+    theta_join_inverse,
+)
+from .relation import LineageRelation  # noqa: F401
+from .reuse import ReusePredictor, generalize, instantiate  # noqa: F401
+from .table import CompressedTable  # noqa: F401

@@ -1,0 +1,345 @@
+"""DSLog — the lineage storage manager (paper §III, §VI).
+
+The catalog owns:
+
+* named, shape-declared **Arrays** (§III.A ``Array``),
+* **lineage entries** — ProvRC-compressed backward (+ optionally forward)
+  tables between array pairs (§III.A ``Lineage``),
+* **operation registrations** that bundle multiple lineage entries under an
+  operation signature and drive automatic reuse prediction (§VI),
+* **persistence** — each table is a packed binary blob (optionally
+  zlib-compressed, i.e. ProvRC-GZip) under a root directory, with a JSON
+  catalog index.
+
+Multi-hop ``prov_query`` (§V) walks a path of array names, picking for each
+hop the best stored materialization (forward table, backward table with
+inverse join, or vice versa for backward queries).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+from .provrc import compress
+from .query import QueryBox, merge_boxes, theta_join, theta_join_inverse
+from .relation import LineageRelation
+from .reuse import (
+    ReusePredictor,
+    sig_key_base,
+    sig_key_dim,
+    sig_key_gen,
+)
+from .table import CompressedTable
+
+__all__ = ["DSLog", "ArrayDef", "LineageEntry"]
+
+
+@dataclass
+class ArrayDef:
+    name: str
+    shape: tuple[int, ...]
+
+
+@dataclass
+class LineageEntry:
+    """Compressed lineage between an op input (src) and op output (dst)."""
+
+    lineage_id: int
+    src: str  # input array name
+    dst: str  # output array name
+    backward: CompressedTable  # keys = dst axes
+    forward: CompressedTable | None = None  # keys = src axes
+    op_name: str | None = None
+    reused_from: str | None = None
+
+
+@dataclass
+class _OpRecord:
+    op_name: str
+    in_arrs: tuple[str, ...]
+    out_arrs: tuple[str, ...]
+    op_args: Any
+    lineage_ids: list[int] = field(default_factory=list)
+    reused: str | None = None
+
+
+class DSLog:
+    """The lineage index service."""
+
+    def __init__(
+        self,
+        root: str | None = None,
+        store_forward: bool = True,
+        compress_method: str = "auto",
+        reuse_m: int = 1,
+        gzip: bool = True,
+    ):
+        self.root = root
+        self.store_forward = store_forward
+        self.compress_method = compress_method
+        self.gzip = gzip
+        self.arrays: dict[str, ArrayDef] = {}
+        self.lineage: dict[int, LineageEntry] = {}
+        self.by_pair: dict[tuple[str, str], list[int]] = {}
+        self.ops: list[_OpRecord] = []
+        self.predictor = ReusePredictor(m=reuse_m)
+        self._next_id = 0
+        if root:
+            os.makedirs(root, exist_ok=True)
+
+    # ------------------------------------------------------------------ #
+    # Array / lineage definition (paper §III.A)
+    # ------------------------------------------------------------------ #
+    def define_array(self, name: str, shape: tuple[int, ...]) -> ArrayDef:
+        arr = ArrayDef(name, tuple(int(d) for d in shape))
+        self.arrays[name] = arr
+        return arr
+
+    def add_lineage(
+        self,
+        src: str,
+        dst: str,
+        relation: LineageRelation,
+        op_name: str | None = None,
+        tables: tuple[CompressedTable, CompressedTable | None] | None = None,
+        reused_from: str | None = None,
+    ) -> LineageEntry:
+        """Ingest one captured relation (src = op input, dst = op output)."""
+        self._check_shapes(src, dst, relation)
+        if tables is not None:
+            bwd, fwd = tables
+        else:
+            bwd = compress(relation, "backward", self.compress_method)
+            fwd = (
+                compress(relation, "forward", self.compress_method)
+                if self.store_forward
+                else None
+            )
+        entry = LineageEntry(
+            self._next_id, src, dst, bwd, fwd, op_name, reused_from
+        )
+        self._next_id += 1
+        self.lineage[entry.lineage_id] = entry
+        self.by_pair.setdefault((src, dst), []).append(entry.lineage_id)
+        return entry
+
+    def _check_shapes(self, src: str, dst: str, rel: LineageRelation) -> None:
+        if src in self.arrays and self.arrays[src].shape != rel.in_shape:
+            raise ValueError(
+                f"array {src} declared {self.arrays[src].shape}, lineage says {rel.in_shape}"
+            )
+        if dst in self.arrays and self.arrays[dst].shape != rel.out_shape:
+            raise ValueError(
+                f"array {dst} declared {self.arrays[dst].shape}, lineage says {rel.out_shape}"
+            )
+        self.arrays.setdefault(src, ArrayDef(src, rel.in_shape))
+        self.arrays.setdefault(dst, ArrayDef(dst, rel.out_shape))
+
+    # ------------------------------------------------------------------ #
+    # Operation registration with automatic reuse (§III.A, §VI)
+    # ------------------------------------------------------------------ #
+    def register_operation(
+        self,
+        op_name: str,
+        in_arrs: list[str],
+        out_arrs: list[str],
+        capture: Callable[[], dict[tuple[int, int], LineageRelation]] | None = None,
+        op_args: Any = None,
+        reuse: bool | None = None,
+    ) -> _OpRecord:
+        """Register one executed operation and its lineage.
+
+        ``capture()`` returns ``{(out_pos, in_pos): relation}``.  When reuse
+        is enabled (default) and a confirmed signature mapping exists, the
+        capture callable is *not* invoked — the stored tables are linked
+        instead (this is the paper's capture-bypass).
+        """
+        in_arrs, out_arrs = tuple(in_arrs), tuple(out_arrs)
+        in_shapes = tuple(self.arrays[a].shape for a in in_arrs)
+        out_shapes = tuple(self.arrays[a].shape for a in out_arrs)
+        dim_key = sig_key_dim(op_name, in_shapes + out_shapes, op_args)
+        gen_key = sig_key_gen(op_name, op_args)
+        shapes_token = in_shapes + out_shapes
+        rec = _OpRecord(op_name, in_arrs, out_arrs, op_args)
+        use_reuse = reuse if reuse is not None else True
+
+        pair_shapes = {}
+        for oi, oname in enumerate(out_arrs):
+            for ii, iname in enumerate(in_arrs):
+                pair_shapes[f"{oi}:{ii}"] = (
+                    self.arrays[oname].shape,
+                    self.arrays[iname].shape,
+                )
+
+        if use_reuse:
+            decision = self.predictor.lookup(
+                dim_key, gen_key, shapes_token, pair_shapes
+            )
+            if decision.reused:
+                assert decision.tables is not None
+                for label, bwd in decision.tables.items():
+                    oi, ii = (int(x) for x in label.split(":"))
+                    entry = LineageEntry(
+                        self._next_id,
+                        in_arrs[ii],
+                        out_arrs[oi],
+                        bwd,
+                        self._derive_forward(bwd) if self.store_forward else None,
+                        op_name,
+                        reused_from=decision.source,
+                    )
+                    self._next_id += 1
+                    self.lineage[entry.lineage_id] = entry
+                    self.by_pair.setdefault(
+                        (entry.src, entry.dst), []
+                    ).append(entry.lineage_id)
+                    rec.lineage_ids.append(entry.lineage_id)
+                rec.reused = decision.source
+                self.ops.append(rec)
+                return rec
+
+        if capture is None:
+            raise ValueError(
+                f"no confirmed reuse mapping for {op_name} and no capture given"
+            )
+        rels = capture()
+        captured_tables: dict[str, CompressedTable] = {}
+        for (oi, ii), rel in rels.items():
+            entry = self.add_lineage(
+                in_arrs[ii], out_arrs[oi], rel, op_name=op_name
+            )
+            rec.lineage_ids.append(entry.lineage_id)
+            captured_tables[f"{oi}:{ii}"] = entry.backward
+        if use_reuse:
+            self.predictor.observe(dim_key, gen_key, shapes_token, captured_tables)
+        self.ops.append(rec)
+        return rec
+
+    def _derive_forward(self, bwd: CompressedTable) -> CompressedTable | None:
+        """Forward table from a reused backward table (via decompress only
+        when small; otherwise serve forward queries with the inverse join)."""
+        if bwd.n_rows <= 4096:
+            rel = bwd.decompress()
+            return compress(rel, "forward", self.compress_method)
+        return None
+
+    # ------------------------------------------------------------------ #
+    # Multi-hop queries (§V)
+    # ------------------------------------------------------------------ #
+    def prov_query(
+        self,
+        path: list[str],
+        query_cells: "np.ndarray | QueryBox",
+        merge: bool = True,
+    ) -> QueryBox:
+        """Lineage between cells of ``path[0]`` and cells of ``path[-1]``."""
+        if len(path) < 2:
+            raise ValueError("path needs at least two arrays")
+        first = self.arrays[path[0]]
+        q = (
+            query_cells
+            if isinstance(query_cells, QueryBox)
+            else QueryBox.from_cells(first.shape, np.asarray(query_cells))
+        )
+        if merge:
+            # encode Q' like the tables: range-merge the queried cells (§V.B)
+            q = merge_boxes(q)
+        for a, b in zip(path[:-1], path[1:]):
+            q = self._query_hop(q, a, b, merge)
+        return q
+
+    def _query_hop(self, q: QueryBox, a: str, b: str, merge: bool) -> QueryBox:
+        boxes_lo, boxes_hi = [], []
+        shape_out: tuple[int, ...] | None = None
+        # backward direction: a is an op OUTPUT, b the op input
+        for lid in self.by_pair.get((b, a), []):
+            e = self.lineage[lid]
+            res = theta_join(q, e.backward, merge=False)
+            boxes_lo.append(res.lo)
+            boxes_hi.append(res.hi)
+            shape_out = res.shape
+        # forward direction: a is an op INPUT, b the op output
+        for lid in self.by_pair.get((a, b), []):
+            e = self.lineage[lid]
+            if e.forward is not None:
+                res = theta_join(q, e.forward, merge=False)
+            else:
+                res = theta_join_inverse(q, e.backward, merge=False)
+            boxes_lo.append(res.lo)
+            boxes_hi.append(res.hi)
+            shape_out = res.shape
+        if shape_out is None:
+            raise KeyError(f"no lineage stored between {a!r} and {b!r}")
+        res = QueryBox(
+            shape_out, np.concatenate(boxes_lo), np.concatenate(boxes_hi)
+        )
+        return merge_boxes(res) if merge else res
+
+    # ------------------------------------------------------------------ #
+    # Persistence
+    # ------------------------------------------------------------------ #
+    def save(self) -> None:
+        if not self.root:
+            raise ValueError("DSLog opened without a root directory")
+        meta = {
+            "arrays": {n: list(a.shape) for n, a in self.arrays.items()},
+            "lineage": [],
+            "next_id": self._next_id,
+        }
+        for e in self.lineage.values():
+            fn = f"lineage_{e.lineage_id}.prvc"
+            with open(os.path.join(self.root, fn), "wb") as f:
+                f.write(e.backward.serialize(compress=self.gzip))
+            rec = {
+                "id": e.lineage_id,
+                "src": e.src,
+                "dst": e.dst,
+                "file": fn,
+                "op": e.op_name,
+                "reused": e.reused_from,
+                "fwd": None,
+            }
+            if e.forward is not None:
+                fwd_fn = f"lineage_{e.lineage_id}_fwd.prvc"
+                with open(os.path.join(self.root, fwd_fn), "wb") as f:
+                    f.write(e.forward.serialize(compress=self.gzip))
+                rec["fwd"] = fwd_fn
+            meta["lineage"].append(rec)
+        with open(os.path.join(self.root, "catalog.json"), "w") as f:
+            json.dump(meta, f)
+
+    @staticmethod
+    def load(root: str) -> "DSLog":
+        log = DSLog(root=root)
+        with open(os.path.join(root, "catalog.json")) as f:
+            meta = json.load(f)
+        for n, shp in meta["arrays"].items():
+            log.define_array(n, tuple(shp))
+        for rec in meta["lineage"]:
+            with open(os.path.join(root, rec["file"]), "rb") as f:
+                bwd = CompressedTable.deserialize(f.read())
+            fwd = None
+            if rec["fwd"]:
+                with open(os.path.join(root, rec["fwd"]), "rb") as f:
+                    fwd = CompressedTable.deserialize(f.read())
+            e = LineageEntry(
+                rec["id"], rec["src"], rec["dst"], bwd, fwd, rec["op"], rec["reused"]
+            )
+            log.lineage[e.lineage_id] = e
+            log.by_pair.setdefault((e.src, e.dst), []).append(e.lineage_id)
+        log._next_id = meta["next_id"]
+        return log
+
+    # ------------------------------------------------------------------ #
+    def storage_bytes(self) -> int:
+        total = 0
+        for e in self.lineage.values():
+            total += e.backward.nbytes()
+            if e.forward is not None:
+                total += e.forward.nbytes()
+        return total

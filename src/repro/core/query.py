@@ -1,0 +1,276 @@
+"""In-situ query processing over compressed lineage tables (paper §V).
+
+Queries never decompress.  A query is a :class:`QueryBox` — a union of
+multidimensional closed intervals over one array's axes — and each hop of a
+lineage path is a θ-join against a compressed table:
+
+1. **Range join** (§V.B.1): keep (query row, table row) pairs whose key
+   intervals overlap on *every* key attribute; the result keys are the
+   intersections (the all-to-all insight makes this lossless for the queried
+   cells).
+2. **De-relativize** (§V.B.2): convert relative value attributes back to
+   absolute intervals.  With our ``delta = val − key`` convention,
+   ``rel_back`` is interval addition:  ``[ilo + dlo, ihi + dhi]`` where
+   ``[ilo, ihi]`` is the key intersection — exact because the union of
+   ``k + [dlo, dhi]`` over a contiguous ``k`` interval is itself contiguous.
+
+Between hops the planner applies the paper's two optimizations (§V.B.3):
+projection onto the next hop's attributes and adjacent-interval row merging
+(``merge=False`` reproduces the DSLog-NoMerge ablation).
+
+``theta_join_inverse`` additionally answers a query against a table
+materialized in the *opposite* direction (the paper's ``rel_for``), so a
+deployment that stores only backward tables can still serve forward queries.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .intervals import coalesce_1d, lexsort_rows
+from .provrc import _group_ids
+from .table import CompressedTable
+
+__all__ = ["QueryBox", "theta_join", "theta_join_inverse", "query_path", "merge_boxes"]
+
+
+@dataclass
+class QueryBox:
+    """Union of boxes over one array's axes: ``lo/hi`` are ``[N, ndim]``."""
+
+    shape: tuple[int, ...]
+    lo: np.ndarray = field(repr=False)
+    hi: np.ndarray = field(repr=False)
+
+    def __post_init__(self) -> None:
+        nd = len(self.shape)
+        self.lo = np.asarray(self.lo, np.int64).reshape(-1, nd)
+        self.hi = np.asarray(self.hi, np.int64).reshape(-1, nd)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_rows(self) -> int:
+        return int(self.lo.shape[0])
+
+    @staticmethod
+    def from_cells(shape: tuple[int, ...], cells: np.ndarray) -> "QueryBox":
+        cells = np.asarray(cells, np.int64).reshape(-1, len(shape))
+        return QueryBox(shape, cells.copy(), cells.copy())
+
+    @staticmethod
+    def from_range(
+        shape: tuple[int, ...], lo: tuple[int, ...], hi: tuple[int, ...]
+    ) -> "QueryBox":
+        return QueryBox(shape, np.array([lo]), np.array([hi]))
+
+    @staticmethod
+    def full(shape: tuple[int, ...]) -> "QueryBox":
+        nd = len(shape)
+        return QueryBox(
+            shape,
+            np.zeros((1, nd), np.int64),
+            np.array([[d - 1 for d in shape]], np.int64),
+        )
+
+    def cells(self) -> np.ndarray:
+        """Expand to explicit cell indices (testing only)."""
+        out = []
+        for r in range(self.n_rows):
+            ranges = [
+                np.arange(self.lo[r, d], self.hi[r, d] + 1)
+                for d in range(len(self.shape))
+            ]
+            grid = np.meshgrid(*ranges, indexing="ij") if ranges else []
+            out.append(
+                np.stack([g.ravel() for g in grid], axis=1)
+                if grid
+                else np.zeros((1, 0), np.int64)
+            )
+        if not out:
+            return np.zeros((0, len(self.shape)), np.int64)
+        return np.unique(np.concatenate(out, axis=0), axis=0)
+
+    def cell_set(self) -> set[tuple[int, ...]]:
+        return {tuple(int(v) for v in c) for c in self.cells()}
+
+    def n_cells(self) -> int:
+        """Number of distinct cells covered (exact despite overlaps)."""
+        return int(self.cells().shape[0]) if self.n_rows else 0
+
+    def volume_upper(self) -> int:
+        """Sum of box volumes (upper bound; fast, no expansion)."""
+        if not self.n_rows:
+            return 0
+        return int(np.prod(self.hi - self.lo + 1, axis=1).sum())
+
+
+# --------------------------------------------------------------------------- #
+# θ-join
+# --------------------------------------------------------------------------- #
+def theta_join(
+    q: QueryBox,
+    table: CompressedTable,
+    merge: bool = True,
+    max_rows: int | None = None,
+) -> QueryBox:
+    """One hop: query over the table's *key* side, returning value-side boxes."""
+    if q.shape != table.key_shape:
+        raise ValueError(
+            f"query shape {q.shape} does not match table key shape {table.key_shape}"
+        )
+    if table.is_symbolic:
+        raise ValueError("instantiate symbolic table before querying")
+    l, m = table.n_key, table.n_val
+    nq, nr = q.n_rows, table.n_rows
+    if nq == 0 or nr == 0:
+        return QueryBox(table.val_shape, np.zeros((0, m)), np.zeros((0, m)))
+
+    # ---- Step 1: range join (blocked to bound the pair matrix) ---------- #
+    qi_list, ri_list = [], []
+    block = max(1, int(4_000_000 // max(nr, 1)))
+    for s in range(0, nq, block):
+        e = min(nq, s + block)
+        ov = np.ones((e - s, nr), dtype=bool)
+        for j in range(l):
+            ov &= (q.lo[s:e, j : j + 1] <= table.key_hi[None, :, j]) & (
+                table.key_lo[None, :, j] <= q.hi[s:e, j : j + 1]
+            )
+        qi, ri = np.nonzero(ov)
+        qi_list.append(qi + s)
+        ri_list.append(ri)
+    qi = np.concatenate(qi_list) if qi_list else np.zeros(0, np.int64)
+    ri = np.concatenate(ri_list) if ri_list else np.zeros(0, np.int64)
+    if max_rows is not None and qi.size > max_rows:
+        raise RuntimeError(f"θ-join intermediate exceeded max_rows={max_rows}")
+    if qi.size == 0:
+        return QueryBox(table.val_shape, np.zeros((0, m)), np.zeros((0, m)))
+
+    inter_lo = np.maximum(q.lo[qi], table.key_lo[ri])  # [P, l]
+    inter_hi = np.minimum(q.hi[qi], table.key_hi[ri])
+
+    # ---- Step 2: de-relativize ------------------------------------------ #
+    out_lo = table.val_lo[ri].copy()  # [P, m]
+    out_hi = table.val_hi[ri].copy()
+    ref = table.val_ref[ri]
+    for j in range(l):
+        sel = ref == j  # [P, m] mask of attrs relative to key j
+        if sel.any():
+            out_lo[sel] += np.broadcast_to(inter_lo[:, j : j + 1], sel.shape)[sel]
+            out_hi[sel] += np.broadcast_to(inter_hi[:, j : j + 1], sel.shape)[sel]
+
+    res = QueryBox(table.val_shape, out_lo, out_hi)
+    return merge_boxes(res) if merge else res
+
+
+def theta_join_inverse(
+    q: QueryBox, table: CompressedTable, merge: bool = True
+) -> QueryBox:
+    """Query over the table's *value* side, returning key-side boxes.
+
+    This is the paper's ``rel_for`` path: for a value attr relative to key
+    ``j`` the constraint ``val = key_j + δ, δ ∈ [dlo, dhi]`` inverts to
+    ``key_j ∈ [q_lo − dhi, q_hi − dlo]``, clamped by the stored key interval
+    (the ``r.x`` term in the paper's formula).
+    """
+    if q.shape != table.val_shape:
+        raise ValueError(
+            f"query shape {q.shape} does not match table val shape {table.val_shape}"
+        )
+    l, m = table.n_key, table.n_val
+    nq, nr = q.n_rows, table.n_rows
+    if nq == 0 or nr == 0:
+        return QueryBox(table.key_shape, np.zeros((0, l)), np.zeros((0, l)))
+
+    # Candidate key intervals per (query row, table row), then prune empties.
+    key_lo = np.broadcast_to(table.key_lo[None, :, :], (nq, nr, l)).copy()
+    key_hi = np.broadcast_to(table.key_hi[None, :, :], (nq, nr, l)).copy()
+    valid = np.ones((nq, nr), dtype=bool)
+    for i in range(m):
+        refs = table.val_ref[:, i]  # [nr]
+        vlo, vhi = table.val_lo[:, i], table.val_hi[:, i]
+        qlo, qhi = q.lo[:, i : i + 1], q.hi[:, i : i + 1]  # [nq,1]
+        abs_mask = refs == -1
+        if abs_mask.any():
+            ov = (qlo <= vhi[None, :]) & (vlo[None, :] <= qhi)
+            valid &= np.where(abs_mask[None, :], ov, True)
+        for j in range(l):
+            jm = refs == j
+            if not jm.any():
+                continue
+            cand_lo = qlo - vhi[None, :]  # [nq, nr]
+            cand_hi = qhi - vlo[None, :]
+            key_lo[:, :, j] = np.where(
+                jm[None, :], np.maximum(key_lo[:, :, j], cand_lo), key_lo[:, :, j]
+            )
+            key_hi[:, :, j] = np.where(
+                jm[None, :], np.minimum(key_hi[:, :, j], cand_hi), key_hi[:, :, j]
+            )
+    valid &= np.all(key_lo <= key_hi, axis=2)
+    qi, ri = np.nonzero(valid)
+    res = QueryBox(table.key_shape, key_lo[qi, ri], key_hi[qi, ri])
+    return merge_boxes(res) if merge else res
+
+
+# --------------------------------------------------------------------------- #
+# Row reduction between hops (paper §V.B.3)
+# --------------------------------------------------------------------------- #
+def merge_boxes(q: QueryBox) -> QueryBox:
+    """Dedup + merge boxes that are adjacent/overlapping on one axis.
+
+    Same machinery as one multi-attribute range-encoding pass per axis,
+    iterated to fixpoint.
+    """
+    lo, hi = q.lo, q.hi
+    if lo.shape[0] <= 1:
+        return q
+    # exact duplicate removal first
+    both = np.concatenate([lo, hi], axis=1)
+    both = np.unique(both, axis=0)
+    nd = len(q.shape)
+    lo, hi = both[:, :nd], both[:, nd:]
+    changed = True
+    while changed and lo.shape[0] > 1:
+        changed = False
+        for d in range(nd):
+            others = []
+            for k in range(nd):
+                if k != d:
+                    others += [lo[:, k], hi[:, k]]
+            order = lexsort_rows(others + [lo[:, d]])
+            group = _group_ids([c[order] for c in others], lo.shape[0])
+            starts, mlo, mhi = coalesce_1d(group, lo[order, d], hi[order, d])
+            if starts.size != lo.shape[0]:
+                sel = order[starts]
+                lo, hi = lo[sel].copy(), hi[sel].copy()
+                lo[:, d], hi[:, d] = mlo, mhi
+                changed = True
+    return QueryBox(q.shape, lo, hi)
+
+
+# --------------------------------------------------------------------------- #
+# Multi-hop planner
+# --------------------------------------------------------------------------- #
+def query_path(
+    q: QueryBox,
+    hops: list[tuple[CompressedTable, bool]],
+    merge: bool = True,
+) -> QueryBox:
+    """Left-to-right plan over ``(table, inverse)`` hops (paper §V.B.3).
+
+    ``inverse=False`` means the query side matches the table's keys
+    (the natural direction for that materialization); ``inverse=True``
+    uses ``theta_join_inverse``.
+    """
+    # Q' is encoded in the same compressed format as the tables (§V.B):
+    # merging the query cells into boxes up front is what keeps the first
+    # range join proportional to |boxes|, not |cells|.
+    cur = merge_boxes(q) if merge else q
+    for table, inverse in hops:
+        cur = (
+            theta_join_inverse(cur, table, merge=merge)
+            if inverse
+            else theta_join(cur, table, merge=merge)
+        )
+    return cur

@@ -1,0 +1,238 @@
+"""Compressed lineage table produced by ProvRC (paper §IV).
+
+Layout
+------
+A table stores ``N`` compressed rows over ``l`` *key* attributes and ``m``
+*value* attributes.  For the canonical **backward** materialization the keys
+are the output-array axes and the values the input-array axes; the
+**forward** materialization swaps the roles (paper §IV.C — "a version where
+output attributes can have relative indices, but input attributes are
+absolute").  The query engine only ever sees (key, value) so one θ-join
+implementation serves both directions.
+
+Per row:
+
+* ``key_lo/key_hi``  — absolute closed intervals, one per key attribute.
+* ``val_lo/val_hi``  — closed intervals, one per value attribute.
+* ``val_ref``        — ``-1`` ⇒ the value interval is absolute;
+  ``j >= 0`` ⇒ it is a *delta* relative to key attribute ``j``
+  (stored value = ``val − key_j``, so de-relativization is pure addition —
+  see DESIGN.md for why we flip the paper's ``b−a`` sign convention).
+* ``key_sym/val_sym`` — ``-1`` or the axis id whose *full extent* this
+  interval spans; used by index reshaping for ``gen_sig`` reuse (paper §VI.B).
+
+Row semantics (the all-to-all insight of §V.B): a row denotes the set
+
+    { (k, v) :  k ∈ ∏_j [key_lo_j, key_hi_j],
+                v_i ∈ [val_lo_i, val_hi_i]                  if ref_i == -1
+                v_i − k_{ref_i} ∈ [val_lo_i, val_hi_i]      otherwise }
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import zlib
+from dataclasses import dataclass, field, replace
+
+import numpy as np
+
+from .relation import LineageRelation
+
+__all__ = ["CompressedTable"]
+
+_MAGIC = b"PRVC1\n"
+
+
+def _pack_array(a: np.ndarray) -> np.ndarray:
+    """Downcast to the narrowest signed integer dtype that holds the data."""
+    if a.size == 0:
+        return a.astype(np.int8)
+    lo, hi = int(a.min()), int(a.max())
+    for dt in (np.int8, np.int16, np.int32):
+        info = np.iinfo(dt)
+        if info.min <= lo and hi <= info.max:
+            return a.astype(dt)
+    return a.astype(np.int64)
+
+
+@dataclass
+class CompressedTable:
+    key_shape: tuple[int, ...]
+    val_shape: tuple[int, ...]
+    key_lo: np.ndarray = field(repr=False)
+    key_hi: np.ndarray = field(repr=False)
+    val_lo: np.ndarray = field(repr=False)
+    val_hi: np.ndarray = field(repr=False)
+    val_ref: np.ndarray = field(repr=False)
+    direction: str = "backward"  # keys are op outputs (backward) or inputs
+    key_sym: np.ndarray | None = field(default=None, repr=False)
+    val_sym: np.ndarray | None = field(default=None, repr=False)
+
+    def __post_init__(self) -> None:
+        l, m = len(self.key_shape), len(self.val_shape)
+        self.key_lo = np.asarray(self.key_lo, np.int64).reshape(-1, l)
+        self.key_hi = np.asarray(self.key_hi, np.int64).reshape(-1, l)
+        self.val_lo = np.asarray(self.val_lo, np.int64).reshape(-1, m)
+        self.val_hi = np.asarray(self.val_hi, np.int64).reshape(-1, m)
+        self.val_ref = np.asarray(self.val_ref, np.int8).reshape(-1, m)
+        if self.key_sym is None:
+            self.key_sym = np.full((self.n_rows, l), -1, np.int8)
+        if self.val_sym is None:
+            self.val_sym = np.full((self.n_rows, m), -1, np.int8)
+        if self.direction not in ("backward", "forward"):
+            raise ValueError(f"bad direction {self.direction!r}")
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_rows(self) -> int:
+        return int(self.key_lo.shape[0])
+
+    @property
+    def n_key(self) -> int:
+        return len(self.key_shape)
+
+    @property
+    def n_val(self) -> int:
+        return len(self.val_shape)
+
+    @property
+    def is_symbolic(self) -> bool:
+        assert self.key_sym is not None and self.val_sym is not None
+        return bool((self.key_sym >= 0).any() or (self.val_sym >= 0).any())
+
+    def select(self, rows: np.ndarray) -> "CompressedTable":
+        assert self.key_sym is not None and self.val_sym is not None
+        return replace(
+            self,
+            key_lo=self.key_lo[rows],
+            key_hi=self.key_hi[rows],
+            val_lo=self.val_lo[rows],
+            val_hi=self.val_hi[rows],
+            val_ref=self.val_ref[rows],
+            key_sym=self.key_sym[rows],
+            val_sym=self.val_sym[rows],
+        )
+
+    # ---------------------------- size ------------------------------- #
+    def nbytes(self) -> int:
+        """In-memory packed size (what we report as the ProvRC storage cost)."""
+        return len(self.serialize(compress=False))
+
+    def nbytes_gzip(self) -> int:
+        """ProvRC-GZip size (paper: zlib over the serialized table)."""
+        return len(self.serialize(compress=True))
+
+    # ------------------------- serialization ------------------------- #
+    def serialize(self, compress: bool = False) -> bytes:
+        header = {
+            "key_shape": list(self.key_shape),
+            "val_shape": list(self.val_shape),
+            "direction": self.direction,
+            "n_rows": self.n_rows,
+        }
+        buf = io.BytesIO()
+        arrays = [
+            _pack_array(self.key_lo),
+            _pack_array(self.key_hi),
+            _pack_array(self.val_lo),
+            _pack_array(self.val_hi),
+            self.val_ref,
+            self.key_sym,
+            self.val_sym,
+        ]
+        header["dtypes"] = [a.dtype.str for a in arrays]
+        hdr = json.dumps(header).encode()
+        buf.write(_MAGIC)
+        buf.write(len(hdr).to_bytes(4, "little"))
+        buf.write(hdr)
+        for a in arrays:
+            buf.write(np.ascontiguousarray(a).tobytes())
+        payload = buf.getvalue()
+        if compress:
+            payload = _MAGIC + b"Z" + zlib.compress(payload, level=6)
+        return payload
+
+    @staticmethod
+    def deserialize(data: bytes) -> "CompressedTable":
+        if data[: len(_MAGIC) + 1] == _MAGIC + b"Z":
+            data = zlib.decompress(data[len(_MAGIC) + 1 :])
+        if data[: len(_MAGIC)] != _MAGIC:
+            raise ValueError("not a ProvRC table blob")
+        off = len(_MAGIC)
+        hlen = int.from_bytes(data[off : off + 4], "little")
+        off += 4
+        header = json.loads(data[off : off + hlen])
+        off += hlen
+        key_shape = tuple(header["key_shape"])
+        val_shape = tuple(header["val_shape"])
+        n, l, m = header["n_rows"], len(key_shape), len(val_shape)
+        shapes = [(n, l), (n, l), (n, m), (n, m), (n, m), (n, l), (n, m)]
+        arrays = []
+        for dt_str, shp in zip(header["dtypes"], shapes):
+            dt = np.dtype(dt_str)
+            cnt = shp[0] * shp[1]
+            a = np.frombuffer(data, dtype=dt, count=cnt, offset=off).reshape(shp)
+            off += cnt * dt.itemsize
+            arrays.append(a.astype(np.int64) if a.dtype != np.int8 else a.copy())
+        kl, kh, vl, vh, ref, ks, vs = arrays
+        return CompressedTable(
+            key_shape,
+            val_shape,
+            kl.astype(np.int64),
+            kh.astype(np.int64),
+            vl.astype(np.int64),
+            vh.astype(np.int64),
+            ref,
+            header["direction"],
+            ks.astype(np.int8),
+            vs.astype(np.int8),
+        )
+
+    # -------------------------- decompression ------------------------ #
+    def decompress(self) -> LineageRelation:
+        """Expand back to the uncompressed relation (losslessness check).
+
+        Only intended for testing / small tables — production queries never
+        call this (that is the whole point of in-situ processing).
+        """
+        if self.is_symbolic:
+            raise ValueError("instantiate symbolic table before decompressing")
+        out_rows: list[np.ndarray] = []
+        in_rows: list[np.ndarray] = []
+        l, m = self.n_key, self.n_val
+        for r in range(self.n_rows):
+            key_ranges = [
+                np.arange(self.key_lo[r, j], self.key_hi[r, j] + 1) for j in range(l)
+            ]
+            key_grid = np.stack(
+                [g.ravel() for g in np.meshgrid(*key_ranges, indexing="ij")], axis=1
+            ) if l else np.zeros((1, 0), np.int64)
+            # Per key tuple, values are a product of (possibly shifted) ranges.
+            val_ranges_static = []
+            for i in range(m):
+                val_ranges_static.append(
+                    np.arange(self.val_lo[r, i], self.val_hi[r, i] + 1)
+                )
+            for k_row in key_grid:
+                vranges = []
+                for i in range(m):
+                    ref = int(self.val_ref[r, i])
+                    base = 0 if ref < 0 else int(k_row[ref])
+                    vranges.append(val_ranges_static[i] + base)
+                vgrid = np.stack(
+                    [g.ravel() for g in np.meshgrid(*vranges, indexing="ij")], axis=1
+                ) if m else np.zeros((1, 0), np.int64)
+                out_rows.append(np.broadcast_to(k_row, (vgrid.shape[0], l)).copy())
+                in_rows.append(vgrid)
+        if not out_rows:
+            out = np.zeros((0, l), np.int64)
+            inn = np.zeros((0, m), np.int64)
+        else:
+            out = np.concatenate(out_rows, axis=0)
+            inn = np.concatenate(in_rows, axis=0)
+        if self.direction == "backward":
+            rel = LineageRelation(self.key_shape, self.val_shape, out, inn)
+        else:  # forward: keys are the *input* axes
+            rel = LineageRelation(self.val_shape, self.key_shape, inn, out)
+        return rel.canonical()

@@ -1,0 +1,14 @@
+from .collectives import (  # noqa: F401
+    flash_decode_combine,
+    local_partial_attention,
+    pipeline_stage_step,
+)
+from .elastic import StepWatchdog, reshard_tree  # noqa: F401
+from .sharding import (  # noqa: F401
+    AxisRules,
+    batch_sharding,
+    cache_sharding,
+    default_rules,
+    logical_to_spec,
+    param_sharding,
+)

@@ -1,0 +1,82 @@
+"""Elastic scaling + straggler mitigation hooks.
+
+Elasticity: checkpoints are saved unsharded (gathered), so scaling in/out is
+"restore onto the new mesh" — :func:`reshard_tree` places a host tree onto
+any mesh via the same logical rules.  The data pipeline is a pure function
+of the step counter, so a re-sharded restart replays the identical global
+batch stream (``tests/test_elastic.py`` proves bitwise-identical batches
+across data-parallel widths).
+
+Straggler mitigation: a real multi-host deployment cannot observe peers'
+progress from inside jit — :class:`StepWatchdog` wraps the host-side loop:
+it tracks a robust (median + MAD) step-time envelope and fires a callback
+when the current step exceeds the deadline, which the launcher maps to
+"checkpoint-and-evict" (see ``launch/train.py --straggler-policy``).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+import jax
+
+from .sharding import AxisRules, param_sharding
+
+__all__ = ["reshard_tree", "StepWatchdog"]
+
+
+def reshard_tree(host_tree, spec_tree, mesh, rules: AxisRules | None = None):
+    """Place a host (numpy) tree onto ``mesh`` under logical specs."""
+    sh = param_sharding(mesh, spec_tree, rules)
+    return jax.tree.map(jax.device_put, host_tree, sh)
+
+
+@dataclass
+class StepWatchdog:
+    """Deadline-based straggler detector for the host training loop."""
+
+    factor: float = 3.0  # deadline = median + factor * MAD (+ floor)
+    floor_s: float = 1.0
+    history: list = field(default_factory=list)
+    max_history: int = 64
+    fired: int = 0
+
+    def observe(self, dt: float) -> None:
+        self.history.append(dt)
+        if len(self.history) > self.max_history:
+            self.history.pop(0)
+
+    def deadline(self) -> float:
+        if len(self.history) < 3:
+            return float("inf")
+        h = sorted(self.history)
+        med = h[len(h) // 2]
+        mad = sorted(abs(x - med) for x in h)[len(h) // 2]
+        return med + self.factor * max(mad, 1e-3) + self.floor_s
+
+    def guard(self, step_fn, *args, on_straggler=None, **kw):
+        """Run one step; if it exceeds the deadline, invoke the callback
+        (which in production checkpoints + re-meshes without the slow host)."""
+        deadline = self.deadline()
+        done = threading.Event()
+        result: list = []
+
+        def runner():
+            result.append(step_fn(*args, **kw))
+            done.set()
+
+        t0 = time.monotonic()
+        th = threading.Thread(target=runner, daemon=True)
+        th.start()
+        fired_here = False
+        while not done.wait(timeout=0.05):
+            if time.monotonic() - t0 > deadline and not fired_here:
+                fired_here = True
+                self.fired += 1
+                if on_straggler is not None:
+                    on_straggler(time.monotonic() - t0, deadline)
+        th.join()
+        self.observe(time.monotonic() - t0)
+        return result[0]

@@ -1,0 +1,252 @@
+"""Logical-axis → mesh-axis sharding rules (DP/FSDP/TP/EP/SP).
+
+Parameters carry logical specs like ``("fsdp", "tp")`` (see
+``repro.models.layers``); this module resolves them against a mesh:
+
+* ``fsdp`` → the ``data`` axis (ZeRO-3 parameter sharding within a pod)
+* ``tp``   → the ``model`` axis (tensor parallelism)
+* batch    → ``("pod", "data")`` when the mesh has a pod axis (pure DP
+  across pods — the slow inter-pod links carry only gradient reductions)
+
+Rules are data, not code, so §Perf iterations can swap them per-arch
+(e.g. moving ``fsdp`` to ``("pod", "data")`` for the 314B config).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+__all__ = [
+    "AxisRules",
+    "DEFAULT_RULES",
+    "param_sharding",
+    "batch_sharding",
+    "cache_sharding",
+    "logical_to_spec",
+    "set_activation_mesh",
+    "hint",
+]
+
+
+class AxisRules(dict):
+    """logical axis name -> mesh axis (str | tuple | None)."""
+
+
+def default_rules(mesh: Mesh) -> AxisRules:
+    has_pod = "pod" in mesh.axis_names
+    return AxisRules(
+        fsdp="data",
+        tp="model",
+        dp=("pod", "data") if has_pod else ("data",),
+        sp="data",  # sequence sharding for long-context caches
+    )
+
+
+DEFAULT_RULES = default_rules
+
+
+def logical_to_spec(logical: tuple, rules: AxisRules) -> PS:
+    axes = []
+    for ax in logical:
+        axes.append(rules.get(ax) if ax is not None else None)
+    return PS(*axes)
+
+
+# --------------------------------------------------------------------------- #
+# Activation sharding hints
+# --------------------------------------------------------------------------- #
+# GSPMD's propagation through head-reshapes and scan carries loses the batch/
+# head sharding badly enough to blow temp memory by orders of magnitude (see
+# EXPERIMENTS.md §Dry-run).  Model code therefore calls ``hint(x, kind)`` at
+# the handful of layout decision points; the launcher activates a mesh here.
+# Outside an activated mesh the hints are no-ops, so unit tests and the CPU
+# trainer run unchanged.
+
+_ACT: dict | None = None
+
+
+def set_activation_mesh(
+    mesh: Mesh | None,
+    rules: AxisRules | None = None,
+    policy: dict | None = None,
+):
+    """Enable (or with ``None`` disable) activation sharding hints.
+
+    ``policy`` tunes the strategy per tensor kind (the §Perf hillclimbing
+    knobs):
+      attn_heads: "auto" (TP when divisible, else sequence-parallel) |
+                  "tp_uneven" (TP with GSPMD padding for 14/25/40-head
+                  configs) | "seq" | "batch_only"
+    """
+    global _ACT
+    if mesh is None:
+        _ACT = None
+        return
+    rules = rules or default_rules(mesh)
+    _ACT = {
+        "mesh": mesh,
+        "dp": rules["dp"],
+        "model_size": mesh.shape["model"],
+        "policy": dict(policy or {}),
+    }
+
+
+def hint(x, kind: str):
+    """Apply an activation sharding constraint (no-op without a mesh).
+
+    kinds:
+      hidden   [B, S, D]        -> (dp, None, None)
+      heads    [B, S, H, hd]    -> heads on model when divisible, else
+                                   sequence-parallel (dp, model, None, None)
+      ffn      [B, S, F]        -> (dp, None, model)
+      logits   [B, S, V]        -> (dp, None, model)
+      experts  [E, B, C, D]     -> (None, dp, None, None)
+      bhst     [B, H, S, T]     -> scores: H on model when divisible
+    """
+    if _ACT is None:
+        return x
+    dp, ms = _ACT["dp"], _ACT["model_size"]
+    mesh = _ACT["mesh"]
+    policy = _ACT.get("policy", {})
+    heads_mode = policy.get("attn_heads", "auto")
+    b_ok = x.shape[0] > 1
+    dpx = dp if b_ok else None
+    if kind == "hidden":
+        spec = PS(dpx, *([None] * (x.ndim - 1)))
+    elif kind == "heads":
+        tp_ok = x.shape[2] % ms == 0 or (
+            heads_mode == "tp_uneven" and x.shape[2] >= ms
+        )
+        seq_ok = x.shape[1] % ms == 0 and x.shape[1] > 1
+        if heads_mode == "batch_only":
+            spec = PS(dpx, None, None, None)
+        elif heads_mode == "seq" and seq_ok:
+            spec = PS(dpx, "model", None, None)
+        elif tp_ok:
+            spec = PS(dpx, None, "model", None)
+        elif seq_ok:
+            spec = PS(dpx, "model", None, None)
+        else:
+            spec = PS(dpx, None, None, None)
+    elif kind == "bhst":
+        tp_ok = x.shape[1] % ms == 0 or (
+            heads_mode == "tp_uneven" and x.shape[1] >= ms
+        )
+        seq_ok = x.shape[2] % ms == 0 and x.shape[2] > 1
+        if heads_mode == "batch_only":
+            spec = PS(dpx, None, None, None)
+        elif heads_mode == "seq" and seq_ok:
+            spec = PS(dpx, None, "model", None)
+        elif tp_ok:
+            spec = PS(dpx, "model", None, None)
+        elif seq_ok:
+            spec = PS(dpx, None, "model", None)
+        else:
+            spec = PS(dpx, None, None, None)
+    elif kind in ("ffn", "logits"):
+        spec = PS(dpx, None, "model" if x.shape[-1] % ms == 0 else None)
+    elif kind == "experts":
+        spec = PS(None, dp if x.shape[1] > 1 else None, None, None)
+    else:
+        raise ValueError(kind)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_sharding(
+    mesh: Mesh, spec_tree, rules: AxisRules | None = None, shapes_tree=None
+):
+    """Tree of NamedSharding from a tree of logical spec tuples.
+
+    With ``shapes_tree`` (parallel tree of arrays/ShapeDtypeStructs), mesh
+    axes are dropped from dimensions they do not divide — e.g. a 50280-row
+    vocab table cannot split 16 ways, so its ``tp`` axis is demoted to
+    replication rather than failing at lower time (exact configs from the
+    assignment keep their odd vocab sizes).
+    """
+    rules = rules or default_rules(mesh)
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x
+    )
+
+    def axes_size(ax) -> int:
+        if ax is None:
+            return 1
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+
+    def resolve(t, shape=None):
+        spec = list(logical_to_spec(t, rules))
+        if shape is not None:
+            dims = shape.shape if hasattr(shape, "shape") else shape
+            for i, ax in enumerate(spec):
+                if ax is not None and dims[i] % axes_size(ax) != 0:
+                    spec[i] = None
+        return NamedSharding(mesh, PS(*spec))
+
+    if shapes_tree is None:
+        return jax.tree.map(resolve, spec_tree, is_leaf=is_spec)
+    return jax.tree.map(resolve, spec_tree, shapes_tree, is_leaf=is_spec)
+
+
+def batch_sharding(mesh: Mesh, batch_like, rules: AxisRules | None = None):
+    """Shard every batch leaf on its leading (batch) dim over the DP axes."""
+    rules = rules or default_rules(mesh)
+    dp = rules["dp"]
+
+    def spec_for(x):
+        nd = x.ndim if hasattr(x, "ndim") else len(x.shape)
+        return NamedSharding(mesh, PS(dp, *([None] * (nd - 1))))
+
+    return jax.tree.map(spec_for, batch_like)
+
+
+def cache_sharding(
+    mesh: Mesh,
+    cache_like,
+    n_kv_heads: int,
+    batch: int,
+    rules: AxisRules | None = None,
+):
+    """Decode-cache shardings.
+
+    KV tensors are [L, B, T, Kv, hd]:
+      * B over DP axes when it divides;
+      * Kv over ``model`` when it divides, else T over ``model``
+        (sequence-parallel cache — the long_500k path);
+      * when B == 1 (long-context), T additionally over the DP axes.
+    SSM states are [L, B, H, N, P]: B over DP, H over model when divisible.
+    """
+    rules = rules or default_rules(mesh)
+    model_size = mesh.shape["model"]
+    dp_axes = rules["dp"]
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+
+    def spec_for_path(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = x.ndim if hasattr(x, "ndim") else len(x.shape)
+        if name in ("k", "v"):
+            b_ax = dp_axes if batch % dp_size == 0 and batch > 1 else None
+            if n_kv_heads % model_size == 0:
+                spec = PS(None, b_ax, None, "model", None)
+            elif batch == 1:
+                spec = PS(None, None, (*dp_axes, "model"), None, None)
+            else:
+                spec = PS(None, b_ax, "model", None, None)
+            return NamedSharding(mesh, spec)
+        if name == "ssm" and nd == 5:
+            b_ax = dp_axes if batch % dp_size == 0 and batch > 1 else None
+            h_ax = "model" if x.shape[2] % model_size == 0 else None
+            return NamedSharding(mesh, PS(None, b_ax, h_ax, None, None))
+        if name == "conv" and nd == 4:
+            b_ax = dp_axes if batch % dp_size == 0 and batch > 1 else None
+            c_ax = "model" if x.shape[3] % model_size == 0 else None
+            return NamedSharding(mesh, PS(None, b_ax, None, c_ax))
+        return NamedSharding(mesh, PS(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(spec_for_path, cache_like)

@@ -1,0 +1,117 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These handle packing/padding from the natural numpy layouts used by
+``repro.core`` into the 128-lane int32 tiles the kernels expect, and select
+``interpret=True`` automatically when no TPU is attached (this container) so
+the kernel bodies are validated on CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .range_join import LANES, range_join_mask
+from .run_boundary import run_boundaries_packed
+
+__all__ = ["run_boundaries", "range_join_pairs", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.devices()[0].platform != "tpu"
+
+
+def _pad_rows(a: np.ndarray, mult: int, fill: int) -> np.ndarray:
+    n = a.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return a
+    return np.concatenate(
+        [a, np.full((pad,) + a.shape[1:], fill, a.dtype)], axis=0
+    )
+
+
+def run_boundaries(
+    group_cols: list[np.ndarray],
+    lo: np.ndarray,
+    hi: np.ndarray,
+    block_rows: int = 1024,
+    interpret: bool | None = None,
+) -> np.ndarray:
+    """Boundary flags for sorted rows; drop-in for the numpy hot pass.
+
+    ``group_cols`` are the equality columns, ``lo``/``hi`` the merge-column
+    interval.  Values must fit int32 (array indices always do).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n = lo.shape[0]
+    n_keys = len(group_cols)
+    assert n_keys + 2 <= LANES, "too many group columns for one tile"
+    packed = np.zeros((n, LANES), np.int32)
+    for c, col in enumerate(group_cols):
+        packed[:, c] = col.astype(np.int32)
+    packed[:, n_keys] = lo.astype(np.int32)
+    packed[:, n_keys + 1] = hi.astype(np.int32)
+    # pad rows with a copy of the last row → padded flags are 0 (no runs)
+    padded = _pad_rows(packed, block_rows, 0)
+    if padded.shape[0] != n and n > 0:
+        padded[n:] = padded[n - 1]
+    flags = run_boundaries_packed(
+        jnp.asarray(padded),
+        n_keys=n_keys,
+        block_rows=block_rows,
+        interpret=interpret,
+    )
+    return np.asarray(flags[:n]).astype(bool)
+
+
+def range_join_pairs(
+    q_lo: np.ndarray,
+    q_hi: np.ndarray,
+    r_lo: np.ndarray,
+    r_hi: np.ndarray,
+    block_q: int = 256,
+    block_r: int = 256,
+    interpret: bool | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """All (query row, table row) index pairs whose boxes overlap.
+
+    Kernel-accelerated replacement for the broadcasting pass inside
+    ``repro.core.query.theta_join``.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    nq, l = q_lo.shape
+    nr = r_lo.shape[0]
+    if nq == 0 or nr == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    assert 2 * l <= LANES
+
+    def pack(lo, hi):
+        n = lo.shape[0]
+        p = np.zeros((n, LANES), np.int32)
+        p[:, :l] = lo.astype(np.int32)
+        p[:, l : 2 * l] = hi.astype(np.int32)
+        return p
+
+    qp = _pad_rows(pack(q_lo, q_hi), block_q, 0)
+    rp = _pad_rows(pack(r_lo, r_hi), block_r, 0)
+    # make padded rows empty boxes: lo=1, hi=0 (overlap nothing)
+    if qp.shape[0] > nq:
+        qp[nq:, :l] = 1
+        qp[nq:, l : 2 * l] = 0
+    if rp.shape[0] > nr:
+        rp[nr:, :l] = 1
+        rp[nr:, l : 2 * l] = 0
+    mask = range_join_mask(
+        jnp.asarray(qp),
+        jnp.asarray(rp),
+        n_attrs=l,
+        block_q=block_q,
+        block_r=block_r,
+        interpret=interpret,
+    )
+    qi, ri = np.nonzero(np.asarray(mask[:nq, :nr]))
+    return qi.astype(np.int64), ri.astype(np.int64)

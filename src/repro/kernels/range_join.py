@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: blocked multi-attribute interval-overlap join.
+
+The range join of the paper's θ-join (§V.B.1): for query boxes ``Q`` and
+compressed-table key boxes ``R``, emit the boolean matrix
+``mask[q, r] = ∧_j  [q.lo_j, q.hi_j] ∩ [r.lo_j, r.hi_j] ≠ ∅``.
+
+TPU adaptation: this is an all-pairs predicate with the same data-movement
+shape as an attention-score block — we tile ``Q`` rows × ``R`` rows into
+VMEM blocks and evaluate the conjunction over attributes entirely in
+registers, so each (q, r) tile pair is materialized once in VMEM and never
+round-trips through HBM.  The attribute axis (≤ a few) is carried in the
+lane dimension of each operand tile.
+
+Inputs are packed ``[N, 2*l]`` int32 (lo columns then hi columns), padded to
+128 lanes; the mask output block is ``(block_q, block_r)`` int32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _kernel(q_ref, r_ref, out_ref, *, n_attrs: int):
+    q = q_ref[...]  # [TQ, LANES]
+    r = r_ref[...]  # [TR, LANES]
+    ok = jnp.ones((q.shape[0], r.shape[0]), dtype=jnp.bool_)
+    for j in range(n_attrs):  # static unroll over attributes
+        q_lo = q[:, j][:, None]
+        q_hi = q[:, n_attrs + j][:, None]
+        r_lo = r[:, j][None, :]
+        r_hi = r[:, n_attrs + j][None, :]
+        ok &= (q_lo <= r_hi) & (r_lo <= q_hi)
+    out_ref[...] = ok.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_attrs", "block_q", "block_r", "interpret")
+)
+def range_join_mask(
+    q_packed: jax.Array,
+    r_packed: jax.Array,
+    *,
+    n_attrs: int,
+    block_q: int = 256,
+    block_r: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Overlap mask for padded ``[NQ, 128]`` × ``[NR, 128]`` int32 boxes.
+
+    Row counts must be multiples of the block sizes; pad with empty boxes
+    (``lo = 1, hi = 0``) which overlap nothing.
+    """
+    nq, lanes = q_packed.shape
+    nr, lanes_r = r_packed.shape
+    assert lanes == LANES and lanes_r == LANES
+    assert nq % block_q == 0 and nr % block_r == 0
+    grid = (nq // block_q, nr // block_r)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_attrs=n_attrs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, LANES), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_r, LANES), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_r), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nq, nr), jnp.int32),
+        interpret=interpret,
+    )(q_packed, r_packed)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (the ``ref.py`` contract).
+
+Every kernel in this package must match these references exactly
+(integer outputs — ``assert_allclose`` with zero tolerance) over shape and
+dtype sweeps; see ``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LANES = 128
+
+
+def run_boundaries_ref(packed: jnp.ndarray, n_keys: int) -> jnp.ndarray:
+    """Reference for ``run_boundary.run_boundaries_packed``."""
+    keys = packed[:, :n_keys]
+    lo = packed[:, n_keys]
+    hi = packed[:, n_keys + 1]
+    key_change = jnp.any(keys[1:] != keys[:-1], axis=1)
+    not_adjacent = lo[1:] > hi[:-1] + 1
+    flags = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), key_change | not_adjacent]
+    )
+    return flags.astype(jnp.int32)
+
+
+def range_join_mask_ref(
+    q_packed: jnp.ndarray, r_packed: jnp.ndarray, n_attrs: int
+) -> jnp.ndarray:
+    """Reference for ``range_join.range_join_mask``."""
+    q_lo = q_packed[:, :n_attrs]
+    q_hi = q_packed[:, n_attrs : 2 * n_attrs]
+    r_lo = r_packed[:, :n_attrs]
+    r_hi = r_packed[:, n_attrs : 2 * n_attrs]
+    ok = jnp.all(
+        (q_lo[:, None, :] <= r_hi[None, :, :])
+        & (r_lo[None, :, :] <= q_hi[:, None, :]),
+        axis=-1,
+    )
+    return ok.astype(jnp.int32)

@@ -1,0 +1,3 @@
+# NOTE: do not import .dryrun here — it sets XLA_FLAGS at import time and
+# must only be imported as the entry point of a fresh process.
+from .mesh import local_mesh, make_mesh, make_production_mesh  # noqa: F401

@@ -1,0 +1,461 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax (device count is now locked) --------- #
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as PS  # noqa: E402
+
+from ..configs import ARCHS, SHAPES, get_arch, skip_reason  # noqa: E402
+from ..distributed.sharding import (  # noqa: E402
+    batch_sharding,
+    cache_sharding,
+    default_rules,
+    param_sharding,
+    set_activation_mesh,
+)
+from ..optim.adamw import AdamWConfig  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+from .steps import (  # noqa: E402
+    abstract_caches,
+    abstract_model,
+    abstract_opt_state,
+    attn_plan,
+    input_specs,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every (architecture × input shape) cell this lowers + compiles the full
+step — ``train_step`` (fwd + bwd + AdamW update) for ``train_*`` shapes,
+``prefill``/``serve_step`` for inference shapes — against the production
+mesh with 512 placeholder CPU devices, then extracts:
+
+* ``compiled.memory_analysis()``  → per-device residency (proves it fits),
+* ``compiled.cost_analysis()``    → HLO FLOPs / bytes for §Roofline,
+* the collective schedule (parsed from post-SPMD HLO) → collective bytes.
+
+Results land in ``experiments/dryrun/<mesh>/<arch>__<shape>.json`` and feed
+``benchmarks/roofline.py``.
+"""
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-kind {count, bytes} from post-partitioning HLO.
+
+    Bytes = result-buffer sizes of each collective op (per participating
+    device).  ``-done`` ops are skipped so async pairs count once.
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    shape_re = re.compile(r"(\w+)\[([0-9,]*)\]")
+    for line in hlo_text.splitlines():
+        hit = None
+        for kind in _COLLECTIVES:
+            if f" {kind}(" in line or f" {kind}-start(" in line:
+                hit = kind
+                break
+        if hit is None or "-done(" in line:
+            continue
+        lhs = line.split("=", 1)
+        if len(lhs) != 2:
+            continue
+        # result type(s) sit between '=' and the op name
+        rhs = lhs[1]
+        op_pos = rhs.find(hit)
+        size = sum(
+            _shape_bytes(m.group(1), m.group(2))
+            for m in shape_re.finditer(rhs[:op_pos])
+            if m.group(1) in _DTYPE_BYTES
+        )
+        out[hit]["count"] += 1
+        out[hit]["bytes"] += size
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items() if isinstance(v, dict))
+    return out
+
+
+def _sharded_bytes(shapes_tree, shardings_tree, n_devices: int) -> int:
+    """Per-device bytes of a spec tree under its shardings."""
+    total = 0
+    flat_s, _ = jax.tree.flatten(shapes_tree)
+    flat_sh, _ = jax.tree.flatten(shardings_tree)
+    for s, sh in zip(flat_s, flat_sh):
+        nbytes = int(np.prod(s.shape)) * s.dtype.itemsize if s.shape else s.dtype.itemsize
+        if isinstance(sh, NamedSharding):
+            spec = sh.spec
+            denom = 1
+            for i, ax in enumerate(spec):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                for a in axes:
+                    denom *= sh.mesh.shape[a]
+            nbytes //= max(denom, 1)
+        total += nbytes
+    return total
+
+
+# --------------------------------------------------------------------------- #
+def _lower_variant(cfg, shape, mesh, rules, plan):
+    """Lower+compile one variant; returns (cost dict, collectives dict)."""
+    param_shapes, param_specs = abstract_model(cfg, jnp.bfloat16)
+    p_shard = param_sharding(mesh, param_specs, rules, param_shapes)
+    batch = input_specs(cfg, shape)
+    if shape.kind == "train":
+        opt_shapes = abstract_opt_state(param_shapes)
+        o_shard = {"m": p_shard, "v": p_shard, "step": NamedSharding(mesh, PS())}
+        b_shard = batch_sharding(mesh, batch, rules)
+        step = make_train_step(cfg, AdamWConfig(), plan)
+        jitted = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard))
+        args = (param_shapes, opt_shapes, batch)
+    elif shape.kind == "prefill":
+        b_shard = batch_sharding(mesh, batch, rules)
+        step = make_prefill_step(cfg, shape, plan)
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+        args = (param_shapes, batch)
+    else:
+        caches = abstract_caches(cfg, shape.global_batch, shape.seq_len, jnp.bfloat16)
+        c_shard = cache_sharding(mesh, caches, cfg.n_kv_heads, shape.global_batch, rules)
+        tok_shard = (
+            batch_sharding(mesh, batch, rules)["token"]
+            if shape.global_batch > 1
+            else NamedSharding(mesh, PS(None, None))
+        )
+        step = make_decode_step(cfg, layer_unroll=plan.get("layer_unroll", 1))
+        jitted = jax.jit(
+            step, in_shardings=(p_shard, tok_shard, c_shard, NamedSharding(mesh, PS()))
+        )
+        args = (param_shapes, batch["token"], caches, jax.ShapeDtypeStruct((), jnp.int32))
+    with mesh:
+        compiled = jitted.lower(*args).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    cost = {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))}
+    coll = parse_collectives(compiled.as_text())
+    return cost, coll
+
+
+def account_cell(cfg, shape, mesh, rules, plan):
+    """Loop-accurate HLO cost accounting.
+
+    XLA cost analysis counts a while-loop body once regardless of trip
+    count, so the scan-over-layers production program under-reports.  We
+    lower fully-unrolled 1-layer and 2-layer variants and extrapolate:
+    ``total = c1 + (L - 1) * (c2 - c1)`` — the difference isolates exactly
+    one layer (embedding/head/optimizer tails cancel), remat recompute
+    included.  Inner chunk scans are unrolled too.
+    """
+    import dataclasses
+
+    # cap the unrolled-accounting microbatch count: total FLOPs/bytes are
+    # n_micro-invariant (same tokens), only per-microbatch weight gathers
+    # scale — corrected analytically below.
+    nm_prod = int(plan.get("n_micro", 1))
+    nm_acc = min(nm_prod, 8)
+    plan_acc = {**plan, "unroll": True, "layer_unroll": True,
+                "micro_unroll": True, "n_micro": nm_acc}
+    cfg1 = dataclasses.replace(cfg, n_layers=1)
+    cfg2 = dataclasses.replace(cfg, n_layers=2)
+    cost1, coll1 = _lower_variant(cfg1, shape, mesh, rules, plan_acc)
+    cost2, coll2 = _lower_variant(cfg2, shape, mesh, rules, plan_acc)
+    gather_scale = nm_prod / nm_acc if nm_prod > nm_acc else 1.0
+    L = cfg.n_layers
+    out_cost = {}
+    for k in ("flops", "bytes accessed", "transcendentals"):
+        if k in cost1 and k in cost2:
+            # clamp: at tiny decode sizes compiler noise can make the
+            # 2-layer module cheaper than 1-layer; a layer never costs < 0
+            out_cost[k] = cost1[k] + (L - 1) * max(0.0, cost2[k] - cost1[k])
+    out_coll = {}
+    for kind in _COLLECTIVES:
+        b1, b2 = coll1[kind]["bytes"], coll2[kind]["bytes"]
+        n1, n2 = coll1[kind]["count"], coll2[kind]["count"]
+        scale = gather_scale if kind == "all-gather" else 1.0
+        out_coll[kind] = {
+            "bytes": int(scale * (b1 + (L - 1) * max(0, b2 - b1))),
+            "count": int(scale * (n1 + (L - 1) * max(0, n2 - n1))),
+        }
+    out_coll["total_bytes"] = sum(v["bytes"] for v in out_coll.values())
+    return out_cost, out_coll
+
+
+def lower_cell(
+    arch_name: str,
+    shape_name: str,
+    multi_pod: bool,
+    overrides: dict | None = None,
+):
+    """Build + lower + compile one cell; returns the result record.
+
+    ``overrides`` are the §Perf hillclimbing knobs: ``remat``
+    (nothing/dots/full), ``attn_heads`` activation policy
+    (auto/tp_uneven/seq/batch_only), ``chunk`` (attention KV chunk size),
+    ``skip_account`` (skip the 1L/2L accounting pass).
+    """
+    import dataclasses
+
+    overrides = overrides or {}
+    cfg = get_arch(arch_name)
+    if overrides.get("remat"):
+        cfg = dataclasses.replace(cfg, remat=overrides["remat"])
+    if overrides.get("moe_dispatch") and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch=overrides["moe_dispatch"])
+        )
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape_name)
+    if reason:
+        return {"arch": arch_name, "shape": shape_name, "status": "skip", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = default_rules(mesh)
+    policy = {k: overrides[k] for k in ("attn_heads",) if overrides.get(k)}
+    set_activation_mesh(mesh, rules, policy)
+    dp_total = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    plan = attn_plan(cfg, shape, dp_total)
+    if overrides.get("n_micro"):
+        plan = {**plan, "n_micro": int(overrides["n_micro"])}
+    if overrides.get("chunk"):
+        plan = {**plan, "chunk": int(overrides["chunk"])}
+    if overrides.get("attn_impl"):
+        plan = {**plan, "mode": overrides["attn_impl"]}
+    record = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "kind": shape.kind,
+        "plan": plan,
+        "overrides": overrides,
+    }
+    t0 = time.time()
+
+    param_shapes, param_specs = abstract_model(cfg, jnp.bfloat16)
+    p_shard = param_sharding(mesh, param_specs, rules, param_shapes)
+    batch = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt_shapes = abstract_opt_state(param_shapes)
+        o_shard = jax.tree.map(
+            lambda _: None, opt_shapes
+        )
+        # optimizer state shards exactly like its parameter (ZeRO)
+        o_shard = {
+            "m": p_shard,
+            "v": p_shard,
+            "step": NamedSharding(mesh, PS()),
+        }
+        b_shard = batch_sharding(mesh, batch, rules)
+        step = make_train_step(cfg, AdamWConfig(), plan)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+        )
+        args = (param_shapes, opt_shapes, batch)
+        state_bytes = _sharded_bytes(
+            (param_shapes, opt_shapes), (p_shard, o_shard), mesh.size
+        )
+    elif shape.kind == "prefill":
+        b_shard = batch_sharding(mesh, batch, rules)
+        step = make_prefill_step(cfg, shape, plan)
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+        args = (param_shapes, batch)
+        state_bytes = _sharded_bytes(param_shapes, p_shard, mesh.size)
+    else:  # decode
+        cache_dtype = (
+            jnp.float8_e4m3fn
+            if overrides.get("cache_dtype") == "fp8"
+            else jnp.bfloat16
+        )
+        caches = abstract_caches(cfg, shape.global_batch, shape.seq_len, cache_dtype)
+        c_shard = cache_sharding(
+            mesh, caches, cfg.n_kv_heads, shape.global_batch, rules
+        )
+        tok_shard = (
+            batch_sharding(mesh, batch, rules)["token"]
+            if shape.global_batch > 1
+            else NamedSharding(mesh, PS(None, None))
+        )
+        step = make_decode_step(cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, tok_shard, c_shard, NamedSharding(mesh, PS())),
+            out_shardings=(None, c_shard),
+            donate_argnums=(2,),
+        )
+        args = (
+            param_shapes,
+            batch["token"],
+            caches,
+            jax.ShapeDtypeStruct((), jnp.int32),
+        )
+        state_bytes = _sharded_bytes(
+            (param_shapes, caches), (p_shard, c_shard), mesh.size
+        )
+
+    with mesh:
+        lowered = jitted.lower(*args)
+        record["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 2)
+
+    # ---- analyses ------------------------------------------------------- #
+    try:
+        mem = compiled.memory_analysis()
+        record["memory_analysis"] = {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        } if mem is not None else None
+    except Exception as e:  # CPU backend may not implement it
+        record["memory_analysis"] = f"unavailable: {e}"
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        record["cost_analysis"] = {
+            k: float(v)
+            for k, v in cost.items()
+            if isinstance(v, (int, float)) and k in (
+                "flops", "bytes accessed", "bytes accessed output",
+                "transcendentals", "optimal_seconds",
+            )
+        }
+    except Exception as e:
+        record["cost_analysis"] = f"unavailable: {e}"
+    hlo = compiled.as_text()
+    record["collectives_scan_program"] = parse_collectives(hlo)
+    record["hlo_bytes"] = len(hlo)
+    record["state_bytes_per_device"] = state_bytes
+
+    # loop-accurate accounting via unrolled 1L/2L extrapolation
+    if overrides.get("skip_account"):
+        record["collectives"] = record["collectives_scan_program"]
+    else:
+        try:
+            acc_cost, acc_coll = account_cell(cfg, shape, mesh, rules, plan)
+            record["cost_accounted"] = acc_cost
+            record["collectives"] = acc_coll
+        except Exception as e:
+            record["cost_accounted"] = f"unavailable: {type(e).__name__}: {e}"
+            record["collectives"] = record["collectives_scan_program"]
+    record["status"] = "ok"
+    return record
+
+
+def run(arch_names, shape_names, multi_pod: bool, out_dir: str,
+        overrides: dict | None = None, tag: str = "") -> list[dict]:
+    mesh_tag = ("pod2x16x16" if multi_pod else "pod16x16") + (
+        f"_{tag}" if tag else ""
+    )
+    os.makedirs(os.path.join(out_dir, mesh_tag), exist_ok=True)
+    records = []
+    for a in arch_names:
+        for s in shape_names:
+            path = os.path.join(out_dir, mesh_tag, f"{a}__{s}.json")
+            try:
+                rec = lower_cell(a, s, multi_pod, overrides)
+            except Exception as e:
+                rec = {
+                    "arch": a,
+                    "shape": s,
+                    "status": "error",
+                    "error": f"{type(e).__name__}: {e}",
+                    "trace": traceback.format_exc()[-2000:],
+                }
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            flops = (rec.get("cost_analysis") or {})
+            flops = flops.get("flops") if isinstance(flops, dict) else None
+            print(
+                f"[{mesh_tag}] {a:18s} {s:12s} -> {rec['status']:5s}"
+                + (f" compile={rec.get('compile_s')}s flops={flops:.3e}"
+                   if rec["status"] == "ok" and flops else "")
+                + (f" ({rec.get('reason','')[:60]})" if rec["status"] == "skip" else "")
+                + (f" ERR {rec.get('error','')[:120]}" if rec["status"] == "error" else ""),
+                flush=True,
+            )
+            records.append(rec)
+    return records
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--remat", default="")
+    ap.add_argument("--attn-heads", default="")
+    ap.add_argument("--attn-impl", default="")
+    ap.add_argument("--moe-dispatch", default="")
+    ap.add_argument("--chunk", default="")
+    ap.add_argument("--n-micro", default="")
+    ap.add_argument("--cache-dtype", default="")
+    ap.add_argument("--skip-account", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for the output subdir")
+    args = ap.parse_args()
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    overrides = {
+        k: v
+        for k, v in (
+            ("remat", args.remat),
+            ("attn_heads", args.attn_heads),
+            ("attn_impl", args.attn_impl),
+            ("moe_dispatch", args.moe_dispatch),
+            ("chunk", args.chunk),
+            ("n_micro", args.n_micro),
+            ("cache_dtype", args.cache_dtype),
+            ("skip_account", args.skip_account),
+        )
+        if v
+    }
+    for mp in meshes:
+        run(archs, shapes, mp, args.out, overrides, args.tag)
+
+
+if __name__ == "__main__":
+    main()

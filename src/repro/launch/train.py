@@ -1,0 +1,154 @@
+"""End-to-end trainer (runs on real devices — CPU here, TPU in production).
+
+Wires together every substrate: config registry, mesh + sharding rules,
+synthetic data pipeline with optional DSLog lineage logging, AdamW,
+checkpoint/restart, straggler watchdog.  ``examples/train_lm.py`` drives a
+~100M-param model for a few hundred steps with this entry point.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+from ..configs import SHAPES, get_arch
+from ..configs.base import ShapeConfig
+from ..core.catalog import DSLog
+from ..data.pipeline import PipelineConfig, TokenPipeline
+from ..distributed.elastic import StepWatchdog
+from ..distributed.sharding import batch_sharding, default_rules, param_sharding
+from ..models.model import init_model
+from ..optim.adamw import AdamWConfig, adamw_init
+from .mesh import local_mesh
+from .steps import attn_plan, make_train_step
+
+__all__ = ["train_loop", "main"]
+
+
+def train_loop(
+    cfg,
+    shape: ShapeConfig,
+    steps: int = 100,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 50,
+    lineage_dir: str | None = None,
+    model_parallel: int = 1,
+    log_every: int = 10,
+    seed: int = 0,
+    opt_cfg: AdamWConfig | None = None,
+):
+    mesh = local_mesh(model_parallel)
+    rules = default_rules(mesh)
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=steps)
+    plan = attn_plan(cfg, shape, dp_total=int(mesh.shape["data"]))
+
+    params, specs = init_model(jax.random.PRNGKey(seed), cfg)
+    opt_state = adamw_init(params)
+    p_shard = param_sharding(mesh, specs, rules, params)
+    params = jax.tree.map(jax.device_put, params, p_shard)
+    opt_state = {
+        "m": jax.tree.map(jax.device_put, opt_state["m"], p_shard),
+        "v": jax.tree.map(jax.device_put, opt_state["v"], p_shard),
+        "step": opt_state["step"],
+    }
+
+    dslog = DSLog(root=lineage_dir) if lineage_dir else None
+    pipe = TokenPipeline(
+        PipelineConfig(cfg.vocab, shape.seq_len, shape.global_batch, seed),
+        data_shards=int(mesh.shape["data"]),
+        shard_id=0,
+        dslog=dslog,
+    )
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+
+    start_step = 0
+    if mgr is not None and mgr.latest_step() is not None:
+        restored, extra = mgr.restore(
+            shardings={
+                "params": p_shard,
+                "opt": {"m": p_shard, "v": p_shard},
+            }
+        )
+        if restored is not None:
+            params = restored["params"]
+            opt_state = {**restored["opt"], "step": jnp.asarray(
+                restored["opt"].get("step", extra["step"]), jnp.int32
+            )}
+            pipe.load_state_dict(extra["pipeline"])
+            start_step = int(extra["step"]) + 1
+            print(f"resumed from step {start_step - 1}")
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, plan), donate_argnums=(0, 1))
+    watchdog = StepWatchdog()
+    history = []
+    with mesh:
+        for step in range(start_step, steps):
+            batch_np = pipe.next_batch()
+            batch = {"tokens": jnp.asarray(batch_np["tokens"])}
+            if cfg.encoder_only:
+                batch = {
+                    "frames": jax.random.normal(
+                        jax.random.PRNGKey(step),
+                        (shape.global_batch, shape.seq_len, cfg.frontend_dim),
+                    ),
+                    "labels": jnp.asarray(batch_np["tokens"]) % cfg.vocab,
+                }
+            t0 = time.time()
+            params, opt_state, metrics = watchdog.guard(
+                step_fn, params, opt_state, batch
+            )
+            loss = float(metrics["loss"])
+            history.append(loss)
+            if step % log_every == 0 or step == steps - 1:
+                dt = time.time() - t0
+                print(
+                    f"step {step:5d} loss {loss:8.4f} "
+                    f"grad_norm {float(metrics['grad_norm']):7.3f} "
+                    f"lr {float(metrics['lr']):.2e} ({dt:.2f}s)",
+                    flush=True,
+                )
+            if mgr is not None and (step + 1) % ckpt_every == 0:
+                mgr.save(
+                    step,
+                    {"params": params, "opt": opt_state},
+                    extra={"step": step, "pipeline": pipe.state_dict()},
+                )
+    if mgr is not None:
+        mgr.wait()
+    if dslog is not None:
+        dslog.save()
+    return params, history
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--lineage-dir", default=None)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    shape = ShapeConfig("cli", args.seq_len, args.global_batch, "train")
+    train_loop(
+        cfg,
+        shape,
+        steps=args.steps,
+        ckpt_dir=args.ckpt_dir,
+        lineage_dir=args.lineage_dir,
+        model_parallel=args.model_parallel,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from .model import (  # noqa: F401
+    decode_step,
+    forward,
+    init_caches,
+    init_model,
+    lm_loss,
+    prefill,
+)

@@ -1,0 +1,226 @@
+"""GQA attention: naive-dot and chunked online-softmax ("flash at XLA
+level"), sliding-window masking, KV-cache decode, optional QKV bias.
+
+Layout: heads stay FLAT ([B, S, H, hd]; KV repeated to H for GQA) — the
+grouped [B, S, Kv, G, hd] reshape defeats GSPMD head-sharding propagation.
+``hint(...)`` calls pin the distribution strategy per shape:
+
+* heads divisible by |model|  → tensor-parallel attention over heads;
+* otherwise                   → sequence-parallel attention (q sharded on S,
+  KV replicated) — the context-parallel fallback for 14/25/40-head configs
+  on a 16-wide model axis.
+
+The chunked path scans KV blocks carrying the running (max, sum, acc)
+triple — the FlashAttention recurrence at XLA level, so peak score memory is
+``[B, H, S_q, chunk]`` instead of ``[B, H, S_q, S_kv]`` for 32k prefill.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import hint
+from .layers import apply_rope, dense, dense_init
+
+__all__ = ["attn_init", "attention_block", "decode_attention_block"]
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, dtype=jnp.float32):
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "q": dense_init(ks[0], d, cfg.n_heads * hd, ("fsdp", "tp"), cfg.qkv_bias, dtype),
+        "k": dense_init(ks[1], d, cfg.n_kv_heads * hd, ("fsdp", "tp"), cfg.qkv_bias, dtype),
+        "v": dense_init(ks[2], d, cfg.n_kv_heads * hd, ("fsdp", "tp"), cfg.qkv_bias, dtype),
+        "o": dense_init(ks[3], cfg.n_heads * hd, d, ("tp", "fsdp"), False, dtype),
+    }
+
+
+def _split_heads(x, n_heads, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, hd)
+
+
+def _repeat_kv(x, n_heads):
+    g = n_heads // x.shape[2]
+    return jnp.repeat(x, g, axis=2) if g > 1 else x
+
+
+def _mask_bias(q_pos, k_pos, causal, window):
+    """[S_q, S_kv] additive bias.  ``window`` is a (possibly traced) int32
+    scalar; global attention uses a huge sentinel so one code path serves
+    gemma3-style mixed local/global stacks under lax.scan."""
+    m = jnp.zeros((q_pos.shape[0], k_pos.shape[0]), jnp.float32)
+    if causal:
+        m = jnp.where(k_pos[None, :] > q_pos[:, None], NEG_INF, m)
+    m = jnp.where(q_pos[:, None] - k_pos[None, :] >= window, NEG_INF, m)
+    return m
+
+
+def _dot_attention(q, k, v, bias):
+    """q:[B,Sq,H,hd] k/v:[B,Skv,H,hd] bias:[Sq,Skv] → [B,Sq,H,hd]."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhd,bthd->bhqt", q, k) * scale
+    scores = hint(scores.astype(jnp.float32) + bias[None, None], "bhst")
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqt,bthd->bqhd", w, v)
+
+
+def _chunked_attention(q, k, v, q_pos, k_pos, causal, window, chunk, unroll=1):
+    """Online-softmax over KV chunks (flash recurrence via lax.scan)."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    n_chunks = skv // chunk
+    scale = hd**-0.5
+    k_c = k.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    v_c = v.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    kp_c = k_pos.reshape(n_chunks, chunk)
+
+    def step(carry, inp):
+        m, l, acc = carry  # [B,H,Sq], [B,H,Sq], [B,Sq,H,hd]
+        kc, vc, kpc = inp
+        s = jnp.einsum("bqhd,bthd->bhqt", q, kc) * scale
+        s = s.astype(jnp.float32) + _mask_bias(q_pos, kpc, causal, window)[None, None]
+        s = hint(s, "bhst")
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha.transpose(0, 2, 1)[..., None] + jnp.einsum(
+            "bhqt,bthd->bqhd", p.astype(q.dtype), vc
+        ).astype(jnp.float32)
+        acc = hint(acc, "heads")
+        return (m_new, l_new, acc), None
+
+    if unroll is True and n_chunks > 64:  # accounting compile-time valve
+        unroll = 1
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = hint(jnp.zeros((b, sq, h, hd), jnp.float32), "heads")
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (k_c, v_c, kp_c), unroll=unroll)
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+def _causal_blocked_attention(q, k, v, q_pos, k_pos, causal, window, chunk,
+                              unroll=1):
+    """Triangular q-block schedule: query chunk ``qi`` attends only KV
+    chunks ``<= qi`` (static python loop → static slice bounds), halving
+    causal-attention FLOPs vs masking a full S x S sweep (§Perf)."""
+    b, s, h, hd = q.shape
+    assert s % chunk == 0, "causal_blocked needs seq divisible by chunk"
+    nq = s // chunk
+    outs = []
+    for qi in range(nq):
+        lo, hi = qi * chunk, (qi + 1) * chunk
+        outs.append(
+            _chunked_attention(
+                q[:, lo:hi], k[:, :hi], v[:, :hi],
+                q_pos[lo:hi], k_pos[:hi], causal, window, chunk, unroll,
+            )
+        )
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention_block(
+    p,
+    x,
+    cfg,
+    *,
+    window=None,
+    positions=None,
+    mode: str = "auto",
+    chunk: int = 512,
+    unroll: int = 1,
+    return_kv: bool = False,
+):
+    """Full-sequence attention (training / prefill).
+
+    x: [B, S, D].  ``window``: int32 scalar sliding-window size (huge
+    sentinel ⇒ global attention); may be a traced per-layer value.  Returns
+    [B, S, D] (and pre-repeat K/V when ``return_kv``).
+    """
+    b, s, d = x.shape
+    hd = cfg.hd
+    if window is None:
+        window = jnp.int32(1 << 30)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    q = _split_heads(dense(p["q"], x), cfg.n_heads, hd)
+    k = _split_heads(dense(p["k"], x), cfg.n_kv_heads, hd)
+    v = _split_heads(dense(p["v"], x), cfg.n_kv_heads, hd)
+    q = hint(apply_rope(q, positions, cfg.rope_theta), "heads")
+    k = apply_rope(k, positions, cfg.rope_theta)
+    kv_keep = (k, v)
+    k = hint(_repeat_kv(k, cfg.n_heads), "heads")
+    v = hint(_repeat_kv(v, cfg.n_heads), "heads")
+
+    causal = not cfg.encoder_only
+    pos1 = jnp.arange(s, dtype=jnp.int32)
+    if mode == "auto":
+        mode = "dot" if s <= 2048 else "chunked"
+    if mode == "dot":
+        bias = _mask_bias(pos1, pos1, causal, window)
+        out = _dot_attention(q, k, v, bias)
+    elif mode == "causal_blocked" and causal and s % chunk == 0:
+        out = _causal_blocked_attention(
+            q, k, v, pos1, pos1, causal, window, chunk, unroll
+        )
+    else:
+        pad = (-s) % chunk
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            kp = jnp.concatenate([pos1, jnp.full((pad,), jnp.int32(-(10**9)))])
+        else:
+            kp = pos1
+        out = _chunked_attention(q, k, v, pos1, kp, causal, window, chunk, unroll)
+    out = hint(out.reshape(b, s, cfg.n_heads * hd), "ffn")
+    y = hint(dense(p["o"], out), "hidden")
+    if return_kv:
+        return y, kv_keep
+    return y
+
+
+def decode_attention_block(p, x, cfg, cache_k, cache_v, cur_len, *, window=None):
+    """Single-token decode against a fixed-size KV cache.
+
+    x: [B, 1, D]; cache_k/v: [B, T, Kv, hd]; ``cur_len``: int32 scalar —
+    tokens [0, cur_len) are valid, the new token is written at ``cur_len``.
+    Returns (y [B,1,D], new_cache_k, new_cache_v).
+    """
+    b, _, d = x.shape
+    hd = cfg.hd
+    t = cache_k.shape[1]
+    if window is None:
+        window = jnp.int32(1 << 30)
+    pos = jnp.full((b, 1), cur_len, jnp.int32)
+    q = _split_heads(dense(p["q"], x), cfg.n_heads, hd)
+    k = _split_heads(dense(p["k"], x), cfg.n_kv_heads, hd)
+    v = _split_heads(dense(p["v"], x), cfg.n_kv_heads, hd)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, cur_len, 0, 0)
+    )
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, cur_len, 0, 0)
+    )
+    g = cfg.n_heads // cfg.n_kv_heads
+    kpos = jnp.arange(t, dtype=jnp.int32)
+    valid = (kpos <= cur_len) & (kpos > cur_len - window)
+    scale = hd**-0.5
+    # grouped einsum against the *unrepeated* cache (decode is memory-bound:
+    # never materialize a repeated 32k-long cache)
+    qg = q.reshape(b, 1, cfg.n_kv_heads, g, hd)
+    scores = jnp.einsum("bqkgd,btkd->bkgqt", qg, cache_k.astype(qg.dtype)) * scale
+    scores = scores.astype(jnp.float32) + jnp.where(valid, 0.0, NEG_INF)[
+        None, None, None, None, :
+    ]
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", w, cache_v.astype(x.dtype))
+    y = dense(p["o"], out.reshape(b, 1, cfg.n_heads * hd))
+    return hint(y, "hidden"), cache_k, cache_v

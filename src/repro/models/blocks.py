@@ -1,0 +1,209 @@
+"""Per-layer blocks (dense / MoE / SSM / hybrid) + the scan-over-layers stack.
+
+All layers of one architecture share parameter shapes, so the whole stack is
+a single ``lax.scan`` over weights stacked on a leading layer axis — this
+keeps HLO size and compile time flat in depth (80-layer qwen-110b compiles
+as fast as 2 layers) and is what makes the 512-device dry-run tractable.
+Per-layer attention kind (gemma3's 5 local : 1 global) rides along as a
+scanned int32 window array rather than Python branching.
+
+Remat: ``cfg.remat`` ∈ {nothing, dots, full} wraps the scan body with
+``jax.checkpoint`` so the big configs fit v5e HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distributed.sharding import hint
+from .attention import attn_init, attention_block, decode_attention_block
+from .layers import mlp, mlp_init, rmsnorm, rmsnorm_init, split_params
+from .moe import moe_apply, moe_init
+from .ssm import ssm_apply, ssm_decode, ssm_init, ssm_state_shapes
+
+__all__ = [
+    "layer_init",
+    "stack_init",
+    "stack_apply",
+    "stack_decode",
+    "layer_windows",
+    "init_caches",
+]
+
+GLOBAL_WINDOW = jnp.int32(1 << 30)  # "no window" sentinel
+
+
+def layer_init(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 8)
+    p = {}
+    if cfg.family == "ssm":
+        p["norm1"] = rmsnorm_init(cfg.d_model, dtype)
+        p["ssm"] = ssm_init(ks[0], cfg, dtype)
+        if cfg.d_ff:
+            p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_act, dtype)
+        return p
+    p["norm1"] = rmsnorm_init(cfg.d_model, dtype)
+    p["attn"] = attn_init(ks[0], cfg, dtype)
+    if cfg.family == "hybrid":
+        p["ssm"] = ssm_init(ks[1], cfg, dtype)
+        p["branch_norm_attn"] = rmsnorm_init(cfg.d_model, dtype)
+        p["branch_norm_ssm"] = rmsnorm_init(cfg.d_model, dtype)
+    p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+    if cfg.moe is not None:
+        p["moe"] = moe_init(ks[2], cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp_act, dtype)
+    return p
+
+
+def layer_apply(p, x, cfg: ArchConfig, window, *, mode="auto", chunk=512, unroll=1):
+    """One block, full sequence.  Returns (y, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        x = x + ssm_apply(p["ssm"], rmsnorm(p["norm1"], x, cfg.norm_eps), cfg, unroll)
+        if cfg.d_ff:
+            x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg.mlp_act)
+        return x, aux
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    a = attention_block(p["attn"], h, cfg, window=window, mode=mode, chunk=chunk, unroll=unroll)
+    if cfg.family == "hybrid":
+        s = ssm_apply(p["ssm"], h, cfg, unroll)
+        a = 0.5 * (
+            rmsnorm(p["branch_norm_attn"], a, cfg.norm_eps)
+            + rmsnorm(p["branch_norm_ssm"], s, cfg.norm_eps)
+        )
+    x = x + a
+    h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if cfg.moe is not None:
+        y, aux = moe_apply(p["moe"], h2, cfg)
+    else:
+        y = mlp(p["mlp"], h2, cfg.mlp_act)
+    return x + y, aux
+
+
+def layer_decode(p, x, cfg: ArchConfig, window, cache):
+    """One block, one token.  cache is this layer's slice."""
+    aux_cache = {}
+    if cfg.family == "ssm":
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        y, conv_s, ssm_s = ssm_decode(p["ssm"], h, cfg, cache["conv"], cache["ssm"])
+        x = x + y
+        if cfg.d_ff:
+            x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg.mlp_act)
+        return x, {"conv": conv_s, "ssm": ssm_s}
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    a, ck, cv = decode_attention_block(
+        p["attn"], h, cfg, cache["k"], cache["v"], cache["len"], window=window
+    )
+    new_cache = {"k": ck, "v": cv, "len": cache["len"] + 1}
+    if cfg.family == "hybrid":
+        y, conv_s, ssm_s = ssm_decode(p["ssm"], h, cfg, cache["conv"], cache["ssm"])
+        a = 0.5 * (
+            rmsnorm(p["branch_norm_attn"], a, cfg.norm_eps)
+            + rmsnorm(p["branch_norm_ssm"], y, cfg.norm_eps)
+        )
+        new_cache["conv"] = conv_s
+        new_cache["ssm"] = ssm_s
+    x = x + a
+    h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if cfg.moe is not None:
+        y2, _ = moe_apply(p["moe"], h2, cfg)
+    else:
+        y2 = mlp(p["mlp"], h2, cfg.mlp_act)
+    return x + y2, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# Stack (scan over layers)
+# --------------------------------------------------------------------------- #
+def layer_windows(cfg: ArchConfig) -> jnp.ndarray:
+    """Per-layer effective attention window (int32; huge sentinel = global)."""
+    wins = []
+    for kind in cfg.layer_kinds():
+        if kind == "local":
+            wins.append(cfg.window)
+        else:
+            wins.append(1 << 30)
+    return jnp.asarray(wins, jnp.int32)
+
+
+def stack_init(key, cfg: ArchConfig, dtype):
+    """Stacked layer params: (values pytree with leading L axis, spec tree)."""
+    keys = jax.random.split(key, cfg.n_layers)
+    _, specs = split_params(layer_init(keys[0], cfg, dtype))
+    specs = jax.tree.map(
+        lambda t: (None,) + tuple(t), specs, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    vals = jax.vmap(
+        lambda k: split_params(layer_init(k, cfg, dtype))[0]
+    )(keys)
+    return vals, specs
+
+
+def _remat_wrap(fn, remat: str):
+    if remat == "nothing":
+        return fn
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)
+
+
+def stack_apply(stacked_vals, x, cfg: ArchConfig, *, mode="auto", chunk=512,
+                unroll=1, layer_unroll=1):
+    """Run all layers; returns (hidden, total_aux_loss).
+
+    ``layer_unroll=True`` fully unrolls the layer scan (and ``unroll`` the
+    inner chunk scans) — the dry-run cost-accounting variant, since XLA
+    cost analysis counts a while-loop body once regardless of trip count.
+    """
+    windows = layer_windows(cfg)
+
+    def body(carry, layer):
+        h, aux = carry
+        lp, win = layer
+        h, a = layer_apply(lp, h, cfg, win, mode=mode, chunk=chunk, unroll=unroll)
+        return (hint(h, "hidden"), aux + a), None
+
+    body = _remat_wrap(body, cfg.remat)
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (stacked_vals, windows),
+        unroll=layer_unroll,
+    )
+    return x, aux
+
+
+def stack_decode(stacked_vals, x, cfg: ArchConfig, caches, layer_unroll=1):
+    """One-token decode through all layers; caches have leading L axis."""
+    windows = layer_windows(cfg)
+
+    def body(h, layer):
+        lp, win, cache = layer
+        h, new_cache = layer_decode(lp, h, cfg, win, cache)
+        return h, new_cache
+
+    x, new_caches = jax.lax.scan(
+        body, x, (stacked_vals, windows, caches), unroll=layer_unroll
+    )
+    return x, new_caches
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    """Decode caches with leading layer axis."""
+    L = cfg.n_layers
+    cache = {}
+    if cfg.family != "ssm":
+        cache["k"] = jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype)
+        cache["v"] = jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype)
+        cache["len"] = jnp.zeros((L,), jnp.int32)
+    if cfg.family in ("ssm", "hybrid"):
+        conv_shape, ssm_shape = ssm_state_shapes(cfg, batch)
+        cache["conv"] = jnp.zeros((L,) + conv_shape, dtype)
+        cache["ssm"] = jnp.zeros((L,) + ssm_shape, jnp.float32)
+    return cache

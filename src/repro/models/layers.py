@@ -1,0 +1,144 @@
+"""Parameter plumbing + basic layers (norms, MLP, RoPE, embeddings).
+
+No flax/haiku — parameters are plain pytrees of :class:`P` leaves carrying
+``(value, partition-spec)`` so sharding is declared where the parameter is
+created.  ``split_params`` separates the value tree from the logical-spec
+tree; ``repro.distributed.sharding`` maps logical axes to mesh axes.
+
+Logical axes:
+  ``fsdp``  — parameter dimension sharded ZeRO-3 style over the data axis
+  ``tp``    — tensor-parallel dimension over the model axis
+  ``None``  — replicated
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "P",
+    "split_params",
+    "dense_init",
+    "dense",
+    "rmsnorm_init",
+    "rmsnorm",
+    "layernorm_init",
+    "layernorm",
+    "mlp_init",
+    "mlp",
+    "embed_init",
+    "rope_freqs",
+    "apply_rope",
+]
+
+
+class P(NamedTuple):
+    value: Any
+    spec: tuple  # logical partition per dim, e.g. ("fsdp", "tp")
+
+
+def split_params(tree):
+    """(values, logical_specs) from a tree of :class:`P` leaves."""
+    is_p = lambda x: isinstance(x, P)
+    vals = jax.tree.map(lambda p: p.value, tree, is_leaf=is_p)
+    specs = jax.tree.map(lambda p: p.spec, tree, is_leaf=is_p)
+    return vals, specs
+
+
+def _init_matrix(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, spec, bias=False, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else d_in**-0.5
+    p = {"w": P(_init_matrix(key, (d_in, d_out), scale, dtype), spec)}
+    if bias:
+        p["b"] = P(jnp.zeros((d_out,), dtype), (spec[-1],))
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"g": P(jnp.ones((d,), dtype), (None,))}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d, dtype=jnp.float32):
+    return {
+        "g": P(jnp.ones((d,), dtype), (None,)),
+        "b": P(jnp.zeros((d,), dtype), (None,)),
+    }
+
+
+def layernorm(p, x, eps=1e-6):
+    h = x.astype(jnp.float32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.mean((h - mu) ** 2, axis=-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + eps)
+    return (h * p["g"].astype(jnp.float32) + p["b"].astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+def mlp_init(key, d_model, d_ff, act="swiglu", dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": dense_init(ks[0], d_model, d_ff, ("fsdp", "tp"), dtype=dtype),
+        "down": dense_init(
+            ks[1], d_ff, d_model, ("tp", "fsdp"), dtype=dtype, scale=d_ff**-0.5
+        ),
+    }
+    if act == "swiglu":
+        p["gate"] = dense_init(ks[2], d_model, d_ff, ("fsdp", "tp"), dtype=dtype)
+    return p
+
+
+def mlp(p, x, act="swiglu"):
+    up = dense(p["up"], x)
+    if act == "swiglu":
+        h = jax.nn.silu(dense(p["gate"], x)) * up
+    else:
+        h = jax.nn.gelu(up)
+    return dense(p["down"], h)
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    # N(0, 1/sqrt(d)) keeps tied-head logits O(1) at init
+    return {
+        "table": P(
+            _init_matrix(key, (vocab, d), d**-0.5, dtype), ("tp", "fsdp")
+        )
+    }
+
+
+# ----------------------------- RoPE ---------------------------------- #
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, S, H, hd]; positions: [B, S] (int)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, hd/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,150 @@
+"""Full model assembly: embeddings / modality frontends, layer stack, head,
+loss, and the train / prefill / decode step functions the launcher jits.
+
+Batch conventions (see ``repro.launch.dryrun`` input_specs):
+
+* decoder LMs:   ``{"tokens": [B, S] int32}``; labels are tokens shifted.
+* VLM:           ``+ {"patch_embeds": [B, Np, D]}`` (frontend stub) —
+                 patches are prepended to the text embeddings.
+* audio encoder: ``{"frames": [B, T, F] , "labels": [B, T] int32}``
+                 (conv feature-extractor stub; encoder-only, CE per frame).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distributed.sharding import hint
+from .blocks import init_caches, layer_windows, stack_apply, stack_decode, stack_init
+from .layers import P, dense, dense_init, embed_init, rmsnorm, rmsnorm_init, split_params
+
+__all__ = [
+    "init_model",
+    "model_specs",
+    "forward",
+    "lm_loss",
+    "prefill",
+    "decode_step",
+    "init_caches",
+]
+
+
+def init_model(key, cfg: ArchConfig, dtype=jnp.float32):
+    """Returns (param value tree, logical spec tree)."""
+    ks = jax.random.split(key, 5)
+    tree = {}
+    specs = {}
+    if cfg.frontend == "frames":
+        proj = dense_init(ks[0], cfg.frontend_dim, cfg.d_model, ("fsdp", "tp"), True, dtype)
+        v, s = split_params(proj)
+        tree["frontend_proj"], specs["frontend_proj"] = v, s
+    emb = embed_init(ks[1], cfg.vocab_padded, cfg.d_model, dtype)
+    v, s = split_params(emb)
+    tree["embed"], specs["embed"] = v, s
+    stack_vals, stack_specs = stack_init(ks[2], cfg, dtype)
+    tree["layers"], specs["layers"] = stack_vals, stack_specs
+    fn = rmsnorm_init(cfg.d_model, dtype)
+    v, s = split_params(fn)
+    tree["final_norm"], specs["final_norm"] = v, s
+    if not cfg.tie_embeddings:
+        head = dense_init(
+            ks[3], cfg.d_model, cfg.vocab_padded, ("fsdp", "tp"), False, dtype,
+            scale=cfg.d_model**-0.5,
+        )
+        v, s = split_params(head)
+        tree["head"], specs["head"] = v, s
+    return tree, specs
+
+
+def _embed_tokens(params, tokens, cfg):
+    emb = params["embed"]["table"]
+    x = jnp.take(emb, tokens, axis=0)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    return x
+
+
+def _head(params, h, cfg):
+    logits = (
+        h @ params["embed"]["table"].T
+        if cfg.tie_embeddings
+        else dense(params["head"], h)
+    )
+    if cfg.vocab_padded != cfg.vocab:  # mask padding ids
+        pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(pad_mask, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def forward(params, batch, cfg: ArchConfig, *, mode="auto", chunk=512, unroll=1, layer_unroll=1):
+    """Full-sequence forward.  Returns (logits [B, S, V], aux_loss)."""
+    if cfg.frontend == "frames":
+        x = dense(params["frontend_proj"], batch["frames"])
+    else:
+        x = _embed_tokens(params, batch["tokens"], cfg)
+        if cfg.frontend == "patch":
+            pe = batch["patch_embeds"].astype(x.dtype)
+            x = jnp.concatenate([pe, x], axis=1)
+    x = hint(x, "hidden")
+    h, aux = stack_apply(params["layers"], x, cfg, mode=mode, chunk=chunk,
+                         unroll=unroll, layer_unroll=layer_unroll)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = hint(_head(params, h, cfg), "logits")
+    return logits, aux
+
+
+def lm_loss(params, batch, cfg: ArchConfig, *, mode="auto", chunk=512,
+            unroll=1, layer_unroll=1, aux_weight=0.01):
+    """Cross-entropy loss (next-token for decoders, per-frame for encoders)."""
+    logits, aux = forward(params, batch, cfg, mode=mode, chunk=chunk,
+                          unroll=unroll, layer_unroll=layer_unroll)
+    logits = logits.astype(jnp.float32)
+    if cfg.encoder_only:
+        labels = batch["labels"]
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+        loss = nll.mean()
+    else:
+        tokens = batch["tokens"]
+        if cfg.frontend == "patch":
+            # logits for text positions start after the patch prefix
+            np_ = batch["patch_embeds"].shape[1]
+            logits = logits[:, np_:, :]
+        lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        tgt = tokens[:, 1:]
+        nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+        loss = nll.mean()
+    return loss + aux_weight * aux, (loss, aux)
+
+
+# --------------------------------------------------------------------------- #
+# Serving
+# --------------------------------------------------------------------------- #
+def prefill(params, batch, cfg: ArchConfig, max_len: int, *, mode="auto", chunk=512, unroll=1, layer_unroll=1):
+    """Run the prompt through the stack; returns (last-token logits, caches).
+
+    For the dry-run we lower prefill as a pure forward (logits only) —
+    cache construction is exercised by ``decode_step`` which owns the cache
+    layout; a fused prefill+cache write is a §Perf follow-up.
+    """
+    logits, _ = forward(params, batch, cfg, mode=mode, chunk=chunk,
+                        unroll=unroll, layer_unroll=layer_unroll)
+    return logits[:, -1:, :]
+
+
+def decode_step(params, token, caches, cur_len, cfg: ArchConfig, layer_unroll=1):
+    """One decode step.
+
+    token: [B, 1] int32; caches: stacked per-layer dict; cur_len: int32
+    scalar (same position for all layers).  Returns (logits [B, 1, V],
+    new caches).
+    """
+    if "len" in caches:
+        caches = {**caches, "len": jnp.full((cfg.n_layers,), cur_len, jnp.int32)}
+    x = _embed_tokens(params, token, cfg)
+    h, new_caches = stack_decode(params["layers"], x, cfg, caches, layer_unroll)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = _head(params, h, cfg)
+    return logits, new_caches

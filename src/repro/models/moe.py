@@ -1,0 +1,155 @@
+"""Mixture-of-Experts layer: GShard-style capacity dispatch, top-k routing,
+shared experts (Qwen-MoE), load-balance aux loss.
+
+Expert parallelism maps onto the mesh through the einsum operands: expert
+weights are ``[E, D, F]`` with ``D → fsdp`` and ``F → tp``; the dispatch
+one-hot keeps tokens grouped by their batch row so the dispatch einsums
+shard over the data axis without resharding ("G" below = batch rows).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import hint
+from .layers import P, dense, dense_init, mlp, mlp_init
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg, dtype=jnp.float32):
+    m = cfg.moe
+    d = cfg.d_model
+    f = m.d_ff_expert or cfg.d_ff
+    ks = jax.random.split(key, 6)
+    scale_in, scale_out = d**-0.5, f**-0.5
+
+    def expert_mat(k, shape, scale, spec):
+        return P(
+            (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype), spec
+        )
+
+    p = {
+        "router": dense_init(ks[0], d, m.n_experts, (None, None), dtype=dtype),
+        "gate_w": expert_mat(ks[1], (m.n_experts, d, f), scale_in, (None, "fsdp", "tp")),
+        "up_w": expert_mat(ks[2], (m.n_experts, d, f), scale_in, (None, "fsdp", "tp")),
+        "down_w": expert_mat(ks[3], (m.n_experts, f, d), scale_out, (None, "tp", "fsdp")),
+    }
+    if m.n_shared:
+        # shared experts are dense MLPs applied to every token; fuse them
+        # into one wide MLP (mathematically identical, one less einsum)
+        p["shared"] = mlp_init(ks[4], d, m.n_shared * f, "swiglu", dtype)
+        p["shared_gate"] = dense_init(ks[5], d, 1, (None, None), dtype=dtype)
+    return p
+
+
+def moe_apply(p, x, cfg):
+    """x: [B, S, D] → (y, aux_loss).  Dispatch per ``cfg.moe.dispatch``:
+
+    * ``einsum`` — GShard one-hot dispatch/combine einsums (baseline;
+      simple, but the dispatch matmuls cost O(S·E·cap·D) FLOPs — for
+      60-expert qwen2-moe they rival the expert FFNs themselves).
+    * ``sorted`` — sort token-choices by expert, gather the first ``cap``
+      per expert, scatter-add weighted outputs back: O(S·k log(S·k))
+      integer work + pure data movement, no dispatch FLOPs (§Perf).
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.n_experts, m.top_k
+    cap = max(1, int(s * k / e * m.capacity_factor))
+
+    logits = dense(p["router"], x).astype(jnp.float32)  # [B,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # [B,S,k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9
+    )
+
+    # load-balance aux loss (Switch/GShard form)
+    me = probs.mean(axis=(0, 1))  # [E]
+    one_hot_top1 = jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32)
+    ce = one_hot_top1.mean(axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+
+    if getattr(m, "dispatch", "einsum") == "sorted":
+        y = _sorted_dispatch(p, x, cfg, gate_vals, gate_idx, cap)
+        if m.n_shared:
+            y = y + mlp(p["shared"], x, "swiglu")
+        return y, aux
+
+    # position of each (token, choice) within its expert's capacity buffer
+    dispatch = jnp.zeros((b, s, e, cap), dtype=x.dtype)
+    combine = jnp.zeros((b, s, e, cap), dtype=jnp.float32)
+    for choice in range(k):  # static unroll over top-k choices
+        oh = jax.nn.one_hot(gate_idx[..., choice], e, dtype=jnp.float32)  # [B,S,E]
+        pos = (jnp.cumsum(oh, axis=1) - oh) + combine_positions_base(combine)
+        keep = (pos < cap) & (oh > 0)
+        pos_c = jnp.clip(pos, 0, cap - 1).astype(jnp.int32)
+        sel = jax.nn.one_hot(pos_c, cap, dtype=jnp.float32) * keep[..., None]
+        contrib = oh[..., None] * sel  # [B,S,E,cap]
+        dispatch = dispatch + contrib.astype(x.dtype)
+        combine = combine + contrib * gate_vals[..., choice, None, None]
+
+    xe = hint(jnp.einsum("bsec,bsd->ebcd", dispatch, x), "experts")  # [E,B,cap,D]
+    h = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", xe, p["gate_w"])) * jnp.einsum(
+        "ebcd,edf->ebcf", xe, p["up_w"]
+    )
+    ye = jnp.einsum("ebcf,efd->ebcd", h, p["down_w"])  # [E,B,cap,D]
+    y = hint(jnp.einsum("bsec,ebcd->bsd", combine.astype(x.dtype), ye), "hidden")
+
+    if m.n_shared:
+        y = y + mlp(p["shared"], x, "swiglu")
+    return y, aux
+
+
+def combine_positions_base(combine):
+    """Occupied slots per expert so far across earlier top-k choices."""
+    # combine > 0 marks taken (token, slot) cells; count per (B, E)
+    taken = (combine > 0).astype(jnp.float32).sum(axis=(1, 3))  # [B, E]
+    return taken[:, None, :]
+
+
+def _expert_ffn(p, xe):
+    """xe: [E, B, cap, D] → [E, B, cap, D] (SwiGLU expert MLPs)."""
+    h = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", xe, p["gate_w"])) * jnp.einsum(
+        "ebcd,edf->ebcf", xe, p["up_w"]
+    )
+    return jnp.einsum("ebcf,efd->ebcd", h, p["down_w"])
+
+
+def _sorted_dispatch(p, x, cfg, gate_vals, gate_idx, cap):
+    """Gather/scatter MoE dispatch (sort tokens by expert, no one-hots)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.n_experts, m.top_k
+    sk = s * k
+    eid = gate_idx.reshape(b, sk)  # expert of each (token, choice)
+    tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)[None, :], (b, sk)
+    )
+    gate = gate_vals.reshape(b, sk)
+    order = jnp.argsort(eid, axis=1, stable=True)
+    eid_s = jnp.take_along_axis(eid, order, axis=1)
+    tok_s = jnp.take_along_axis(tok, order, axis=1)
+    gate_s = jnp.take_along_axis(gate, order, axis=1)
+    # rank within expert = position - first position of that expert
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(e)))(eid_s)
+    first = jnp.take_along_axis(starts, eid_s, axis=1)  # [B, sk]
+    rank = jnp.arange(sk, dtype=jnp.int32)[None, :] - first.astype(jnp.int32)
+    keep = rank < cap
+    slot = jnp.where(keep, eid_s * cap + rank, e * cap)  # overflow -> spill row
+
+    bidx = jnp.arange(b)[:, None]
+    gathered = jnp.take_along_axis(x, tok_s[..., None], axis=1)  # [B, sk, D]
+    xe = jnp.zeros((b, e * cap + 1, d), x.dtype).at[bidx, slot].set(gathered)
+    xe = xe[:, : e * cap].reshape(b, e, cap, d).transpose(1, 0, 2, 3)
+    ye = _expert_ffn(p, xe)  # [E, B, cap, D]
+    ye_flat = ye.transpose(1, 0, 2, 3).reshape(b, e * cap, d)
+    ye_flat = jnp.concatenate(
+        [ye_flat, jnp.zeros((b, 1, d), ye_flat.dtype)], axis=1
+    )
+    contrib = jnp.take_along_axis(ye_flat, slot[..., None], axis=1)
+    w = jnp.where(keep, gate_s, 0.0).astype(x.dtype)[..., None]
+    y = jnp.zeros_like(x).at[bidx, tok_s].add(contrib * w)
+    return y

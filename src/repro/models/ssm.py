@@ -1,0 +1,183 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked-scan training form and
+O(1)-state decode form  [arXiv:2405.21060].
+
+The chunked SSD algorithm decomposes the sequence into chunks of length Q:
+the intra-chunk term is a small attention-like quadratic contraction, and
+chunk-to-chunk information flows through an ``[H, N, P]`` state carried by a
+``lax.scan`` — this is the TPU-friendly formulation (dense MXU einsums per
+chunk, one sequential scan over S/Q steps instead of S).
+
+Decode maintains ``(conv_state [B, d_conv-1, CH], ssm_state [B, H, N, P])``
+per layer and costs O(1) per token — this is what makes ``long_500k``
+tractable for the ssm/hybrid architectures.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import hint
+from .layers import P, dense, dense_init, rmsnorm, rmsnorm_init
+
+__all__ = ["ssm_init", "ssm_apply", "ssm_decode", "ssm_state_shapes"]
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    n_groups = 1
+    conv_ch = d_inner + 2 * n_groups * s.d_state
+    return d_inner, n_heads, n_groups, conv_ch
+
+
+def ssm_init(key, cfg, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, n_groups, conv_ch = _dims(cfg)
+    d_in_proj = 2 * d_inner + 2 * n_groups * s.d_state + n_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], d, d_in_proj, ("fsdp", "tp"), dtype=dtype),
+        "conv_w": P(
+            (jax.random.normal(ks[1], (s.d_conv, conv_ch), jnp.float32) * 0.2).astype(
+                dtype
+            ),
+            (None, "tp"),
+        ),
+        "conv_b": P(jnp.zeros((conv_ch,), dtype), ("tp",)),
+        "A_log": P(
+            jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32), (None,)
+        ),
+        "D": P(jnp.ones((n_heads,), jnp.float32), (None,)),
+        "dt_bias": P(jnp.zeros((n_heads,), jnp.float32), (None,)),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": dense_init(
+            ks[2], d_inner, d, ("tp", "fsdp"), dtype=dtype, scale=d_inner**-0.5
+        ),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    d_inner, n_heads, n_groups, conv_ch = _dims(cfg)
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_ch], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal 1-D conv: xBC [B,S,CH], w [K,CH]."""
+    k = w.shape[0]
+    x_pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC)
+    for i in range(k):  # K is 4 — static unroll beats conv for depthwise
+        out = out + x_pad[:, i : i + xBC.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def ssm_apply(p, x, cfg, unroll: int = 1):
+    """x: [B, S, D] → [B, S, D] (training / prefill)."""
+    s_cfg = cfg.ssm
+    b, seq, d = x.shape
+    d_inner, n_heads, n_groups, conv_ch = _dims(cfg)
+    hd, n = s_cfg.head_dim, s_cfg.d_state
+    q = min(s_cfg.chunk, seq)
+    assert seq % q == 0, "sequence must be divisible by SSD chunk"
+    nc = seq // q
+
+    z, xBC, dt = _split_proj(cfg, dense(p["in_proj"], x))
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xh, B_ssm, C_ssm = jnp.split(xBC, [d_inner, d_inner + n_groups * n], axis=-1)
+    xh = xh.reshape(b, seq, n_heads, hd)
+    B_ssm = B_ssm.reshape(b, seq, n_groups, n)
+    C_ssm = C_ssm.reshape(b, seq, n_groups, n)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(p["A_log"])  # [H] negative
+    da = dt * a  # [B,S,H] log-decay per step
+    xdt = xh.astype(jnp.float32) * dt[..., None]  # [B,S,H,P]
+
+    # chunk views (scan axis first)
+    def chunked(t, extra_dims):
+        return t.reshape((b, nc, q) + extra_dims).swapaxes(0, 1)
+
+    da_c = chunked(da, (n_heads,))  # [nc,B,q,H]
+    xdt_c = chunked(xdt, (n_heads, hd))
+    b_c = chunked(B_ssm.astype(jnp.float32), (n_groups, n))[..., 0, :]
+    c_c = chunked(C_ssm.astype(jnp.float32), (n_groups, n))[..., 0, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+
+    def scan_step(state, inp):
+        """Whole SSD chunk inside the scan body: the [q, q, H] decay matrix
+        is live for only one chunk at a time (peak-memory bound)."""
+        da_k, xdt_k, b_k, c_k = inp  # [B,q,H], [B,q,H,P], [B,q,N], [B,q,N]
+        csum = jnp.cumsum(da_k, axis=1)  # [B,q,H]
+        li = csum[:, :, None, :] - csum[:, None, :, :]  # [B,q,q,H]
+        # mask BEFORE exp: li > 0 for the (masked) j > i entries can
+        # overflow, and where(mask, inf, 0) still NaNs the backward pass
+        li = jnp.where(mask[None, :, :, None], li, -jnp.inf)
+        L = jnp.exp(li)
+        scores = jnp.einsum("bin,bjn->bij", c_k, b_k)  # [B,q,q]
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", scores, L, xdt_k)
+        in_decay = jnp.exp(csum)  # decay from chunk start to step i
+        y_inter = jnp.einsum("bin,bih,bhnp->bihp", c_k, in_decay, state)
+        decay_to_end = jnp.exp(csum[:, -1:, :] - csum)  # [B,q,H]
+        s_chunk = jnp.einsum("bjn,bjh,bjhp->bhnp", b_k, decay_to_end, xdt_k)
+        new_state = state * jnp.exp(csum[:, -1, :])[:, :, None, None] + s_chunk
+        return new_state, y_intra + y_inter
+
+    # accounting safety valve: fully unrolling hundreds of chunks explodes
+    # compile time while the scan body is <1% of SSM FLOPs (projections
+    # dominate) — cap the unroll and accept the tiny undercount.
+    if unroll is True and nc > 64:
+        unroll = 1
+    init = jnp.zeros((b, n_heads, n, hd), jnp.float32)
+    _, y_c = jax.lax.scan(scan_step, init, (da_c, xdt_c, b_c, c_c), unroll=unroll)
+    y = y_c.swapaxes(0, 1).reshape(b, seq, n_heads, hd)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, seq, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return hint(dense(p["out_proj"], y), "hidden")
+
+
+def ssm_state_shapes(cfg, batch):
+    s = cfg.ssm
+    d_inner, n_heads, n_groups, conv_ch = _dims(cfg)
+    return (
+        (batch, s.d_conv - 1, conv_ch),  # conv state
+        (batch, n_heads, s.d_state, s.head_dim),  # ssm state
+    )
+
+
+def ssm_decode(p, x, cfg, conv_state, ssm_state):
+    """One-token decode.  x: [B, 1, D] → (y, conv_state, ssm_state)."""
+    s_cfg = cfg.ssm
+    b = x.shape[0]
+    d_inner, n_heads, n_groups, conv_ch = _dims(cfg)
+    hd, n = s_cfg.head_dim, s_cfg.d_state
+
+    z, xBC, dt = _split_proj(cfg, dense(p["in_proj"], x))
+    xBC = xBC[:, 0]  # [B,CH]
+    window = jnp.concatenate([conv_state, xBC[:, None, :]], axis=1)  # [B,K,CH]
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+    xBC = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    new_conv_state = window[:, 1:]
+
+    xh, B_ssm, C_ssm = jnp.split(xBC, [d_inner, d_inner + n_groups * n], axis=-1)
+    xh = xh.reshape(b, n_heads, hd).astype(jnp.float32)
+    B_ssm = B_ssm.reshape(b, n)[:, None, :].astype(jnp.float32)  # G=1 → [B,1,N]
+    C_ssm = C_ssm.reshape(b, n)[:, None, :].astype(jnp.float32)
+
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt1 * a)  # [B,H]
+    xdt = xh * dt1[..., None]  # [B,H,P]
+    new_state = ssm_state * decay[:, :, None, None] + jnp.einsum(
+        "bgn,bhp->bhnp", B_ssm, xdt
+    )
+    y = jnp.einsum("bgn,bhnp->bhp", C_ssm, new_state)  # [B,H,P]
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return hint(dense(p["out_proj"], y), "hidden"), new_conv_state, new_state

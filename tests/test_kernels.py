@@ -1,0 +1,108 @@
+"""Pallas kernels vs pure-jnp refs: shape/dtype sweeps, interpret=True."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ops import range_join_pairs, run_boundaries
+from repro.kernels.range_join import range_join_mask
+from repro.kernels.ref import range_join_mask_ref, run_boundaries_ref
+from repro.kernels.run_boundary import run_boundaries_packed
+
+rng = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("n,nk,block", [
+    (512, 1, 128), (1024, 2, 256), (2048, 4, 512), (4096, 8, 1024),
+    (1024, 1, 1024), (3072, 6, 256),
+])
+def test_run_boundary_matches_ref(n, nk, block):
+    packed = np.zeros((n, 128), np.int32)
+    for c in range(nk):
+        packed[:, c] = np.sort(rng.integers(0, 7, n))
+    lo = np.sort(rng.integers(0, n // 2, n))
+    packed[:, nk] = lo
+    packed[:, nk + 1] = lo + rng.integers(0, 3, n)
+    got = run_boundaries_packed(
+        jnp.asarray(packed), n_keys=nk, block_rows=block, interpret=True
+    )
+    want = run_boundaries_ref(jnp.asarray(packed), nk)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_run_boundary_property(data):
+    n = data.draw(st.sampled_from([256, 512, 1024]))
+    nk = data.draw(st.integers(1, 5))
+    seed = data.draw(st.integers(0, 2**31))
+    r = np.random.default_rng(seed)
+    packed = np.zeros((n, 128), np.int32)
+    for c in range(nk):
+        packed[:, c] = np.sort(r.integers(0, 5, n))
+    lo = np.sort(r.integers(0, 40, n))
+    packed[:, nk] = lo
+    packed[:, nk + 1] = lo
+    got = np.asarray(
+        run_boundaries_packed(jnp.asarray(packed), n_keys=nk, block_rows=256, interpret=True)
+    )
+    want = np.asarray(run_boundaries_ref(jnp.asarray(packed), nk))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_run_boundaries_wrapper_vs_numpy():
+    """Wrapper output drives the same segmentation numpy produces."""
+    n = 3000
+    g = np.sort(rng.integers(0, 12, n)).astype(np.int64)
+    lo = rng.integers(0, 50, n).astype(np.int64)
+    order = np.lexsort((lo, g))
+    g, lo = g[order], lo[order]
+    flags = run_boundaries([g], lo, lo, block_rows=512)
+    want = np.ones(n, bool)
+    want[1:] = (g[1:] != g[:-1]) | (lo[1:] > lo[:-1] + 1)
+    np.testing.assert_array_equal(flags, want)
+
+
+@pytest.mark.parametrize("nq,nr,l,bq,br", [
+    (100, 300, 1, 128, 128), (257, 511, 2, 128, 256),
+    (64, 64, 3, 64, 64), (1000, 50, 4, 256, 128),
+])
+def test_range_join_matches_oracle(nq, nr, l, bq, br):
+    q_lo = rng.integers(0, 60, (nq, l))
+    q_hi = q_lo + rng.integers(0, 6, (nq, l))
+    r_lo = rng.integers(0, 60, (nr, l))
+    r_hi = r_lo + rng.integers(0, 6, (nr, l))
+    qi, ri = range_join_pairs(q_lo, q_hi, r_lo, r_hi, block_q=bq, block_r=br)
+    ov = np.ones((nq, nr), bool)
+    for j in range(l):
+        ov &= (q_lo[:, j : j + 1] <= r_hi[None, :, j]) & (
+            r_lo[None, :, j] <= q_hi[:, j : j + 1]
+        )
+    wq, wr = np.nonzero(ov)
+    np.testing.assert_array_equal(qi, wq)
+    np.testing.assert_array_equal(ri, wr)
+
+
+def test_range_join_kernel_vs_ref_padded():
+    nq = nr = 256
+    l = 2
+    q = np.zeros((nq, 128), np.int32)
+    r = np.zeros((nr, 128), np.int32)
+    q[:, :l] = rng.integers(0, 30, (nq, l))
+    q[:, l : 2 * l] = q[:, :l] + rng.integers(0, 4, (nq, l))
+    r[:, :l] = rng.integers(0, 30, (nr, l))
+    r[:, l : 2 * l] = r[:, :l] + rng.integers(0, 4, (nr, l))
+    got = range_join_mask(
+        jnp.asarray(q), jnp.asarray(r), n_attrs=l, block_q=128, block_r=128,
+        interpret=True,
+    )
+    want = range_join_mask_ref(jnp.asarray(q), jnp.asarray(r), l)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_range_join_empty_inputs():
+    qi, ri = range_join_pairs(
+        np.zeros((0, 2)), np.zeros((0, 2)), np.zeros((5, 2)), np.ones((5, 2))
+    )
+    assert qi.size == 0 and ri.size == 0

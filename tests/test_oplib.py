@@ -1,0 +1,40 @@
+"""Every registry op: valid lineage, lossless compression, sane categories."""
+
+import numpy as np
+import pytest
+
+from repro.core.oplib import OPS, op_names
+from repro.core.provrc import compress
+
+
+def test_registry_size_and_split():
+    assert len(OPS) >= 120
+    el = sum(1 for s in OPS.values() if s.category == "element")
+    cx = sum(1 for s in OPS.values() if s.category == "complex")
+    assert el >= 70 and cx >= 45
+
+
+@pytest.mark.parametrize("name", op_names())
+def test_op_lossless(name):
+    spec = OPS[name]
+    rng = np.random.default_rng(0)
+    rels = spec.lineage(spec.shapes[0], rng)
+    assert rels, name
+    for _, rel in rels.items():
+        t = compress(rel, method="vector")
+        assert t.decompress() == rel, name
+
+
+@pytest.mark.parametrize("name", ["negative", "add", "matmul", "sum", "tile"])
+def test_structured_ops_compress_small(name):
+    spec = OPS[name]
+    rng = np.random.default_rng(0)
+    rels = spec.lineage(spec.shapes[0], rng)
+    for _, rel in rels.items():
+        t = compress(rel, method="vector")
+        assert t.n_rows <= 4
+
+
+def test_cross_is_flagged_pattern_dependent():
+    assert OPS["cross"].shape_pattern_dependent
+    assert not OPS["negative"].shape_pattern_dependent

@@ -1,0 +1,162 @@
+"""ProvRC compression: paper examples, losslessness (property-based),
+compression-quality guarantees on structured patterns, serialization."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.capture import (
+    conv1d_lineage,
+    identity_lineage,
+    matmul_lineage,
+    reduce_lineage,
+    softmax_lineage,
+    sort_lineage,
+    tile_lineage,
+)
+from repro.core.provrc import compress, compress_both
+from repro.core.relation import LineageRelation
+from repro.core.table import CompressedTable
+
+METHODS = ["paper", "vector"]
+
+
+# --------------------------------------------------------------------------- #
+# Paper worked examples
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("method", METHODS)
+def test_paper_fig1_sum_axis1(method):
+    """B = sum(A, axis=1) for A 3x2 (paper Fig 1 / Tables I-II)."""
+    rel = LineageRelation.from_pairs(
+        (3,), (3, 2), [((b,), (b, a)) for b in range(3) for a in range(2)]
+    )
+    t = compress(rel, "backward", method)
+    assert t.n_rows == 1
+    # key b spans [0, 2]; a0 is delta-0 relative to b; a1 is absolute [0, 1]
+    assert t.key_lo[0, 0] == 0 and t.key_hi[0, 0] == 2
+    assert t.val_ref[0, 0] == 0 and t.val_lo[0, 0] == 0 and t.val_hi[0, 0] == 0
+    assert t.val_ref[0, 1] == -1 and (t.val_lo[0, 1], t.val_hi[0, 1]) == (0, 1)
+    assert t.decompress() == rel
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_paper_fig2_aggregate_all(method):
+    """4x4 -> 1x1 all-to-all aggregation (paper Fig 2)."""
+    rel = LineageRelation.from_pairs(
+        (1,), (4, 4), [((0,), (i, j)) for i in range(4) for j in range(4)]
+    )
+    t = compress(rel, "backward", method)
+    assert t.n_rows == 1
+    assert t.decompress() == rel
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_paper_fig6_reshaping_base(method):
+    """1-D aggregate compresses to the single-row form Fig 6 generalizes."""
+    rel = LineageRelation.from_pairs((1,), (2,), [((0,), (0,)), ((0,), (1,))])
+    t = compress(rel, "backward", method)
+    assert t.n_rows == 1
+    assert (t.val_lo[0, 0], t.val_hi[0, 0]) == (0, 1)
+
+
+# --------------------------------------------------------------------------- #
+# Structured patterns: O(1)-row guarantees (paper Table VII structure)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("method", METHODS)
+def test_elementwise_one_row(method):
+    t = compress(identity_lineage((64, 32)), method=method)
+    assert t.n_rows == 1
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_matmul_constant_rows(method):
+    ra, rb = matmul_lineage(16, 12, 8)
+    for rel in (ra, rb):
+        t = compress(rel, method=method)
+        assert t.n_rows == 1
+        assert t.decompress() == rel
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_conv_constant_rows(method):
+    rel = conv1d_lineage(100, 5)
+    t = compress(rel, method=method)
+    assert t.n_rows == 1
+    assert t.decompress() == rel
+
+
+def test_reduce_softmax_tile_small():
+    # (relation, max rows): tile is piecewise-delta — one row per replica
+    cases = [
+        (reduce_lineage((12, 7), 0), 1),
+        (softmax_lineage((6, 9), -1), 1),
+        (tile_lineage((5, 4), (2, 3)), 6),
+    ]
+    for rel, max_rows in cases:
+        for method in METHODS:
+            t = compress(rel, method=method)
+            assert t.n_rows <= max_rows, (method, t.n_rows)
+            assert t.decompress() == rel
+
+
+def test_sort_incompressible():
+    """Sort is the paper's worst case: no contiguous patterns survive."""
+    rng = np.random.default_rng(0)
+    rel = sort_lineage(rng.random(128))
+    t = compress(rel, method="vector")
+    assert t.n_rows > 100  # essentially uncompressed
+    assert t.decompress() == rel
+
+
+def test_vector_not_worse_than_paper_greedy():
+    rng = np.random.default_rng(1)
+    for _ in range(10):
+        n = int(rng.integers(5, 80))
+        o = rng.integers(0, 6, (n, 2))
+        i = rng.integers(0, 6, (n, 2))
+        rel = LineageRelation((6, 6), (6, 6), o, i).canonical()
+        t_paper = compress(rel, method="paper")
+        t_vec = compress(rel, method="vector")
+        assert t_vec.n_rows <= t_paper.n_rows
+
+
+# --------------------------------------------------------------------------- #
+# Losslessness (property-based)
+# --------------------------------------------------------------------------- #
+@settings(max_examples=60, deadline=None)
+@given(
+    data=st.data(),
+    l=st.integers(1, 2),
+    m=st.integers(1, 2),
+    method=st.sampled_from(METHODS),
+)
+def test_lossless_roundtrip_random(data, l, m, method):
+    oshape = tuple(data.draw(st.integers(1, 5)) for _ in range(l))
+    ishape = tuple(data.draw(st.integers(1, 5)) for _ in range(m))
+    n = data.draw(st.integers(1, 40))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    o = np.stack([rng.integers(0, s, n) for s in oshape], axis=1)
+    i = np.stack([rng.integers(0, s, n) for s in ishape], axis=1)
+    rel = LineageRelation(oshape, ishape, o, i).canonical()
+    bwd, fwd = compress_both(rel, method=method)
+    assert bwd.decompress() == rel
+    assert fwd.decompress() == rel
+
+
+# --------------------------------------------------------------------------- #
+# Serialization
+# --------------------------------------------------------------------------- #
+def test_serialize_roundtrip():
+    rel = reduce_lineage((9, 5), 1)
+    t = compress(rel)
+    for compress_flag in (False, True):
+        blob = t.serialize(compress=compress_flag)
+        t2 = CompressedTable.deserialize(blob)
+        assert t2.decompress() == rel
+        assert t2.key_shape == t.key_shape and t2.direction == t.direction
+
+
+def test_packed_size_beats_raw():
+    rel = identity_lineage((1000,))
+    t = compress(rel)
+    assert t.nbytes() < rel.nbytes_raw() / 100

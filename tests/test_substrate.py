@@ -1,0 +1,163 @@
+"""Optimizer, gradient compression, data pipeline, checkpoint manager."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.optim.compress import (
+    ef_roundtrip,
+    int8_compress,
+    int8_decompress,
+    topk_compress,
+    topk_decompress,
+)
+
+
+# ----------------------------- optimizer ------------------------------ #
+def test_adamw_minimizes_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0, schedule="constant")
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw_init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(params, g, state, cfg)
+    assert float(loss(params)) < 1e-3
+    assert int(state["step"]) == 200
+
+
+def test_grad_clip_bounds_update():
+    cfg = AdamWConfig(lr=1.0, clip_norm=1.0, weight_decay=0.0, warmup_steps=0,
+                      schedule="constant")
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params)
+    g = {"w": jnp.array([1e6, 0.0, 0.0])}
+    _, state, metrics = adamw_update(params, g, state, cfg)
+    assert float(metrics["grad_norm"]) > 1e5  # reported unclipped
+    assert float(jnp.abs(state["m"]["w"]).max()) <= 1.0 + 1e-5  # clipped inside
+
+
+def test_schedule_shapes():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(cosine_schedule(jnp.float32(0.0), cfg)) == 0.0
+    assert abs(float(cosine_schedule(jnp.float32(10.0), cfg)) - 1.0) < 1e-6
+    assert float(cosine_schedule(jnp.float32(100.0), cfg)) < 1e-6
+
+
+# ------------------------ gradient compression ------------------------ #
+def test_int8_roundtrip_bounded_error():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=512).astype(np.float32))
+    q, s = int8_compress(x)
+    err = np.abs(np.asarray(int8_decompress(q, s) - x))
+    assert err.max() <= float(s) / 2 + 1e-6
+
+
+def test_topk_keeps_largest():
+    x = jnp.asarray([0.1, -5.0, 0.2, 4.0])
+    kept, idx, shape = topk_compress(x, 0.5)
+    back = topk_decompress(kept, idx, shape)
+    np.testing.assert_allclose(np.asarray(back), [0.0, -5.0, 0.0, 4.0])
+
+
+def test_error_feedback_unbiased_over_time():
+    """EF compensates: the *sum* of emitted approximations tracks the sum of
+    true gradients (bounded residual)."""
+    rng = np.random.default_rng(1)
+    err = jnp.zeros(64)
+    total_true = np.zeros(64)
+    total_sent = np.zeros(64)
+    for _ in range(50):
+        g = jnp.asarray(rng.normal(size=64).astype(np.float32)) * 0.01
+        sent, err = ef_roundtrip(g, err, scheme="topk", frac=0.1)
+        total_true += np.asarray(g)
+        total_sent += np.asarray(sent)
+    resid = np.abs(total_true - total_sent).max()
+    assert resid < 0.05  # residual stays bounded, not accumulating
+
+
+# ------------------------------ pipeline ------------------------------ #
+def test_pipeline_deterministic_and_elastic():
+    cfg = PipelineConfig(vocab=1000, seq_len=32, global_batch=8, seed=7)
+    full = TokenPipeline(cfg, data_shards=1, shard_id=0)
+    g0 = full.global_batch_tokens(0)
+    # identical global stream regardless of sharding (elasticity invariant)
+    shards = [TokenPipeline(cfg, data_shards=4, shard_id=k) for k in range(4)]
+    parts = np.concatenate([s.shard_slice(0) for s in shards], axis=0)
+    np.testing.assert_array_equal(g0, parts)
+    # deterministic across instances
+    again = TokenPipeline(cfg, data_shards=1, shard_id=0).global_batch_tokens(0)
+    np.testing.assert_array_equal(g0, again)
+    # different steps differ
+    assert not np.array_equal(g0, full.global_batch_tokens(1))
+
+
+def test_pipeline_state_roundtrip():
+    cfg = PipelineConfig(vocab=100, seq_len=8, global_batch=4)
+    p = TokenPipeline(cfg)
+    p.next_batch()
+    p.next_batch()
+    state = p.state_dict()
+    q = TokenPipeline(cfg)
+    q.load_state_dict(state)
+    np.testing.assert_array_equal(p.next_batch()["tokens"], q.next_batch()["tokens"])
+
+
+def test_pipeline_lineage_logged_and_queryable():
+    from repro.core.catalog import DSLog
+
+    log = DSLog()
+    cfg = PipelineConfig(vocab=100, seq_len=8, global_batch=4, n_source_rows=64)
+    p = TokenPipeline(cfg, data_shards=2, shard_id=0, dslog=log)
+    p.next_batch()
+    rows = p.source_rows_for_step(0)
+    # backward: shard row 1 of shard 0 came from global batch row 1 = doc rows[1]
+    res = log.prov_query(["shard_s0_k0", "batch_s0", "corpus"], np.array([[1, 3]]))
+    assert res.cell_set() == {(int(rows[1]), 3)}
+    # reuse: second step's shard_slice should hit dim_sig after confirmation
+    p.next_batch()
+    p.next_batch()
+    reused = [op.reused for op in log.ops if op.op_name == "shard_slice"]
+    assert reused[-1] == "dim"
+
+
+# ----------------------------- checkpoint ----------------------------- #
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones(4, jnp.bfloat16)}}
+    for step in (1, 2, 3):
+        mgr.save(step, tree, extra={"step": step})
+    assert mgr.latest_step() == 3
+    got, extra = mgr.restore()
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(tree["a"]))
+    assert got["b"]["c"].dtype == jnp.bfloat16
+    assert extra["step"] == 3
+    dirs = [d for d in os.listdir(tmp_path) if d.startswith("step_")]
+    assert len(dirs) == 2  # keep=2 GC'd step_1
+
+
+def test_checkpoint_async_and_pointer_atomicity(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save(5, {"x": jnp.zeros(3)}, extra={"step": 5})
+    mgr.wait()
+    assert mgr.latest_step() == 5
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_watchdog_fires_on_straggler():
+    import time
+
+    from repro.distributed.elastic import StepWatchdog
+
+    w = StepWatchdog(factor=1.0, floor_s=0.05)
+    for _ in range(5):
+        w.guard(lambda: time.sleep(0.01))
+    fired = []
+    w.guard(lambda: time.sleep(0.5), on_straggler=lambda dt, dl: fired.append(dt))
+    assert fired and w.fired == 1
