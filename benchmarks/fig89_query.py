@@ -20,7 +20,8 @@ import numpy as np
 
 from repro.core import capture as C
 from repro.core.catalog import DSLog
-from repro.core.query import QueryBox
+from repro.core.provrc import compress
+from repro.core.query import QueryBox, theta_join, theta_join_batch
 from repro.core.relation import LineageRelation
 
 from .baselines import (
@@ -30,7 +31,7 @@ from .baselines import (
     encode_rle_like,
 )
 
-__all__ = ["build_workflows", "run_fig89"]
+__all__ = ["build_workflows", "run_fig89", "run_index_ablation"]
 
 
 # --------------------------------------------------------------------------- #
@@ -220,4 +221,95 @@ def run_fig89(selectivities=(0.001, 0.01, 0.1), n_random: int = 6,
                     + " ".join(f"{m}={t*1e3:8.2f}ms" for m, t in timings.items()),
                     flush=True,
                 )
+    return rows
+
+
+# --------------------------------------------------------------------------- #
+# Indexed vs dense θ-join ablation (the query-engine routing heuristic)
+# --------------------------------------------------------------------------- #
+def _scatter_table(n_rows: int, seed: int = 0):
+    """A poorly-compressible (near one row per pair) table: the worst case
+    for the dense all-pairs join and the target case for the index."""
+    rng = np.random.default_rng(seed)
+    side = n_rows  # ~unique out cells, so compression cannot merge rows
+    o = np.stack([np.arange(n_rows), rng.integers(0, 64, n_rows)], axis=1)
+    i = np.stack([rng.permutation(n_rows)], axis=1)
+    rel = LineageRelation((side, 64), (side,), o, i).canonical()
+    return compress(rel)
+
+
+def run_index_ablation(
+    n_rows: int = 20_000,
+    selectivities=(0.0005, 0.001, 0.01),
+    n_queries: int = 16,
+    repeats: int = 3,
+    verbose: bool = True,
+):
+    """Time ``theta_join`` dense vs indexed (and the batched API) on one
+    large compressed table, at selectivities ≤1% of the key space.
+
+    Returns one record per selectivity with ``dense_s``, ``index_s`` (index
+    prebuilt — the amortized regime), ``index_cold_s`` (includes one index
+    build), ``batch_s``, and the dense/indexed speedup.
+    """
+    table = _scatter_table(n_rows)
+    key_side = table.key_shape[0]
+    rng = np.random.default_rng(1)
+    rows = []
+    for sel in selectivities:
+        k = max(1, int(key_side * sel))
+        queries = []
+        for _ in range(n_queries):
+            # k scattered key rows (≤ sel of the key space): stays k boxes
+            # after merging, so the dense join pays k × n_rows per query
+            picks = np.sort(rng.choice(key_side, size=k, replace=False))
+            lo = np.stack([picks, np.zeros(k, np.int64)], axis=1)
+            hi = np.stack([picks, np.full(k, 63, np.int64)], axis=1)
+            queries.append(QueryBox(table.key_shape, lo, hi))
+
+        def time_of(fn, n=repeats):
+            best = float("inf")
+            for _ in range(n):
+                t0 = time.perf_counter()
+                fn()
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+        dense_s = time_of(
+            lambda: [theta_join(q, table, path="dense") for q in queries]
+        )
+        table.invalidate_index()
+        index_cold_s = time_of(
+            lambda: [theta_join(q, table, path="index") for q in queries], n=1
+        )
+        index_s = time_of(
+            lambda: [theta_join(q, table, path="index") for q in queries]
+        )
+        batch_s = time_of(lambda: theta_join_batch(queries, table, path="index"))
+        # routing sanity: auto must pick the fast side for selective queries
+        auto_s = time_of(lambda: [theta_join(q, table) for q in queries])
+        for q in queries[:2]:
+            assert (
+                theta_join(q, table, path="index").cell_set()
+                == theta_join(q, table, path="dense").cell_set()
+            )
+        rec = {
+            "n_rows": table.n_rows,
+            "selectivity": sel,
+            "dense_s": dense_s,
+            "index_cold_s": index_cold_s,
+            "index_s": index_s,
+            "batch_s": batch_s,
+            "auto_s": auto_s,
+            "speedup": dense_s / index_s if index_s > 0 else float("inf"),
+        }
+        rows.append(rec)
+        if verbose:
+            print(
+                f"  index_ablation n_rows={table.n_rows} sel={sel:7.4f} "
+                f"dense={dense_s*1e3:8.2f}ms index={index_s*1e3:8.2f}ms "
+                f"batch={batch_s*1e3:8.2f}ms auto={auto_s*1e3:8.2f}ms "
+                f"speedup={rec['speedup']:5.1f}x",
+                flush=True,
+            )
     return rows

@@ -57,6 +57,18 @@ def bench_fig89(quick: bool) -> None:
                   t * 1e6, "")
 
 
+def bench_index(quick: bool) -> None:
+    from .fig89_query import run_index_ablation
+
+    print("# Indexed vs dense θ-join (selective queries, large table)",
+          flush=True)
+    rows = run_index_ablation(n_rows=10_000 if quick else 20_000)
+    for r in rows:
+        for m in ("dense_s", "index_cold_s", "index_s", "batch_s", "auto_s"):
+            _emit(f"index/n{r['n_rows']}/sel{r['selectivity']}/{m[:-2]}",
+                  r[m] * 1e6, f"speedup_x={r['speedup']:.1f}")
+
+
 def bench_table9(quick: bool) -> None:
     from .table9_coverage import run_table9
 
@@ -110,6 +122,7 @@ BENCHES = {
     "table7": bench_table7,
     "fig7": bench_fig7,
     "fig89": bench_fig89,
+    "index": bench_index,
     "table9": bench_table9,
     "roofline": bench_roofline,
     "kernels": bench_kernels,

@@ -1,10 +1,10 @@
-"""Fault-tolerant checkpointing: atomic, versioned, zstd-compressed, with
+"""Fault-tolerant checkpointing: atomic, versioned, compressed, with
 cross-mesh (elastic) restore.
 
 Layout::
 
-    <root>/step_00000420/manifest.json     # tree structure + dtypes/shapes
-    <root>/step_00000420/arrays.bin.zst    # concatenated raw buffers
+    <root>/step_00000420/manifest.json     # tree structure + dtypes/shapes + codec
+    <root>/step_00000420/arrays.bin.zst    # concatenated raw buffers (or .zlib)
     <root>/LATEST                          # atomic pointer file
 
 Writes go to ``<dir>.tmp`` then ``os.replace`` — a crash mid-save can never
@@ -12,6 +12,12 @@ corrupt the pointer or a previous checkpoint.  ``restore`` takes an optional
 ``(mesh, spec_tree)`` so a checkpoint written on one mesh restores onto a
 differently-shaped mesh (elastic scaling): arrays are saved unsharded
 (gathered), and resharding happens at ``device_put`` time.
+
+The compression codec is pluggable: ``zstandard`` when installed (fast,
+better ratio), stdlib ``zlib`` otherwise.  The codec used at save time is
+recorded in the manifest, so checkpoints round-trip across environments with
+and without ``zstandard`` — restore only fails if a ``zstd`` checkpoint is
+opened where ``zstandard`` is genuinely missing.
 """
 
 from __future__ import annotations
@@ -20,12 +26,49 @@ import json
 import os
 import shutil
 import threading
+import zlib
 
 import jax
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ImportError:  # pragma: no cover - depends on environment
+    zstd = None
 
 __all__ = ["CheckpointManager"]
+
+_CODEC_EXT = {"zstd": "zst", "zlib": "zlib"}
+
+
+def _default_codec() -> str:
+    return "zstd" if zstd is not None else "zlib"
+
+
+def _compress_stream(codec: str, f, chunks) -> None:
+    if codec == "zstd":
+        with zstd.ZstdCompressor(level=3).stream_writer(f) as w:
+            for c in chunks:
+                w.write(c)
+    elif codec == "zlib":
+        co = zlib.compressobj(6)
+        for c in chunks:
+            f.write(co.compress(c))
+        f.write(co.flush())
+    else:
+        raise ValueError(f"unknown checkpoint codec {codec!r}")
+
+
+def _decompress_bytes(codec: str, f) -> bytes:
+    if codec == "zstd":
+        if zstd is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but zstandard is not installed"
+            )
+        return zstd.ZstdDecompressor().stream_reader(f).read()
+    if codec == "zlib":
+        return zlib.decompress(f.read())
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _flatten(tree, prefix=""):
@@ -89,15 +132,20 @@ class CheckpointManager:
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        manifest = {"step": step, "extra": extra, "arrays": []}
-        cctx = zstd.ZstdCompressor(level=3)
-        with open(os.path.join(tmp, "arrays.bin.zst"), "wb") as f:
-            with cctx.stream_writer(f) as w:
-                for k, a in host.items():
-                    manifest["arrays"].append(
-                        {"path": k, "dtype": str(a.dtype), "shape": list(a.shape)}
-                    )
-                    w.write(np.ascontiguousarray(a).tobytes())
+        codec = _default_codec()
+        fn = f"arrays.bin.{_CODEC_EXT[codec]}"
+        manifest = {"step": step, "extra": extra, "codec": codec, "file": fn,
+                    "arrays": []}
+        for k, a in host.items():
+            manifest["arrays"].append(
+                {"path": k, "dtype": str(a.dtype), "shape": list(a.shape)}
+            )
+        with open(os.path.join(tmp, fn), "wb") as f:
+            _compress_stream(
+                codec,
+                f,
+                (np.ascontiguousarray(a).tobytes() for a in host.values()),
+            )
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         if os.path.exists(final):
@@ -138,9 +186,11 @@ class CheckpointManager:
         d = self._dir(step)
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
-        dctx = zstd.ZstdDecompressor()
-        with open(os.path.join(d, "arrays.bin.zst"), "rb") as f:
-            raw = dctx.stream_reader(f).read()
+        # pre-codec checkpoints have no codec/file fields and are always zstd
+        codec = manifest.get("codec", "zstd")
+        fn = manifest.get("file", "arrays.bin.zst")
+        with open(os.path.join(d, fn), "rb") as f:
+            raw = _decompress_bytes(codec, f)
         flat = {}
         off = 0
         for rec in manifest["arrays"]:

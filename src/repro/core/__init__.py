@@ -8,12 +8,14 @@ In-Situ Query Processing for Fine-Grained Array Lineage").  Public API:
 
 from .capture import capture_jacobian  # noqa: F401
 from .catalog import ArrayDef, DSLog, LineageEntry  # noqa: F401
+from .index import IntervalIndex  # noqa: F401
 from .provrc import compress, compress_both  # noqa: F401
 from .query import (  # noqa: F401
     QueryBox,
     merge_boxes,
     query_path,
     theta_join,
+    theta_join_batch,
     theta_join_inverse,
 )
 from .relation import LineageRelation  # noqa: F401

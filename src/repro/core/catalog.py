@@ -25,8 +25,14 @@ from typing import Any, Callable
 
 import numpy as np
 
+from .index import IntervalIndex
 from .provrc import compress
-from .query import QueryBox, merge_boxes, theta_join, theta_join_inverse
+from .query import (
+    QueryBox,
+    merge_boxes,
+    theta_join_batch,
+    theta_join_inverse,
+)
 from .relation import LineageRelation
 from .reuse import (
     ReusePredictor,
@@ -37,6 +43,11 @@ from .reuse import (
 from .table import CompressedTable
 
 __all__ = ["DSLog", "ArrayDef", "LineageEntry"]
+
+# Tables at or above this row count get their key index built and persisted
+# at save time, so a reloaded catalog serves its first selective query
+# without paying the O(n log n) sort.
+_INDEX_PERSIST_MIN_ROWS = 4096
 
 
 @dataclass
@@ -237,48 +248,76 @@ class DSLog:
         query_cells: "np.ndarray | QueryBox",
         merge: bool = True,
     ) -> QueryBox:
-        """Lineage between cells of ``path[0]`` and cells of ``path[-1]``."""
+        """Lineage between cells of ``path[0]`` and cells of ``path[-1]``.
+
+        Single-query form of :meth:`prov_query_batch` (one hop-dispatch
+        implementation serves both).
+        """
+        return self.prov_query_batch(path, [query_cells], merge)[0]
+
+    def prov_query_batch(
+        self,
+        path: list[str],
+        queries: "list[np.ndarray | QueryBox]",
+        merge: bool = True,
+    ) -> list[QueryBox]:
+        """Answer many independent queries over the same array path.
+
+        Hops whose stored materialization matches the query direction are
+        executed with :func:`theta_join_batch`, so identical boxes across the
+        in-flight queries share one index probe and every hop's interval
+        index is built (and cached on the table) at most once for the whole
+        batch.  Hops that must run through the inverse join fall back to a
+        per-query loop — still index-pruned, still cache-warm.
+        """
         if len(path) < 2:
             raise ValueError("path needs at least two arrays")
+        if not queries:
+            return []
         first = self.arrays[path[0]]
-        q = (
-            query_cells
-            if isinstance(query_cells, QueryBox)
-            else QueryBox.from_cells(first.shape, np.asarray(query_cells))
-        )
+        cur: list[QueryBox] = [
+            q if isinstance(q, QueryBox) else QueryBox.from_cells(first.shape, q)
+            for q in queries
+        ]
         if merge:
-            # encode Q' like the tables: range-merge the queried cells (§V.B)
-            q = merge_boxes(q)
+            cur = [merge_boxes(q) for q in cur]
         for a, b in zip(path[:-1], path[1:]):
-            q = self._query_hop(q, a, b, merge)
-        return q
+            cur = self._query_hop_batch(cur, a, b, merge)
+        return cur
 
-    def _query_hop(self, q: QueryBox, a: str, b: str, merge: bool) -> QueryBox:
-        boxes_lo, boxes_hi = [], []
+    def _query_hop_batch(
+        self, qs: list[QueryBox], a: str, b: str, merge: bool
+    ) -> list[QueryBox]:
+        acc_lo: list[list[np.ndarray]] = [[] for _ in qs]
+        acc_hi: list[list[np.ndarray]] = [[] for _ in qs]
         shape_out: tuple[int, ...] | None = None
+
+        def fold(results: list[QueryBox]) -> None:
+            nonlocal shape_out
+            for k, r in enumerate(results):
+                acc_lo[k].append(r.lo)
+                acc_hi[k].append(r.hi)
+                shape_out = r.shape
+
         # backward direction: a is an op OUTPUT, b the op input
         for lid in self.by_pair.get((b, a), []):
-            e = self.lineage[lid]
-            res = theta_join(q, e.backward, merge=False)
-            boxes_lo.append(res.lo)
-            boxes_hi.append(res.hi)
-            shape_out = res.shape
+            fold(theta_join_batch(qs, self.lineage[lid].backward, merge=False))
         # forward direction: a is an op INPUT, b the op output
         for lid in self.by_pair.get((a, b), []):
             e = self.lineage[lid]
             if e.forward is not None:
-                res = theta_join(q, e.forward, merge=False)
+                fold(theta_join_batch(qs, e.forward, merge=False))
             else:
-                res = theta_join_inverse(q, e.backward, merge=False)
-            boxes_lo.append(res.lo)
-            boxes_hi.append(res.hi)
-            shape_out = res.shape
+                fold([theta_join_inverse(q, e.backward, merge=False) for q in qs])
         if shape_out is None:
             raise KeyError(f"no lineage stored between {a!r} and {b!r}")
-        res = QueryBox(
-            shape_out, np.concatenate(boxes_lo), np.concatenate(boxes_hi)
-        )
-        return merge_boxes(res) if merge else res
+        out = []
+        for k in range(len(qs)):
+            res = QueryBox(
+                shape_out, np.concatenate(acc_lo[k]), np.concatenate(acc_hi[k])
+            )
+            out.append(merge_boxes(res) if merge else res)
+        return out
 
     # ------------------------------------------------------------------ #
     # Persistence
@@ -303,15 +342,49 @@ class DSLog:
                 "op": e.op_name,
                 "reused": e.reused_from,
                 "fwd": None,
+                "idx": None,
+                "fwd_idx": None,
             }
+            rec["idx"] = self._save_index(e.backward, f"lineage_{e.lineage_id}.idx")
             if e.forward is not None:
                 fwd_fn = f"lineage_{e.lineage_id}_fwd.prvc"
                 with open(os.path.join(self.root, fwd_fn), "wb") as f:
                     f.write(e.forward.serialize(compress=self.gzip))
                 rec["fwd"] = fwd_fn
+                rec["fwd_idx"] = self._save_index(
+                    e.forward, f"lineage_{e.lineage_id}_fwd.idx"
+                )
             meta["lineage"].append(rec)
         with open(os.path.join(self.root, "catalog.json"), "w") as f:
             json.dump(meta, f)
+
+    def _save_index(self, table: CompressedTable, fn: str) -> str | None:
+        """Persist the key index next to its table: already-built indexes are
+        always written; large tables get one built eagerly so reloads start
+        warm.  Small, index-less tables write nothing (dense is fine)."""
+        assert self.root is not None
+        cached = table.cached_key_index()
+        if cached is None and table.n_rows < _INDEX_PERSIST_MIN_ROWS:
+            return None
+        idx = cached if cached is not None else table.key_index()
+        with open(os.path.join(self.root, fn), "wb") as f:
+            f.write(idx.to_bytes())
+        return fn
+
+    @staticmethod
+    def _load_index(root: str, fn: str | None, table: CompressedTable) -> None:
+        if not fn:
+            return
+        path = os.path.join(root, fn)
+        if not os.path.exists(path):
+            return
+        try:
+            with open(path, "rb") as f:
+                table.attach_key_index(
+                    IntervalIndex.from_bytes(f.read(), table.key_lo, table.key_hi)
+                )
+        except ValueError:
+            pass  # stale sidecar: fall back to lazy rebuild
 
     @staticmethod
     def load(root: str) -> "DSLog":
@@ -323,10 +396,12 @@ class DSLog:
         for rec in meta["lineage"]:
             with open(os.path.join(root, rec["file"]), "rb") as f:
                 bwd = CompressedTable.deserialize(f.read())
+            DSLog._load_index(root, rec.get("idx"), bwd)
             fwd = None
             if rec["fwd"]:
                 with open(os.path.join(root, rec["fwd"]), "rb") as f:
                     fwd = CompressedTable.deserialize(f.read())
+                DSLog._load_index(root, rec.get("fwd_idx"), fwd)
             e = LineageEntry(
                 rec["id"], rec["src"], rec["dst"], bwd, fwd, rec["op"], rec["reused"]
             )

@@ -21,19 +21,54 @@ projection onto the next hop's attributes and adjacent-interval row merging
 ``theta_join_inverse`` additionally answers a query against a table
 materialized in the *opposite* direction (the paper's ``rel_for``), so a
 deployment that stores only backward tables can still serve forward queries.
+
+Join execution (``path`` parameter, default ``"auto"``)
+-------------------------------------------------------
+* ``"index"`` — sorted candidate pruning via the per-table
+  :class:`~repro.core.index.IntervalIndex` (lazily built, cached on the
+  table, persisted by the catalog).  Work is proportional to the most
+  selective attribute's candidate window, not ``nq × nr``.
+* ``"dense"`` — the all-pairs overlap matrix, evaluated in blocks (numpy),
+  or on TPU via the Pallas ``range_join_mask`` kernel.  Right for small
+  tables and unselective queries, where index probes buy nothing.
+* ``"auto"`` — dense for tables under ``_INDEX_MIN_ROWS`` rows; otherwise
+  probe the index for a candidate estimate and fall back to dense when the
+  estimated candidate fraction exceeds ``_DENSE_FRACTION`` (the probe work
+  is two binary searches per query row per attribute — negligible).
+
+``theta_join_batch`` answers many :class:`QueryBox`es against one table in a
+single pass: the union of all query rows is deduplicated, each distinct box
+probes the index exactly once, and the per-pair outputs are scattered back to
+their owning queries.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Sequence
 
 import numpy as np
 
+from .index import IntervalIndex, ragged_ranges
 from .intervals import coalesce_1d, lexsort_rows
 from .provrc import _group_ids
 from .table import CompressedTable
 
-__all__ = ["QueryBox", "theta_join", "theta_join_inverse", "query_path", "merge_boxes"]
+__all__ = [
+    "QueryBox",
+    "theta_join",
+    "theta_join_inverse",
+    "theta_join_batch",
+    "query_path",
+    "merge_boxes",
+]
+
+# Routing thresholds for path="auto" (see module docstring / README).
+_INDEX_MIN_ROWS = 1024
+_DENSE_FRACTION = 0.25
+# Hand the dense path to the Pallas kernel only when a real accelerator is
+# attached; in interpret mode the blocked numpy evaluation is faster.
+_KERNEL_MIN_PAIRS = 1 << 20
 
 
 @dataclass
@@ -107,6 +142,107 @@ class QueryBox:
 
 
 # --------------------------------------------------------------------------- #
+# Range-join pair enumeration (indexed / dense routing)
+# --------------------------------------------------------------------------- #
+def _dense_pairs(
+    q_lo: np.ndarray,
+    q_hi: np.ndarray,
+    r_lo: np.ndarray,
+    r_hi: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray]:
+    """All-pairs overlap join, blocked to bound the pair matrix."""
+    nq, l = q_lo.shape
+    nr = r_lo.shape[0]
+    if nq * nr >= _KERNEL_MIN_PAIRS:
+        pairs = _kernel_pairs(q_lo, q_hi, r_lo, r_hi)
+        if pairs is not None:
+            return pairs
+    qi_list, ri_list = [], []
+    block = max(1, int(4_000_000 // max(nr, 1)))
+    for s in range(0, nq, block):
+        e = min(nq, s + block)
+        ov = np.ones((e - s, nr), dtype=bool)
+        for j in range(l):
+            ov &= (q_lo[s:e, j : j + 1] <= r_hi[None, :, j]) & (
+                r_lo[None, :, j] <= q_hi[s:e, j : j + 1]
+            )
+        qi, ri = np.nonzero(ov)
+        qi_list.append(qi + s)
+        ri_list.append(ri)
+    qi = np.concatenate(qi_list) if qi_list else np.zeros(0, np.int64)
+    ri = np.concatenate(ri_list) if ri_list else np.zeros(0, np.int64)
+    return qi, ri
+
+
+def _kernel_pairs(q_lo, q_hi, r_lo, r_hi):
+    """Pallas ``range_join_mask`` dense fallback — only off interpret mode.
+
+    Returns ``None`` when the kernel path is unavailable or not worthwhile
+    (no accelerator, too many attributes for one tile, jax missing), so the
+    caller falls through to blocked numpy.  Genuine kernel failures on an
+    accelerator propagate — silently degrading to numpy would hide them.
+    """
+    try:
+        from repro.kernels.ops import LANES, default_interpret, range_join_pairs
+    except ImportError:
+        return None
+    if default_interpret() or 2 * q_lo.shape[1] > LANES:
+        return None
+    return range_join_pairs(q_lo, q_hi, r_lo, r_hi)
+
+
+def _route_pairs(
+    q_lo: np.ndarray,
+    q_hi: np.ndarray,
+    r_lo: np.ndarray,
+    r_hi: np.ndarray,
+    index_get,
+    path: str,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pick indexed vs dense execution for one range join.
+
+    ``index_get`` is a zero-arg callable returning the (cached)
+    :class:`IntervalIndex` — deferred so the dense route never builds one.
+    """
+    if path not in ("auto", "index", "dense"):
+        raise ValueError(f"unknown join path {path!r}")
+    nq, nr = q_lo.shape[0], r_lo.shape[0]
+    if nq == 0 or nr == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    if path == "dense":
+        return _dense_pairs(q_lo, q_hi, r_lo, r_hi)
+    if path == "auto" and nr < _INDEX_MIN_ROWS:
+        return _dense_pairs(q_lo, q_hi, r_lo, r_hi)
+    index: IntervalIndex = index_get()
+    windows = None
+    if path == "auto" and index.n_attrs:
+        windows = index.probe_windows(q_lo, q_hi)  # one probe pass, reused below
+        est = index.estimate_candidates(q_lo, q_hi, windows)
+        if est > _DENSE_FRACTION * nq * nr:
+            return _dense_pairs(q_lo, q_hi, r_lo, r_hi)
+    return index.candidate_pairs(q_lo, q_hi, windows)
+
+
+def _derelativize(
+    table: CompressedTable,
+    qi: np.ndarray,
+    ri: np.ndarray,
+    inter_lo: np.ndarray,
+    inter_hi: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Step 2 of the θ-join (§V.B.2) over an explicit pair list."""
+    out_lo = table.val_lo[ri].copy()  # [P, m]
+    out_hi = table.val_hi[ri].copy()
+    ref = table.val_ref[ri]
+    for j in range(table.n_key):
+        sel = ref == j  # [P, m] mask of attrs relative to key j
+        if sel.any():
+            out_lo[sel] += np.broadcast_to(inter_lo[:, j : j + 1], sel.shape)[sel]
+            out_hi[sel] += np.broadcast_to(inter_hi[:, j : j + 1], sel.shape)[sel]
+    return out_lo, out_hi
+
+
+# --------------------------------------------------------------------------- #
 # θ-join
 # --------------------------------------------------------------------------- #
 def theta_join(
@@ -114,6 +250,7 @@ def theta_join(
     table: CompressedTable,
     merge: bool = True,
     max_rows: int | None = None,
+    path: str = "auto",
 ) -> QueryBox:
     """One hop: query over the table's *key* side, returning value-side boxes."""
     if q.shape != table.key_shape:
@@ -122,26 +259,15 @@ def theta_join(
         )
     if table.is_symbolic:
         raise ValueError("instantiate symbolic table before querying")
-    l, m = table.n_key, table.n_val
+    m = table.n_val
     nq, nr = q.n_rows, table.n_rows
     if nq == 0 or nr == 0:
         return QueryBox(table.val_shape, np.zeros((0, m)), np.zeros((0, m)))
 
-    # ---- Step 1: range join (blocked to bound the pair matrix) ---------- #
-    qi_list, ri_list = [], []
-    block = max(1, int(4_000_000 // max(nr, 1)))
-    for s in range(0, nq, block):
-        e = min(nq, s + block)
-        ov = np.ones((e - s, nr), dtype=bool)
-        for j in range(l):
-            ov &= (q.lo[s:e, j : j + 1] <= table.key_hi[None, :, j]) & (
-                table.key_lo[None, :, j] <= q.hi[s:e, j : j + 1]
-            )
-        qi, ri = np.nonzero(ov)
-        qi_list.append(qi + s)
-        ri_list.append(ri)
-    qi = np.concatenate(qi_list) if qi_list else np.zeros(0, np.int64)
-    ri = np.concatenate(ri_list) if ri_list else np.zeros(0, np.int64)
+    # ---- Step 1: range join --------------------------------------------- #
+    qi, ri = _route_pairs(
+        q.lo, q.hi, table.key_lo, table.key_hi, table.key_index, path
+    )
     if max_rows is not None and qi.size > max_rows:
         raise RuntimeError(f"θ-join intermediate exceeded max_rows={max_rows}")
     if qi.size == 0:
@@ -151,21 +277,39 @@ def theta_join(
     inter_hi = np.minimum(q.hi[qi], table.key_hi[ri])
 
     # ---- Step 2: de-relativize ------------------------------------------ #
-    out_lo = table.val_lo[ri].copy()  # [P, m]
-    out_hi = table.val_hi[ri].copy()
-    ref = table.val_ref[ri]
-    for j in range(l):
-        sel = ref == j  # [P, m] mask of attrs relative to key j
-        if sel.any():
-            out_lo[sel] += np.broadcast_to(inter_lo[:, j : j + 1], sel.shape)[sel]
-            out_hi[sel] += np.broadcast_to(inter_hi[:, j : j + 1], sel.shape)[sel]
-
+    out_lo, out_hi = _derelativize(table, qi, ri, inter_lo, inter_hi)
     res = QueryBox(table.val_shape, out_lo, out_hi)
     return merge_boxes(res) if merge else res
 
 
+def _inverse_key_boxes(
+    q: QueryBox, table: CompressedTable, qi: np.ndarray, ri: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-pair key intervals for the inverse join, plus the validity mask.
+
+    The per-attribute overlap that produced the candidate pairs is necessary
+    but not sufficient: two value attrs referencing the *same* key attribute
+    constrain it jointly, so the intersection must be re-checked per pair.
+    """
+    l, m = table.n_key, table.n_val
+    key_lo = table.key_lo[ri].astype(np.int64)  # [P, l]
+    key_hi = table.key_hi[ri].astype(np.int64)
+    for i in range(m):
+        refs = table.val_ref[ri, i]  # [P]
+        for j in range(l):
+            jm = refs == j
+            if not jm.any():
+                continue
+            cand_lo = q.lo[qi[jm], i] - table.val_hi[ri[jm], i]
+            cand_hi = q.hi[qi[jm], i] - table.val_lo[ri[jm], i]
+            key_lo[jm, j] = np.maximum(key_lo[jm, j], cand_lo)
+            key_hi[jm, j] = np.minimum(key_hi[jm, j], cand_hi)
+    valid = np.all(key_lo <= key_hi, axis=1)
+    return key_lo, key_hi, valid
+
+
 def theta_join_inverse(
-    q: QueryBox, table: CompressedTable, merge: bool = True
+    q: QueryBox, table: CompressedTable, merge: bool = True, path: str = "auto"
 ) -> QueryBox:
     """Query over the table's *value* side, returning key-side boxes.
 
@@ -173,44 +317,95 @@ def theta_join_inverse(
     ``j`` the constraint ``val = key_j + δ, δ ∈ [dlo, dhi]`` inverts to
     ``key_j ∈ [q_lo − dhi, q_hi − dlo]``, clamped by the stored key interval
     (the ``r.x`` term in the paper's formula).
+
+    Candidate pruning runs over the table's *achievable value bounds*
+    (``[key_lo_j + dlo, key_hi_j + dhi]`` for relative attrs, the stored
+    interval for absolute ones): a row can contribute iff the query box
+    overlaps those bounds on every value attribute, which is exactly the
+    range-join predicate — so the same index machinery applies.
     """
     if q.shape != table.val_shape:
         raise ValueError(
             f"query shape {q.shape} does not match table val shape {table.val_shape}"
         )
-    l, m = table.n_key, table.n_val
+    if table.is_symbolic:
+        raise ValueError("instantiate symbolic table before querying")
+    l = table.n_key
     nq, nr = q.n_rows, table.n_rows
     if nq == 0 or nr == 0:
         return QueryBox(table.key_shape, np.zeros((0, l)), np.zeros((0, l)))
 
-    # Candidate key intervals per (query row, table row), then prune empties.
-    key_lo = np.broadcast_to(table.key_lo[None, :, :], (nq, nr, l)).copy()
-    key_hi = np.broadcast_to(table.key_hi[None, :, :], (nq, nr, l)).copy()
-    valid = np.ones((nq, nr), dtype=bool)
-    for i in range(m):
-        refs = table.val_ref[:, i]  # [nr]
-        vlo, vhi = table.val_lo[:, i], table.val_hi[:, i]
-        qlo, qhi = q.lo[:, i : i + 1], q.hi[:, i : i + 1]  # [nq,1]
-        abs_mask = refs == -1
-        if abs_mask.any():
-            ov = (qlo <= vhi[None, :]) & (vlo[None, :] <= qhi)
-            valid &= np.where(abs_mask[None, :], ov, True)
-        for j in range(l):
-            jm = refs == j
-            if not jm.any():
-                continue
-            cand_lo = qlo - vhi[None, :]  # [nq, nr]
-            cand_hi = qhi - vlo[None, :]
-            key_lo[:, :, j] = np.where(
-                jm[None, :], np.maximum(key_lo[:, :, j], cand_lo), key_lo[:, :, j]
-            )
-            key_hi[:, :, j] = np.where(
-                jm[None, :], np.minimum(key_hi[:, :, j], cand_hi), key_hi[:, :, j]
-            )
-    valid &= np.all(key_lo <= key_hi, axis=2)
-    qi, ri = np.nonzero(valid)
-    res = QueryBox(table.key_shape, key_lo[qi, ri], key_hi[qi, ri])
+    vb_lo, vb_hi = table.value_bounds()
+    qi, ri = _route_pairs(q.lo, q.hi, vb_lo, vb_hi, table.val_index, path)
+    if qi.size == 0:
+        return QueryBox(table.key_shape, np.zeros((0, l)), np.zeros((0, l)))
+    key_lo, key_hi, valid = _inverse_key_boxes(q, table, qi, ri)
+    res = QueryBox(table.key_shape, key_lo[valid], key_hi[valid])
     return merge_boxes(res) if merge else res
+
+
+# --------------------------------------------------------------------------- #
+# Batched multi-query θ-join
+# --------------------------------------------------------------------------- #
+def theta_join_batch(
+    queries: Sequence[QueryBox],
+    table: CompressedTable,
+    merge: bool = True,
+    path: str = "auto",
+) -> list[QueryBox]:
+    """Answer many queries against one table in a single pass.
+
+    All query rows are pooled and deduplicated, so a box shared by several
+    queries probes the index (or the dense matrix) exactly once; the pair
+    outputs are computed once per *distinct* (box, table row) pair and then
+    scattered back to the owning queries.
+    """
+    if table.is_symbolic:
+        raise ValueError("instantiate symbolic table before querying")
+    for q in queries:
+        if q.shape != table.key_shape:
+            raise ValueError(
+                f"query shape {q.shape} does not match table key shape "
+                f"{table.key_shape}"
+            )
+    m = table.n_val
+    empty = lambda: QueryBox(table.val_shape, np.zeros((0, m)), np.zeros((0, m)))
+    if not queries:
+        return []
+    counts = np.array([q.n_rows for q in queries], np.int64)
+    if counts.sum() == 0 or table.n_rows == 0:
+        return [empty() for _ in queries]
+
+    all_lo = np.concatenate([q.lo for q in queries], axis=0)
+    all_hi = np.concatenate([q.hi for q in queries], axis=0)
+    uniq, inv = np.unique(
+        np.concatenate([all_lo, all_hi], axis=1), axis=0, return_inverse=True
+    )
+    inv = inv.reshape(-1)  # numpy 2.1 returned keepdims-shaped inverse
+    nd = all_lo.shape[1]
+    u_lo, u_hi = uniq[:, :nd], uniq[:, nd:]
+
+    ui, ri = _route_pairs(
+        u_lo, u_hi, table.key_lo, table.key_hi, table.key_index, path
+    )
+    inter_lo = np.maximum(u_lo[ui], table.key_lo[ri])
+    inter_hi = np.minimum(u_hi[ui], table.key_hi[ri])
+    out_lo, out_hi = _derelativize(table, ui, ri, inter_lo, inter_hi)
+
+    # Group pairs by distinct query row, then scatter to owners.
+    perm = np.argsort(ui, kind="stable")
+    pair_counts = np.bincount(ui, minlength=u_lo.shape[0]).astype(np.int64)
+    pair_offsets = np.cumsum(pair_counts) - pair_counts
+    results: list[QueryBox] = []
+    row_off = 0
+    for q in queries:
+        ids = inv[row_off : row_off + q.n_rows]
+        row_off += q.n_rows
+        _, pos = ragged_ranges(pair_offsets[ids], pair_offsets[ids] + pair_counts[ids])
+        sel = perm[pos]
+        res = QueryBox(table.val_shape, out_lo[sel], out_hi[sel])
+        results.append(merge_boxes(res) if merge else res)
+    return results
 
 
 # --------------------------------------------------------------------------- #
@@ -256,12 +451,17 @@ def query_path(
     q: QueryBox,
     hops: list[tuple[CompressedTable, bool]],
     merge: bool = True,
+    path: str = "auto",
 ) -> QueryBox:
     """Left-to-right plan over ``(table, inverse)`` hops (paper §V.B.3).
 
     ``inverse=False`` means the query side matches the table's keys
     (the natural direction for that materialization); ``inverse=True``
     uses ``theta_join_inverse``.
+
+    Each hop's interval index is cached on its table, so a multi-hop plan
+    (and any later plan revisiting the same tables) pays the index build at
+    most once per table, not once per hop execution.
     """
     # Q' is encoded in the same compressed format as the tables (§V.B):
     # merging the query cells into boxes up front is what keeps the first
@@ -269,8 +469,8 @@ def query_path(
     cur = merge_boxes(q) if merge else q
     for table, inverse in hops:
         cur = (
-            theta_join_inverse(cur, table, merge=merge)
+            theta_join_inverse(cur, table, merge=merge, path=path)
             if inverse
-            else theta_join(cur, table, merge=merge)
+            else theta_join(cur, table, merge=merge, path=path)
         )
     return cur

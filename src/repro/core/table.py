@@ -37,11 +37,19 @@ from dataclasses import dataclass, field, replace
 
 import numpy as np
 
+from .index import IntervalIndex
 from .relation import LineageRelation
 
 __all__ = ["CompressedTable"]
 
 _MAGIC = b"PRVC1\n"
+
+# Reassigning any of these drops the cached interval indexes (see
+# ``CompressedTable.__setattr__``); for *in-place* ndarray mutation call
+# ``invalidate_index()`` explicitly.
+_ARRAY_FIELDS = frozenset(
+    {"key_lo", "key_hi", "val_lo", "val_hi", "val_ref", "key_sym", "val_sym"}
+)
 
 
 def _pack_array(a: np.ndarray) -> np.ndarray:
@@ -83,6 +91,11 @@ class CompressedTable:
         if self.direction not in ("backward", "forward"):
             raise ValueError(f"bad direction {self.direction!r}")
 
+    def __setattr__(self, name: str, value) -> None:
+        if name in _ARRAY_FIELDS:
+            self.__dict__.pop("_index_cache", None)
+        object.__setattr__(self, name, value)
+
     # ------------------------------------------------------------------ #
     @property
     def n_rows(self) -> int:
@@ -113,6 +126,71 @@ class CompressedTable:
             key_sym=self.key_sym[rows],
             val_sym=self.val_sym[rows],
         )
+
+    # --------------------------- indexing ----------------------------- #
+    def _cache(self) -> dict:
+        return self.__dict__.setdefault("_index_cache", {})
+
+    def key_index(self) -> IntervalIndex:
+        """Cached interval index over the key-side intervals (lazily built)."""
+        cache = self._cache()
+        idx = cache.get("key")
+        if idx is None:
+            idx = IntervalIndex(self.key_lo, self.key_hi)
+            cache["key"] = idx
+        return idx
+
+    def value_bounds(self) -> tuple[np.ndarray, np.ndarray]:
+        """Achievable absolute bounds of each value attribute, per row.
+
+        Absolute attrs keep their stored interval; an attr relative to key
+        ``j`` can reach ``[key_lo_j + dlo, key_hi_j + dhi]``.  These bounds
+        turn the inverse join's candidate test into a plain range join.
+        """
+        cache = self._cache()
+        vb = cache.get("vbounds")
+        if vb is None:
+            vb_lo = self.val_lo.astype(np.int64)
+            vb_hi = self.val_hi.astype(np.int64)
+            for j in range(self.n_key):
+                sel = self.val_ref == j  # [N, m]
+                if sel.any():
+                    vb_lo[sel] += np.broadcast_to(
+                        self.key_lo[:, j : j + 1], sel.shape
+                    )[sel]
+                    vb_hi[sel] += np.broadcast_to(
+                        self.key_hi[:, j : j + 1], sel.shape
+                    )[sel]
+            vb = (vb_lo, vb_hi)
+            cache["vbounds"] = vb
+        return vb
+
+    def val_index(self) -> IntervalIndex:
+        """Cached interval index over the achievable value bounds."""
+        cache = self._cache()
+        idx = cache.get("val")
+        if idx is None:
+            idx = IntervalIndex(*self.value_bounds())
+            cache["val"] = idx
+        return idx
+
+    def cached_key_index(self) -> IntervalIndex | None:
+        """The key index if one is already built/attached, without building."""
+        return self._cache().get("key")
+
+    def invalidate_index(self) -> None:
+        """Drop cached indexes.  Reassigning an array field does this
+        automatically; call this after mutating an array *in place*."""
+        self.__dict__.pop("_index_cache", None)
+
+    def attach_key_index(self, index: IntervalIndex) -> None:
+        """Install a prebuilt/persisted key index (catalog reload path)."""
+        if index.lo.shape != self.key_lo.shape:
+            raise ValueError(
+                f"index over {index.lo.shape} cannot serve table "
+                f"{self.key_lo.shape}"
+            )
+        self._cache()["key"] = index
 
     # ---------------------------- size ------------------------------- #
     def nbytes(self) -> int:

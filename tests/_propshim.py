@@ -1,0 +1,120 @@
+"""Minimal seeded-random stand-in for ``hypothesis``.
+
+When the real ``hypothesis`` package is unavailable, ``conftest.py`` installs
+this module as ``sys.modules["hypothesis"]`` (and ``hypothesis.strategies``)
+*before* test modules import it, so property tests still execute — with
+deterministic seeding and a reduced example count instead of full shrinking
+search.  Only the API surface this repo's tests use is implemented:
+
+* ``given(**kwargs)`` / ``settings(max_examples=..., deadline=...)``
+* ``strategies.integers(lo, hi)`` (inclusive, like hypothesis)
+* ``strategies.sampled_from(seq)``
+* ``strategies.data()`` with ``data.draw(strategy)``
+
+Example counts are capped at ``PROPSHIM_MAX_EXAMPLES`` (default 15): the
+point of the fallback is coverage of the property bodies, not exhaustive
+search — install ``hypothesis`` for that.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import sys
+import types
+import zlib
+
+import numpy as np
+
+_EXAMPLE_CAP = int(os.environ.get("PROPSHIM_MAX_EXAMPLES", "15"))
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+
+class _DataObject:
+    def __init__(self, rng: np.random.Generator):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label: str | None = None):
+        return strategy.sample(self._rng)
+
+
+class _DataStrategy(_Strategy):
+    def __init__(self):
+        super().__init__(lambda rng: _DataObject(rng))
+
+
+def data() -> _DataStrategy:
+    return _DataStrategy()
+
+
+def given(*args, **kwargs):
+    if args:
+        raise NotImplementedError("propshim only supports given(**kwargs)")
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            n = min(getattr(wrapper, "_propshim_max_examples", _EXAMPLE_CAP),
+                    _EXAMPLE_CAP)
+            base = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = np.random.default_rng((base, i))
+                drawn = {k: s.sample(rng) for k, s in kwargs.items()}
+                try:
+                    fn(**drawn)
+                except Exception:
+                    print(
+                        f"propshim falsifying example ({fn.__qualname__}, "
+                        f"example {i}): {drawn}",
+                        file=sys.stderr,
+                    )
+                    raise
+
+        # hide the strategy-bound parameters from pytest's fixture resolution
+        wrapper.__signature__ = inspect.Signature()
+        del wrapper.__wrapped__
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = _EXAMPLE_CAP, deadline=None, **_ignored):
+    def decorate(fn):
+        fn._propshim_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (+ ``hypothesis.strategies``)."""
+    this = sys.modules[__name__]
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.__propshim__ = True
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.sampled_from = sampled_from
+    st.data = data
+    hyp.strategies = st
+    hyp.__propshim_source__ = this
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

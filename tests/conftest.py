@@ -1,0 +1,20 @@
+"""Test-suite bootstrap: optional-dependency fallbacks.
+
+``hypothesis`` is an *optional* dependency (see requirements.txt): when it is
+missing, install the minimal seeded-random shim from ``_propshim`` into
+``sys.modules`` before any test module is collected, so the property-based
+modules still import and their properties still run (with reduced example
+counts and no shrinking).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _propshim
+
+    _propshim.install()

@@ -3,6 +3,7 @@ elastic restore — the multi-device parts run in a subprocess with 8
 placeholder CPU devices (the main test process must keep 1 device)."""
 
 import json
+import os
 import subprocess
 import sys
 import textwrap
@@ -31,13 +32,20 @@ def test_logical_to_spec():
 
 def _run_subprocess(code: str) -> dict:
     prog = textwrap.dedent(code)
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+    # Keep the platform pin (e.g. JAX_PLATFORMS=cpu): without it jax probes
+    # for accelerator backends inside the subprocess and can hang for
+    # minutes on hosts with a TPU toolchain but no attached TPU.
+    for var in ("JAX_PLATFORMS", "JAX_PLATFORM_NAME"):
+        if var in os.environ:
+            env[var] = os.environ[var]
     out = subprocess.run(
         [sys.executable, "-c", prog],
         capture_output=True,
         text=True,
         timeout=420,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
+        env=env,
         cwd=".",
     )
     assert out.returncode == 0, out.stderr[-3000:]

@@ -1,0 +1,269 @@
+"""Interval-index query path: indexed == dense, batch == loop, invalidation."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import capture as C
+from repro.core.catalog import DSLog
+from repro.core.index import IntervalIndex, ragged_ranges
+from repro.core.provrc import compress, compress_both
+from repro.core.query import (
+    QueryBox,
+    theta_join,
+    theta_join_batch,
+    theta_join_inverse,
+)
+from repro.core.relation import LineageRelation
+
+
+def _random_relation(rng, l, m, n):
+    oshape = tuple(int(rng.integers(2, 7)) for _ in range(l))
+    ishape = tuple(int(rng.integers(2, 7)) for _ in range(m))
+    o = np.stack([rng.integers(0, s, n) for s in oshape], axis=1)
+    i = np.stack([rng.integers(0, s, n) for s in ishape], axis=1)
+    return LineageRelation(oshape, ishape, o, i).canonical()
+
+
+# --------------------------------------------------------------------------- #
+# IntervalIndex primitives
+# --------------------------------------------------------------------------- #
+def test_ragged_ranges():
+    owner, pos = ragged_ranges(np.array([2, 5, 5, 0]), np.array([4, 5, 8, 1]))
+    np.testing.assert_array_equal(owner, [0, 0, 2, 2, 2, 3])
+    np.testing.assert_array_equal(pos, [2, 3, 5, 6, 7, 0])
+
+
+def test_candidate_pairs_match_dense_oracle():
+    rng = np.random.default_rng(7)
+    for _ in range(40):
+        nq = int(rng.integers(1, 25))
+        nr = int(rng.integers(1, 300))
+        l = int(rng.integers(1, 4))
+        r_lo = rng.integers(0, 80, (nr, l)).astype(np.int64)
+        r_hi = r_lo + rng.integers(0, 12, (nr, l))
+        q_lo = rng.integers(0, 80, (nq, l)).astype(np.int64)
+        q_hi = q_lo + rng.integers(0, 20, (nq, l))
+        idx = IntervalIndex(r_lo, r_hi)
+        qi, ri = idx.candidate_pairs(q_lo, q_hi)
+        ov = np.ones((nq, nr), bool)
+        for j in range(l):
+            ov &= (q_lo[:, j : j + 1] <= r_hi[None, :, j]) & (
+                r_lo[None, :, j] <= q_hi[:, j : j + 1]
+            )
+        wq, wr = np.nonzero(ov)
+        np.testing.assert_array_equal(qi, wq)
+        np.testing.assert_array_equal(ri, wr)
+        assert idx.estimate_candidates(q_lo, q_hi) >= qi.size
+
+
+def test_index_serialization_roundtrip():
+    rng = np.random.default_rng(11)
+    lo = rng.integers(0, 50, (200, 2)).astype(np.int64)
+    hi = lo + rng.integers(0, 5, (200, 2))
+    idx = IntervalIndex(lo, hi)
+    idx2 = IntervalIndex.from_bytes(idx.to_bytes(), lo, hi)
+    q_lo = rng.integers(0, 50, (7, 2)).astype(np.int64)
+    q_hi = q_lo + 3
+    for a, b in zip(idx.candidate_pairs(q_lo, q_hi), idx2.candidate_pairs(q_lo, q_hi)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_index_rejects_mismatched_table():
+    lo = np.zeros((4, 1), np.int64)
+    hi = np.ones((4, 1), np.int64)
+    blob = IntervalIndex(lo, hi).to_bytes()
+    with pytest.raises(ValueError):
+        IntervalIndex.from_bytes(blob, np.zeros((5, 1), np.int64), np.ones((5, 1), np.int64))
+
+
+def test_index_rejects_stale_or_corrupt_permutation():
+    rng = np.random.default_rng(21)
+    lo = np.sort(rng.integers(0, 1000, (64, 1)).astype(np.int64), axis=0)
+    hi = lo + 2
+    blob = IntervalIndex(lo, hi).to_bytes()
+    # stale: same shape, different (reversed) bounds -> order no longer sorts
+    with pytest.raises(ValueError):
+        IntervalIndex.from_bytes(blob, lo[::-1].copy(), hi[::-1].copy())
+    # corrupt: garbage order values must raise ValueError, not IndexError
+    with pytest.raises(ValueError):
+        IntervalIndex(lo, hi, order=np.full((1, 64), 9999))
+    with pytest.raises(ValueError):
+        IntervalIndex(lo, hi, order=np.zeros((1, 64), np.int64))  # not a perm
+
+
+# --------------------------------------------------------------------------- #
+# Indexed vs dense θ-join equivalence
+# --------------------------------------------------------------------------- #
+def test_indexed_theta_join_equals_dense_random_relations():
+    rng = np.random.default_rng(0)
+    for trial in range(25):
+        l, m = int(rng.integers(1, 3)), int(rng.integers(1, 3))
+        rel = _random_relation(rng, l, m, int(rng.integers(1, 80)))
+        bwd, fwd = compress_both(rel)
+        qo = np.unique(
+            np.stack([rng.integers(0, s, 4) for s in rel.out_shape], axis=1), axis=0
+        )
+        qi = np.unique(
+            np.stack([rng.integers(0, s, 4) for s in rel.in_shape], axis=1), axis=0
+        )
+        q_out = QueryBox.from_cells(rel.out_shape, qo)
+        q_in = QueryBox.from_cells(rel.in_shape, qi)
+        for fn, q, t in [
+            (theta_join, q_out, bwd),
+            (theta_join, q_in, fwd),
+            (theta_join_inverse, q_in, bwd),
+            (theta_join_inverse, q_out, fwd),
+        ]:
+            indexed = fn(q, t, path="index")
+            dense = fn(q, t, path="dense")
+            assert indexed.cell_set() == dense.cell_set(), (trial, fn.__name__)
+            # merged outputs are canonical: cell-for-cell AND box-for-box
+            both_i = np.concatenate([indexed.lo, indexed.hi], axis=1)
+            both_d = np.concatenate([dense.lo, dense.hi], axis=1)
+            np.testing.assert_array_equal(
+                np.unique(both_i, axis=0), np.unique(both_d, axis=0)
+            )
+
+
+def test_auto_path_equals_dense_on_large_table():
+    rng = np.random.default_rng(3)
+    n = 3000
+    o = np.stack([rng.integers(0, 200, n), rng.integers(0, 200, n)], axis=1)
+    i = np.stack([rng.integers(0, 300, n)], axis=1)
+    rel = LineageRelation((200, 200), (300,), o, i).canonical()
+    t = compress(rel)
+    assert t.n_rows >= 1024, "table must be large enough to engage the index"
+    q = QueryBox.from_range((200, 200), (5, 5), (8, 8))
+    assert theta_join(q, t).cell_set() == theta_join(q, t, path="dense").cell_set()
+
+
+def test_unknown_path_raises():
+    t = compress(C.identity_lineage((5,)))
+    with pytest.raises(ValueError):
+        theta_join(QueryBox.from_cells((5,), np.array([[0]])), t, path="turbo")
+
+
+def test_symbolic_table_rejected_by_all_joins():
+    t = compress(C.identity_lineage((5,)))
+    t.key_sym = np.zeros((t.n_rows, 1), np.int8)  # mark axis-0 symbolic
+    q_key = QueryBox.from_cells((5,), np.array([[0]]))
+    q_val = QueryBox.from_cells((5,), np.array([[0]]))
+    with pytest.raises(ValueError, match="symbolic"):
+        theta_join(q_key, t)
+    with pytest.raises(ValueError, match="symbolic"):
+        theta_join_inverse(q_val, t)
+    with pytest.raises(ValueError, match="symbolic"):
+        theta_join_batch([q_key], t)
+
+
+# --------------------------------------------------------------------------- #
+# Batched API
+# --------------------------------------------------------------------------- #
+def test_batch_equals_loop_of_singles():
+    rng = np.random.default_rng(5)
+    rel = _random_relation(rng, 2, 2, 60)
+    t = compress(rel)
+    queries = []
+    for _ in range(6):
+        cells = np.stack(
+            [rng.integers(0, s, 3) for s in rel.out_shape], axis=1
+        )
+        queries.append(QueryBox.from_cells(rel.out_shape, cells))
+    queries.append(queries[0])  # duplicate query: exercises probe dedup
+    queries.append(QueryBox(rel.out_shape, np.zeros((0, 2)), np.zeros((0, 2))))
+    for path in ("index", "dense", "auto"):
+        batch = theta_join_batch(queries, t, path=path)
+        assert len(batch) == len(queries)
+        for got, q in zip(batch, queries):
+            want = theta_join(q, t)
+            assert got.cell_set() == want.cell_set(), path
+
+
+def test_batch_empty_inputs():
+    t = compress(C.identity_lineage((5,)))
+    assert theta_join_batch([], t) == []
+    q = QueryBox((5,), np.zeros((0, 1)), np.zeros((0, 1)))
+    assert theta_join_batch([q, q], t)[0].n_rows == 0
+
+
+def test_batch_shape_mismatch_raises():
+    t = compress(C.identity_lineage((5,)))
+    with pytest.raises(ValueError):
+        theta_join_batch([QueryBox.from_cells((4,), np.array([[0]]))], t)
+
+
+# --------------------------------------------------------------------------- #
+# Invalidation
+# --------------------------------------------------------------------------- #
+def test_index_invalidated_on_field_reassignment():
+    rel = C.identity_lineage((10,))
+    t = compress(rel)
+    q = QueryBox.from_cells((10,), np.array([[3]]))
+    assert theta_join(q, t, path="index").cell_set() == {(3,)}
+    # shift every key interval by one: cell 3 now maps to value 2's row
+    t.key_lo = t.key_lo + 1
+    t.key_hi = t.key_hi + 1
+    assert theta_join(q, t, path="index").cell_set() == \
+        theta_join(q, t, path="dense").cell_set()
+
+
+def test_index_invalidated_after_inplace_mutation():
+    rel = C.identity_lineage((10,))
+    t = compress(rel)
+    q = QueryBox.from_cells((10,), np.array([[3]]))
+    stale = theta_join(q, t, path="index").cell_set()
+    assert stale == {(3,)}
+    t.key_lo += 1
+    t.key_hi += 1
+    t.invalidate_index()  # in-place writes need the explicit call
+    assert theta_join(q, t, path="index").cell_set() == \
+        theta_join(q, t, path="dense").cell_set()
+
+
+def test_select_returns_fresh_cache():
+    rng = np.random.default_rng(9)
+    rel = _random_relation(rng, 2, 1, 50)
+    t = compress(rel)
+    assert t.n_rows >= 2
+    t.key_index()
+    sub = t.select(np.array([0, 1]))
+    assert sub.cached_key_index() is None
+    assert sub.key_index().n_rows == sub.n_rows
+
+
+# --------------------------------------------------------------------------- #
+# Catalog persistence + batch queries
+# --------------------------------------------------------------------------- #
+def test_catalog_persists_and_reloads_index():
+    with tempfile.TemporaryDirectory() as d:
+        log = DSLog(root=d, store_forward=True)
+        relXY = C.identity_lineage((6, 3))
+        relYZ = C.reduce_lineage((6, 3), 1)
+        log.add_lineage("X", "Y", relXY)
+        log.add_lineage("Y", "Z", relYZ)
+        for e in log.lineage.values():
+            e.backward.key_index()  # build → save() must persist it
+        log.save()
+        assert any(f.endswith(".idx") for f in os.listdir(d))
+        log2 = DSLog.load(d)
+        e0 = log2.lineage[0]
+        assert e0.backward.cached_key_index() is not None
+        res = log2.prov_query(["Z", "Y", "X"], np.array([[4]]))
+        assert res.cell_set() == {(4, j) for j in range(3)}
+
+
+def test_prov_query_batch_matches_singles():
+    log = DSLog(store_forward=True)
+    relXY = C.identity_lineage((6, 3))
+    relYZ = C.reduce_lineage((6, 3), 1)
+    log.add_lineage("X", "Y", relXY)
+    log.add_lineage("Y", "Z", relYZ)
+    queries = [np.array([[4]]), np.array([[0]]), np.array([[4]])]
+    batch = log.prov_query_batch(["Z", "Y", "X"], queries)
+    for got, cells in zip(batch, queries):
+        want = log.prov_query(["Z", "Y", "X"], cells)
+        assert got.cell_set() == want.cell_set()
+    assert log.prov_query_batch(["Z", "Y", "X"], []) == []
