@@ -69,6 +69,23 @@ def bench_index(quick: bool) -> None:
                   r[m] * 1e6, f"speedup_x={r['speedup']:.1f}")
 
 
+def bench_dag(quick: bool) -> None:
+    from .fig89_query import run_dag_ablation
+
+    print("# DAG queries — planner-merged diamond vs naive per-path union",
+          flush=True)
+    rows = run_dag_ablation(side=64 if quick else 96)
+    for r in rows:
+        _emit(
+            f"dag/side{r['side']}/b{r['branches']}/planner",
+            r["planner_s"] * 1e6,
+            f"speedup_x={r['speedup']:.1f};"
+            f"lazy_reload={r['loaded_tables']}of{r['total_tables']}",
+        )
+        _emit(f"dag/side{r['side']}/b{r['branches']}/naive",
+              r["naive_s"] * 1e6, "")
+
+
 def bench_table9(quick: bool) -> None:
     from .table9_coverage import run_table9
 
@@ -123,6 +140,7 @@ BENCHES = {
     "fig7": bench_fig7,
     "fig89": bench_fig89,
     "index": bench_index,
+    "dag": bench_dag,
     "table9": bench_table9,
     "roofline": bench_roofline,
     "kernels": bench_kernels,

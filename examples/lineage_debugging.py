@@ -29,21 +29,26 @@ print(f"registered {len(log.ops)} pipeline ops; {n_reused} served by reuse "
 print(f"total lineage storage: {log.storage_bytes() / 1024:.1f} KiB")
 
 # ---- backward query: which corpus doc produced shard row 2, token 10, at
-# step 3? ------------------------------------------------------------------
-res = log.prov_query(["shard_s3_k0", "batch_s3", "corpus"], np.array([[2, 10]]))
+# step 3?  Graph form: the planner routes shard → batch → corpus over the
+# lineage DAG itself — no hand-spelled path. -------------------------------
+res = log.prov_query("shard_s3_k0", "corpus", np.array([[2, 10]]))
 docs = sorted({c[0] for c in res.cell_set()})
 truth = pipe.source_rows_for_step(3)[2]
 print(f"shard_s3_k0[2, 10] came from corpus doc(s) {docs} "
       f"(ground truth: {truth})")
 assert docs == [int(truth)]
+# the explicit-path form (paper §V) answers identically
+via_path = log.prov_query(
+    ["shard_s3_k0", "batch_s3", "corpus"], np.array([[2, 10]])
+)
+assert via_path.cell_set() == res.cell_set()
 
 # ---- forward query: a suspect document — which rows of data shard 0 did
-# it touch in step 3?  (shard 0 holds global batch rows 0-3) ----------------
+# it touch in step 3?  (shard 0 holds global batch rows 0-3.)  The corpus
+# fans out to every step's batch; the planner narrows to the one route that
+# reaches the queried shard. ------------------------------------------------
 suspect = int(pipe.source_rows_for_step(3)[2])
-fwd = log.prov_query(
-    ["corpus", "batch_s3", "shard_s3_k0"],
-    np.array([[suspect, 0]]),
-)
+fwd = log.prov_query("corpus", "shard_s3_k0", np.array([[suspect, 0]]))
 rows = sorted({c[0] for c in fwd.cell_set()})
 print(f"corpus doc {suspect} touched shard-0 rows {rows} (expected [2])")
 assert rows == [2]

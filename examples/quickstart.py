@@ -3,6 +3,8 @@
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import tempfile
+
 import numpy as np
 
 from repro.core import DSLog
@@ -42,6 +44,13 @@ print(f"S[7] depends on {back.n_cells()} cells of X "
 fwd = log.prov_query(["X", "Y", "Z", "S"], np.array([[3, 5]]))
 print(f"X[3,5] influences cells of S: {sorted(fwd.cell_set())}")
 
+# Graph form: no hand-spelled path — the planner routes over the lineage
+# DAG itself, picking the cheapest stored materialization per hop.
+auto = log.prov_query("X", "S", np.array([[3, 5]]))
+assert auto.cell_set() == fwd.cell_set()
+plan = log.planner.plan("X", ["S"])
+print("planner route:\n" + plan.describe())
+
 # Reuse: run the same normalize on new arrays of a DIFFERENT shape —
 # after one confirming call, capture is bypassed via index reshaping.
 for i, shape in enumerate([(512, 32), (2048, 128), (99, 7)]):
@@ -54,3 +63,26 @@ for i, shape in enumerate([(512, 32), (2048, 128), (99, 7)]):
         if i < 2 else None,  # third call: no capture available at all
     )
     print(f"normalize on {shape}: reused={rec.reused}")
+
+# Persistence v2: the manifest round-trips ops + reuse state, and a
+# reloaded catalog deserializes blobs lazily — only what a query touches.
+with tempfile.TemporaryDirectory() as d:
+    disk = DSLog(root=d)
+    for name, shape in log.arrays.items():
+        disk.define_array(name, shape.shape)
+    disk.register_operation(
+        "normalize", ["X"], ["Y"],
+        capture=lambda: {(0, 0): identity_lineage((1024, 64))},
+    )
+    disk.register_operation(
+        "project", ["Y"], ["Z"], capture=lambda: {(0, 0): rel_y}
+    )
+    disk.save()
+    reloaded = DSLog.load(d)
+    reloaded.prov_query("Z", "Y", np.array([[7, 3]]))
+    print(
+        f"reloaded catalog answered a 1-hop query after deserializing "
+        f"{reloaded.io_stats['tables_loaded']} of "
+        f"{sum(1 + e.has_forward for e in reloaded.lineage.values())} "
+        f"table blobs"
+    )

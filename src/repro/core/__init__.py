@@ -8,7 +8,9 @@ In-Situ Query Processing for Fine-Grained Array Lineage").  Public API:
 
 from .capture import capture_jacobian  # noqa: F401
 from .catalog import ArrayDef, DSLog, LineageEntry  # noqa: F401
+from .graph import CycleError, LineageGraph  # noqa: F401
 from .index import IntervalIndex  # noqa: F401
+from .planner import QueryPlan, QueryPlanner  # noqa: F401
 from .provrc import compress, compress_both  # noqa: F401
 from .query import (  # noqa: F401
     QueryBox,
@@ -17,7 +19,8 @@ from .query import (  # noqa: F401
     theta_join,
     theta_join_batch,
     theta_join_inverse,
+    theta_join_inverse_batch,
 )
 from .relation import LineageRelation  # noqa: F401
 from .reuse import ReusePredictor, generalize, instantiate  # noqa: F401
-from .table import CompressedTable  # noqa: F401
+from .table import CompressedTable, TableHandle  # noqa: F401

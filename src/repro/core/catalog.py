@@ -1,19 +1,30 @@
-"""DSLog — the lineage storage manager (paper §III, §VI).
+"""DSLog — the lineage storage manager (paper §III, §V, §VI).
 
 The catalog owns:
 
 * named, shape-declared **Arrays** (§III.A ``Array``),
 * **lineage entries** — ProvRC-compressed backward (+ optionally forward)
   tables between array pairs (§III.A ``Lineage``),
+* the **lineage DAG** (:class:`~repro.core.graph.LineageGraph`) — built
+  incrementally as entries arrive (with cycle rejection) and rebuilt from
+  the manifest on load,
 * **operation registrations** that bundle multiple lineage entries under an
   operation signature and drive automatic reuse prediction (§VI),
-* **persistence** — each table is a packed binary blob (optionally
-  zlib-compressed, i.e. ProvRC-GZip) under a root directory, with a JSON
-  catalog index.
+* **persistence v2** — a versioned JSON manifest plus one packed binary
+  blob per table (optionally zlib-compressed, i.e. ProvRC-GZip).  Reloaded
+  tables are *lazy* (:class:`~repro.core.table.TableHandle`): a blob
+  deserializes the first time a query or stat actually touches it, and
+  ``save()`` rewrites only entries added since the last save/load
+  (dirty tracking).  Op records and the
+  :class:`~repro.core.reuse.ReusePredictor` state round-trip too, so a
+  reopened catalog keeps its confirmed reuse mappings.
 
-Multi-hop ``prov_query`` (§V) walks a path of array names, picking for each
-hop the best stored materialization (forward table, backward table with
-inverse join, or vice versa for backward queries).
+Multi-hop ``prov_query`` (§V) comes in two forms, both served by the
+cost-based :class:`~repro.core.planner.QueryPlanner`:
+
+* ``prov_query(path, cells)`` — the paper's explicit array path;
+* ``prov_query(src, dst, cells)`` — graph form: the planner routes over the
+  lineage DAG itself, merging converging branches at fan-in arrays.
 """
 
 from __future__ import annotations
@@ -21,18 +32,15 @@ from __future__ import annotations
 import json
 import os
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from .graph import CycleError, LineageGraph
 from .index import IntervalIndex
+from .planner import QueryPlanner
 from .provrc import compress
-from .query import (
-    QueryBox,
-    merge_boxes,
-    theta_join_batch,
-    theta_join_inverse,
-)
+from .query import QueryBox
 from .relation import LineageRelation
 from .reuse import (
     ReusePredictor,
@@ -40,7 +48,7 @@ from .reuse import (
     sig_key_dim,
     sig_key_gen,
 )
-from .table import CompressedTable
+from .table import CompressedTable, TableHandle
 
 __all__ = ["DSLog", "ArrayDef", "LineageEntry"]
 
@@ -49,6 +57,8 @@ __all__ = ["DSLog", "ArrayDef", "LineageEntry"]
 # without paying the O(n log n) sort.
 _INDEX_PERSIST_MIN_ROWS = 4096
 
+_MANIFEST_VERSION = 2
+
 
 @dataclass
 class ArrayDef:
@@ -56,17 +66,90 @@ class ArrayDef:
     shape: tuple[int, ...]
 
 
-@dataclass
 class LineageEntry:
-    """Compressed lineage between an op input (src) and op output (dst)."""
+    """Compressed lineage between an op input (src) and op output (dst).
 
-    lineage_id: int
-    src: str  # input array name
-    dst: str  # output array name
-    backward: CompressedTable  # keys = dst axes
-    forward: CompressedTable | None = None  # keys = src axes
-    op_name: str | None = None
-    reused_from: str | None = None
+    After ``DSLog.load`` the tables are :class:`TableHandle`s: reading
+    :attr:`backward` / :attr:`forward` deserializes the blob on first touch.
+    Row counts (:meth:`backward_rows` / :meth:`forward_rows`) come from the
+    manifest, so the planner can cost a hop without any I/O.
+    """
+
+    def __init__(
+        self,
+        lineage_id: int,
+        src: str,
+        dst: str,
+        backward: "CompressedTable | TableHandle",
+        forward: "CompressedTable | TableHandle | None" = None,
+        op_name: str | None = None,
+        reused_from: str | None = None,
+    ):
+        self.lineage_id = lineage_id
+        self.src = src  # input array name
+        self.dst = dst  # output array name
+        self.op_name = op_name
+        self.reused_from = reused_from
+        self._bwd = backward
+        self._fwd = forward
+
+    # ------------------------------------------------------------------ #
+    @property
+    def backward(self) -> CompressedTable:
+        """Backward table (keys = dst axes); loads a lazy handle."""
+        if isinstance(self._bwd, TableHandle):
+            return self._bwd.get()
+        return self._bwd
+
+    @property
+    def forward(self) -> CompressedTable | None:
+        """Forward table (keys = src axes) or None; loads a lazy handle."""
+        if isinstance(self._fwd, TableHandle):
+            return self._fwd.get()
+        return self._fwd
+
+    @property
+    def has_forward(self) -> bool:
+        """Whether a forward materialization exists, without loading it."""
+        return self._fwd is not None
+
+    @property
+    def backward_loaded(self) -> bool:
+        return not isinstance(self._bwd, TableHandle) or self._bwd.loaded
+
+    @property
+    def forward_loaded(self) -> bool:
+        if self._fwd is None:
+            return False
+        return not isinstance(self._fwd, TableHandle) or self._fwd.loaded
+
+    @property
+    def backward_rows(self) -> int:
+        if isinstance(self._bwd, TableHandle):
+            return self._bwd.rows
+        return self._bwd.n_rows
+
+    @property
+    def forward_rows(self) -> int | None:
+        if self._fwd is None:
+            return None
+        if isinstance(self._fwd, TableHandle):
+            return self._fwd.rows
+        return self._fwd.n_rows
+
+    def peek_table(self, stored: str) -> CompressedTable | None:
+        """The materialized table, or None while the blob is unloaded."""
+        obj = self._bwd if stored == "backward" else self._fwd
+        if obj is None or isinstance(obj, CompressedTable):
+            return obj
+        return obj._table
+
+    def __repr__(self) -> str:  # keep the old dataclass-ish readability
+        state = "loaded" if self.backward_loaded else "lazy"
+        return (
+            f"LineageEntry(id={self.lineage_id}, {self.src!r}->{self.dst!r}, "
+            f"op={self.op_name!r}, {state})"
+        )
 
 
 @dataclass
@@ -77,6 +160,20 @@ class _OpRecord:
     op_args: Any
     lineage_ids: list[int] = field(default_factory=list)
     reused: str | None = None
+
+
+def _json_safe(op_args: Any) -> Any:
+    """Best-effort JSON projection of op args for the manifest.
+
+    Non-JSON args degrade to a repr marker: the op record survives the
+    round-trip, but signature keys derived from it will no longer match the
+    original live object (document-level caveat, not an error).
+    """
+    try:
+        json.dumps(op_args)
+        return op_args
+    except TypeError:
+        return {"__repr__": repr(op_args)}
 
 
 class DSLog:
@@ -97,9 +194,19 @@ class DSLog:
         self.arrays: dict[str, ArrayDef] = {}
         self.lineage: dict[int, LineageEntry] = {}
         self.by_pair: dict[tuple[str, str], list[int]] = {}
+        self.graph = LineageGraph()
         self.ops: list[_OpRecord] = []
         self.predictor = ReusePredictor(m=reuse_m)
+        self.planner = QueryPlanner(self)
         self._next_id = 0
+        # persistence bookkeeping: which entries need (re)writing, the
+        # manifest records of already-persisted entries, and lazy-I/O
+        # counters that tests/benchmarks assert on.
+        self._dirty: set[int] = set()
+        self._persisted: dict[int, dict] = {}
+        self._predictor_dirty = False
+        self._predictor_chunk: dict | None = None
+        self.io_stats = {"tables_loaded": 0, "tables_written": 0}
         if root:
             os.makedirs(root, exist_ok=True)
 
@@ -120,7 +227,11 @@ class DSLog:
         tables: tuple[CompressedTable, CompressedTable | None] | None = None,
         reused_from: str | None = None,
     ) -> LineageEntry:
-        """Ingest one captured relation (src = op input, dst = op output)."""
+        """Ingest one captured relation (src = op input, dst = op output).
+
+        Raises :class:`~repro.core.graph.CycleError` (leaving the catalog
+        untouched) when the new edge would make the lineage DAG cyclic.
+        """
         self._check_shapes(src, dst, relation)
         if tables is not None:
             bwd, fwd = tables
@@ -131,13 +242,38 @@ class DSLog:
                 if self.store_forward
                 else None
             )
+        return self._insert_entry(src, dst, bwd, fwd, op_name, reused_from)
+
+    def _insert_entry(
+        self,
+        src: str,
+        dst: str,
+        bwd: CompressedTable,
+        fwd: CompressedTable | None,
+        op_name: str | None,
+        reused_from: str | None = None,
+    ) -> LineageEntry:
+        # cycle check first: a rejected edge must not leave a half-inserted
+        # entry (graph.add_edge mutates nothing when it raises)
+        self.graph.add_edge(src, dst, self._next_id)
         entry = LineageEntry(
             self._next_id, src, dst, bwd, fwd, op_name, reused_from
         )
         self._next_id += 1
         self.lineage[entry.lineage_id] = entry
         self.by_pair.setdefault((src, dst), []).append(entry.lineage_id)
+        self._dirty.add(entry.lineage_id)
         return entry
+
+    def _remove_entry(self, lineage_id: int) -> None:
+        """Undo one :meth:`_insert_entry` (multi-entry rollback)."""
+        e = self.lineage.pop(lineage_id)
+        ids = self.by_pair[(e.src, e.dst)]
+        ids.remove(lineage_id)
+        if not ids:
+            del self.by_pair[(e.src, e.dst)]
+        self.graph.remove_edge(e.src, e.dst, lineage_id)
+        self._dirty.discard(lineage_id)
 
     def _check_shapes(self, src: str, dst: str, rel: LineageRelation) -> None:
         if src in self.arrays and self.arrays[src].shape != rel.in_shape:
@@ -193,23 +329,23 @@ class DSLog:
             )
             if decision.reused:
                 assert decision.tables is not None
-                for label, bwd in decision.tables.items():
-                    oi, ii = (int(x) for x in label.split(":"))
-                    entry = LineageEntry(
-                        self._next_id,
-                        in_arrs[ii],
-                        out_arrs[oi],
-                        bwd,
-                        self._derive_forward(bwd) if self.store_forward else None,
-                        op_name,
-                        reused_from=decision.source,
-                    )
-                    self._next_id += 1
-                    self.lineage[entry.lineage_id] = entry
-                    self.by_pair.setdefault(
-                        (entry.src, entry.dst), []
-                    ).append(entry.lineage_id)
-                    rec.lineage_ids.append(entry.lineage_id)
+                try:
+                    for label, bwd in decision.tables.items():
+                        oi, ii = (int(x) for x in label.split(":"))
+                        entry = self._insert_entry(
+                            in_arrs[ii],
+                            out_arrs[oi],
+                            bwd,
+                            self._derive_forward(bwd)
+                            if self.store_forward
+                            else None,
+                            op_name,
+                            reused_from=decision.source,
+                        )
+                        rec.lineage_ids.append(entry.lineage_id)
+                except CycleError:
+                    self._rollback_op(rec)
+                    raise
                 rec.reused = decision.source
                 self.ops.append(rec)
                 return rec
@@ -220,16 +356,29 @@ class DSLog:
             )
         rels = capture()
         captured_tables: dict[str, CompressedTable] = {}
-        for (oi, ii), rel in rels.items():
-            entry = self.add_lineage(
-                in_arrs[ii], out_arrs[oi], rel, op_name=op_name
-            )
-            rec.lineage_ids.append(entry.lineage_id)
-            captured_tables[f"{oi}:{ii}"] = entry.backward
+        try:
+            for (oi, ii), rel in rels.items():
+                entry = self.add_lineage(
+                    in_arrs[ii], out_arrs[oi], rel, op_name=op_name
+                )
+                rec.lineage_ids.append(entry.lineage_id)
+                captured_tables[f"{oi}:{ii}"] = entry.backward
+        except CycleError:
+            self._rollback_op(rec)
+            raise
         if use_reuse:
             self.predictor.observe(dim_key, gen_key, shapes_token, captured_tables)
+            self._predictor_dirty = True
         self.ops.append(rec)
         return rec
+
+    def _rollback_op(self, rec: _OpRecord) -> None:
+        """Registration is atomic: a mid-op CycleError (one pair of a
+        multi-entry op closes a cycle) must not leave the already-inserted
+        sibling entries behind."""
+        for lid in reversed(rec.lineage_ids):
+            self._remove_entry(lid)
+        rec.lineage_ids.clear()
 
     def _derive_forward(self, bwd: CompressedTable) -> CompressedTable | None:
         """Forward table from a reused backward table (via decompress only
@@ -240,123 +389,195 @@ class DSLog:
         return None
 
     # ------------------------------------------------------------------ #
-    # Multi-hop queries (§V)
+    # Multi-hop queries (§V) — both forms served by the planner
     # ------------------------------------------------------------------ #
-    def prov_query(
-        self,
-        path: list[str],
-        query_cells: "np.ndarray | QueryBox",
-        merge: bool = True,
-    ) -> QueryBox:
-        """Lineage between cells of ``path[0]`` and cells of ``path[-1]``.
+    def prov_query(self, *args, merge: bool = True) -> "QueryBox | dict":
+        """Lineage between cells of two arrays.
 
-        Single-query form of :meth:`prov_query_batch` (one hop-dispatch
-        implementation serves both).
+        Two call forms::
+
+            prov_query(path, cells)        # explicit array path (paper §V)
+            prov_query(src, dst, cells)    # planner routes over the DAG
+
+        In graph form the planner infers direction (forward when ``dst`` is
+        downstream of ``src``), merges converging branches at fan-in arrays,
+        and picks the cheapest stored materialization per hop.  ``dst`` may
+        be a sequence of array names — the result is then a dict
+        ``{name: QueryBox}``.
         """
-        return self.prov_query_batch(path, [query_cells], merge)[0]
+        form = self._parse_query_args(args)
+        if form[0] == "path":
+            _, path, cells, m_override = form
+            if m_override is not None:
+                merge = m_override
+            return self.prov_query_batch(path, [cells], merge=merge)[0]
+        _, src, dst, cells = form
+        res = self.prov_query_batch(src, dst, [cells], merge=merge)
+        if isinstance(res, dict):
+            return {name: boxes[0] for name, boxes in res.items()}
+        return res[0]
 
     def prov_query_batch(
-        self,
-        path: list[str],
-        queries: "list[np.ndarray | QueryBox]",
-        merge: bool = True,
-    ) -> list[QueryBox]:
-        """Answer many independent queries over the same array path.
+        self, *args, merge: bool = True
+    ) -> "list[QueryBox] | dict[str, list[QueryBox]]":
+        """Answer many independent queries in one pass (both call forms).
 
-        Hops whose stored materialization matches the query direction are
-        executed with :func:`theta_join_batch`, so identical boxes across the
-        in-flight queries share one index probe and every hop's interval
-        index is built (and cached on the table) at most once for the whole
-        batch.  Hops that must run through the inverse join fall back to a
-        per-query loop — still index-pruned, still cache-warm.
+        The plan is computed once; each hop runs through the batched θ-join
+        (shared index probes, deduplicated boxes across in-flight queries).
         """
-        if len(path) < 2:
-            raise ValueError("path needs at least two arrays")
+        form = self._parse_query_args(args)
+        if form[0] == "path":
+            _, path, queries, m_override = form
+            if m_override is not None:
+                merge = m_override
+            if len(path) < 2:
+                raise ValueError("path needs at least two arrays")
+            if not queries:
+                return []
+            boxes = self._as_boxes(path[0], queries)
+            plan = self.planner.plan_path(path, frontier=boxes)
+            return self.planner.execute(plan, boxes, merge=merge)[path[-1]]
+        _, src, dst, queries = form
+        multi = not isinstance(dst, str)
+        targets = list(dst) if multi else [dst]
         if not queries:
-            return []
-        first = self.arrays[path[0]]
-        cur: list[QueryBox] = [
-            q if isinstance(q, QueryBox) else QueryBox.from_cells(first.shape, q)
+            return {t: [] for t in targets} if multi else []
+        boxes = self._as_boxes(src, queries)
+        plan = self.planner.plan(src, targets, frontier=boxes)
+        out = self.planner.execute(plan, boxes, merge=merge)
+        return out if multi else out[dst]
+
+    def _as_boxes(
+        self, name: str, queries: Sequence["np.ndarray | QueryBox"]
+    ) -> list[QueryBox]:
+        shape = self.arrays[name].shape
+        return [
+            q if isinstance(q, QueryBox) else QueryBox.from_cells(shape, q)
             for q in queries
         ]
-        if merge:
-            cur = [merge_boxes(q) for q in cur]
-        for a, b in zip(path[:-1], path[1:]):
-            cur = self._query_hop_batch(cur, a, b, merge)
-        return cur
 
-    def _query_hop_batch(
-        self, qs: list[QueryBox], a: str, b: str, merge: bool
-    ) -> list[QueryBox]:
-        acc_lo: list[list[np.ndarray]] = [[] for _ in qs]
-        acc_hi: list[list[np.ndarray]] = [[] for _ in qs]
-        shape_out: tuple[int, ...] | None = None
+    @staticmethod
+    def _parse_query_args(args: tuple) -> tuple:
+        """Dispatch ``(path, q)`` vs ``(src, dst, q)`` positional forms.
 
-        def fold(results: list[QueryBox]) -> None:
-            nonlocal shape_out
-            for k, r in enumerate(results):
-                acc_lo[k].append(r.lo)
-                acc_hi[k].append(r.hi)
-                shape_out = r.shape
-
-        # backward direction: a is an op OUTPUT, b the op input
-        for lid in self.by_pair.get((b, a), []):
-            fold(theta_join_batch(qs, self.lineage[lid].backward, merge=False))
-        # forward direction: a is an op INPUT, b the op output
-        for lid in self.by_pair.get((a, b), []):
-            e = self.lineage[lid]
-            if e.forward is not None:
-                fold(theta_join_batch(qs, e.forward, merge=False))
-            else:
-                fold([theta_join_inverse(q, e.backward, merge=False) for q in qs])
-        if shape_out is None:
-            raise KeyError(f"no lineage stored between {a!r} and {b!r}")
-        out = []
-        for k in range(len(qs)):
-            res = QueryBox(
-                shape_out, np.concatenate(acc_lo[k]), np.concatenate(acc_hi[k])
-            )
-            out.append(merge_boxes(res) if merge else res)
-        return out
+        The pre-graph signature was ``(path, q, merge=True)`` with ``merge``
+        accepted positionally; that form still works and comes back as the
+        trailing merge override in the "path" tuple.
+        """
+        if len(args) == 2:
+            path, q = args
+            if isinstance(path, str):
+                raise TypeError(
+                    "prov_query(src, dst, cells) needs a dst argument; "
+                    "the two-argument form takes a path list"
+                )
+            return ("path", list(path), q, None)
+        if len(args) == 3:
+            src, dst, q = args
+            if not isinstance(src, str):
+                if isinstance(q, (bool, np.bool_)):
+                    return ("path", list(src), dst, bool(q))
+                raise TypeError(
+                    "graph-form prov_query takes a source array name; "
+                    "for the path form pass merge as a keyword"
+                )
+            if not isinstance(dst, (str, list, tuple, set, frozenset)):
+                raise TypeError("dst must be an array name or a sequence of names")
+            return ("graph", src, dst, q)
+        raise TypeError(
+            f"prov_query takes (path, cells) or (src, dst, cells); got "
+            f"{len(args)} positional arguments"
+        )
 
     # ------------------------------------------------------------------ #
-    # Persistence
+    # Persistence (manifest v2: lazy handles, dirty tracking, reuse state)
     # ------------------------------------------------------------------ #
     def save(self) -> None:
+        """Write the catalog under ``root``, incrementally.
+
+        Only entries added since the last ``save()``/``load()`` have their
+        blobs (and index sidecars) written; already-persisted entries keep
+        their files and manifest records verbatim — a lazily loaded entry is
+        never even deserialized by a save.  The JSON manifest itself is
+        always rewritten (it is small).
+        """
         if not self.root:
             raise ValueError("DSLog opened without a root directory")
         meta = {
+            "version": _MANIFEST_VERSION,
             "arrays": {n: list(a.shape) for n, a in self.arrays.items()},
             "lineage": [],
             "next_id": self._next_id,
+            "ops": [
+                {
+                    "op": op.op_name,
+                    "in": list(op.in_arrs),
+                    "out": list(op.out_arrs),
+                    "args": _json_safe(op.op_args),
+                    "lineage_ids": list(op.lineage_ids),
+                    "reused": op.reused,
+                }
+                for op in self.ops
+            ],
         }
         for e in self.lineage.values():
-            fn = f"lineage_{e.lineage_id}.prvc"
-            with open(os.path.join(self.root, fn), "wb") as f:
-                f.write(e.backward.serialize(compress=self.gzip))
-            rec = {
-                "id": e.lineage_id,
-                "src": e.src,
-                "dst": e.dst,
-                "file": fn,
-                "op": e.op_name,
-                "reused": e.reused_from,
-                "fwd": None,
-                "idx": None,
-                "fwd_idx": None,
-            }
-            rec["idx"] = self._save_index(e.backward, f"lineage_{e.lineage_id}.idx")
-            if e.forward is not None:
-                fwd_fn = f"lineage_{e.lineage_id}_fwd.prvc"
-                with open(os.path.join(self.root, fwd_fn), "wb") as f:
-                    f.write(e.forward.serialize(compress=self.gzip))
-                rec["fwd"] = fwd_fn
-                rec["fwd_idx"] = self._save_index(
-                    e.forward, f"lineage_{e.lineage_id}_fwd.idx"
-                )
+            rec = self._persisted.get(e.lineage_id)
+            if rec is None or e.lineage_id in self._dirty:
+                rec = self._write_entry(e)
+                self._persisted[e.lineage_id] = rec
             meta["lineage"].append(rec)
+        self._dirty.clear()
+
+        if self._predictor_chunk is None or self._predictor_dirty:
+            self._predictor_chunk = self._write_predictor()
+            self._predictor_dirty = False
+        meta["predictor"] = self._predictor_chunk
+
         with open(os.path.join(self.root, "catalog.json"), "w") as f:
             json.dump(meta, f)
+
+    def _write_entry(self, e: LineageEntry) -> dict:
+        assert self.root is not None
+        fn = f"lineage_{e.lineage_id}.prvc"
+        with open(os.path.join(self.root, fn), "wb") as f:
+            f.write(e.backward.serialize(compress=self.gzip))
+        self.io_stats["tables_written"] += 1
+        rec = {
+            "id": e.lineage_id,
+            "src": e.src,
+            "dst": e.dst,
+            "file": fn,
+            "op": e.op_name,
+            "reused": e.reused_from,
+            "rows": e.backward.n_rows,
+            "fwd": None,
+            "fwd_rows": None,
+            "idx": self._save_index(e.backward, f"lineage_{e.lineage_id}.idx"),
+            "fwd_idx": None,
+        }
+        if e.forward is not None:
+            fwd_fn = f"lineage_{e.lineage_id}_fwd.prvc"
+            with open(os.path.join(self.root, fwd_fn), "wb") as f:
+                f.write(e.forward.serialize(compress=self.gzip))
+            self.io_stats["tables_written"] += 1
+            rec["fwd"] = fwd_fn
+            rec["fwd_rows"] = e.forward.n_rows
+            rec["fwd_idx"] = self._save_index(
+                e.forward, f"lineage_{e.lineage_id}_fwd.idx"
+            )
+        return rec
+
+    def _write_predictor(self) -> dict:
+        assert self.root is not None
+        blob_no = iter(range(1 << 30))
+
+        def save_table(key: str, label: str, tbl: CompressedTable) -> str:
+            fn = f"sig_{next(blob_no)}.prvc"
+            with open(os.path.join(self.root, fn), "wb") as f:
+                f.write(tbl.serialize(compress=self.gzip))
+            return fn
+
+        return self.predictor.state_manifest(save_table)
 
     def _save_index(self, table: CompressedTable, fn: str) -> str | None:
         """Persist the key index next to its table: already-built indexes are
@@ -386,32 +607,79 @@ class DSLog:
         except ValueError:
             pass  # stale sidecar: fall back to lazy rebuild
 
+    def _make_handle(self, fn: str, idx_fn: str | None, rows) -> TableHandle:
+        assert self.root is not None
+        root = self.root
+
+        def load() -> CompressedTable:
+            with open(os.path.join(root, fn), "rb") as f:
+                t = CompressedTable.deserialize(f.read())
+            DSLog._load_index(root, idx_fn, t)
+            return t
+
+        def on_load() -> None:
+            self.io_stats["tables_loaded"] += 1
+
+        return TableHandle(load, None if rows is None else int(rows), on_load)
+
     @staticmethod
     def load(root: str) -> "DSLog":
+        """Reopen a catalog without deserializing any table blob.
+
+        Arrays, the lineage DAG, op records, and the reuse-predictor state
+        load eagerly (they are small JSON plus the few signature tables);
+        every lineage table becomes a lazy handle that resolves on first
+        touch — ``io_stats["tables_loaded"]`` counts those resolutions.
+        Manifests from v1 (pre-graph) load too; they simply have no ops or
+        predictor state to restore.
+        """
         log = DSLog(root=root)
         with open(os.path.join(root, "catalog.json")) as f:
             meta = json.load(f)
+        version = int(meta.get("version", 1))
         for n, shp in meta["arrays"].items():
             log.define_array(n, tuple(shp))
         for rec in meta["lineage"]:
-            with open(os.path.join(root, rec["file"]), "rb") as f:
-                bwd = CompressedTable.deserialize(f.read())
-            DSLog._load_index(root, rec.get("idx"), bwd)
+            bwd = log._make_handle(rec["file"], rec.get("idx"), rec.get("rows"))
             fwd = None
             if rec["fwd"]:
-                with open(os.path.join(root, rec["fwd"]), "rb") as f:
-                    fwd = CompressedTable.deserialize(f.read())
-                DSLog._load_index(root, rec.get("fwd_idx"), fwd)
+                fwd = log._make_handle(
+                    rec["fwd"], rec.get("fwd_idx"), rec.get("fwd_rows")
+                )
             e = LineageEntry(
                 rec["id"], rec["src"], rec["dst"], bwd, fwd, rec["op"], rec["reused"]
             )
             log.lineage[e.lineage_id] = e
             log.by_pair.setdefault((e.src, e.dst), []).append(e.lineage_id)
+            log._persisted[e.lineage_id] = rec
+        log.graph = LineageGraph.from_pairs(log.by_pair)
         log._next_id = meta["next_id"]
+        if version >= 2:
+            for op in meta.get("ops", []):
+                log.ops.append(
+                    _OpRecord(
+                        op["op"],
+                        tuple(op["in"]),
+                        tuple(op["out"]),
+                        op["args"],
+                        list(op["lineage_ids"]),
+                        op["reused"],
+                    )
+                )
+            chunk = meta.get("predictor")
+            if chunk is not None:
+
+                def load_table(fn: str) -> CompressedTable:
+                    with open(os.path.join(root, fn), "rb") as f:
+                        return CompressedTable.deserialize(f.read())
+
+                log.predictor = ReusePredictor.from_manifest(chunk, load_table)
+                log._predictor_chunk = chunk
         return log
 
     # ------------------------------------------------------------------ #
     def storage_bytes(self) -> int:
+        """Packed size of every stored table (forces lazy blobs to load)."""
         total = 0
         for e in self.lineage.values():
             total += e.backward.nbytes()

@@ -33,7 +33,7 @@ import json
 
 import numpy as np
 
-__all__ = ["IntervalIndex", "ragged_ranges"]
+__all__ = ["IntervalIndex", "interval_stats", "ragged_ranges"]
 
 _IDX_MAGIC = b"PRVCIDX1\n"
 
@@ -54,6 +54,31 @@ def ragged_ranges(
     base = np.cumsum(counts) - counts  # offset of each range in the output
     pos = np.arange(total, dtype=np.int64) - base[owner] + starts.astype(np.int64)[owner]
     return owner, pos
+
+
+def interval_stats(
+    lo: np.ndarray, hi: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-attribute ``(mean interval length, covered span)`` of a column set.
+
+    The planner's cost model turns these two numbers into an overlap
+    probability per attribute (``(Lq + Lr) / span``, clamped to 1): the
+    chance that a random query interval of mean length ``Lq`` meets a random
+    stored interval of mean length ``Lr`` inside the covered span.  Exact
+    per-frontier estimates come from :meth:`IntervalIndex.estimate_candidates`;
+    these closed-form stats are for hops whose frontier does not exist yet at
+    planning time.
+    """
+    lo = np.asarray(lo, np.int64)
+    hi = np.asarray(hi, np.int64)
+    if lo.ndim != 2 or lo.shape != hi.shape:
+        raise ValueError(f"bad interval columns: {lo.shape} vs {hi.shape}")
+    if lo.shape[0] == 0:
+        n_attrs = lo.shape[1]
+        return np.ones(n_attrs), np.ones(n_attrs)
+    mean_len = (hi - lo + 1).mean(axis=0)
+    span = np.maximum(hi.max(axis=0) - lo.min(axis=0) + 1, 1)
+    return mean_len.astype(float), span.astype(float)
 
 
 class IntervalIndex:

@@ -5,8 +5,10 @@ numpy API operations (element-wise vs "complex").  This registry is the
 offline analog: every entry knows how to produce its fine-grained lineage
 for a given input shape, whether that lineage is value-dependent, and which
 family it belongs to.  ``benchmarks/table9_coverage.py`` sweeps it; the
-training-framework integration (``repro.lineage``) uses the same adapters to
-log pipeline/model ops into DSLog.
+integration facade ``repro.lineage`` re-exports these adapters (alongside
+DSLog, the lineage graph, and the planner) as the single import surface for
+logging pipeline/model ops into DSLog — see
+``examples/lineage_debugging.py`` for the end-to-end flow.
 """
 
 from __future__ import annotations

@@ -1,0 +1,506 @@
+"""Cost-based multi-hop query planning over the lineage DAG (paper §V, grown).
+
+The paper's ``prov_query`` walks a user-supplied *path* of arrays.  This
+module replaces the hand-spelled path with a plan over the
+:class:`~repro.core.graph.LineageGraph`:
+
+1. **Routing** — given source/target endpoint sets, the planner finds the
+   sub-DAG of arrays lying on any dataflow path between them (two BFS
+   passes, never an exponential path enumeration) and orders it
+   topologically, so converging branches of a diamond are *merged* at their
+   fan-in array instead of re-walked once per path.
+2. **Materialization choice** — per hop and per stored
+   :class:`~repro.core.catalog.LineageEntry`, the planner picks the cheapest
+   way to execute the θ-join: the table whose *key* side matches the
+   frontier (natural join) or the opposite materialization through the
+   inverse join, and the indexed vs dense route — reusing the
+   :class:`~repro.core.index.IntervalIndex` machinery: a cached index gives
+   an exact candidate estimate for the first hop
+   (:meth:`~repro.core.index.IntervalIndex.estimate_candidates`); deeper
+   hops use the closed-form per-attribute overlap model of
+   :func:`~repro.core.index.interval_stats`.
+3. **Frontier dedup** — between hops every array's frontier is the
+   concatenation of all incoming contributions, deduplicated and coalesced
+   with :func:`~repro.core.query.merge_boxes`, so diamond-shaped DAGs do not
+   multiply the box count path by path.
+
+Plans cost and execute against *lazy* catalogs: row counts come from the
+manifest (``LineageEntry.backward_rows`` / ``forward_rows``) so planning a
+query over a freshly loaded store touches no blobs; only the tables on the
+chosen hops deserialize, at execution time.
+
+``plan_path`` keeps the paper's explicit-path form alive on the same
+executor (one hop per adjacent pair, every stored entry between the pair
+contributing), so ``DSLog.prov_query`` serves both forms from one engine.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Iterable, Sequence
+
+import numpy as np
+
+from .query import (
+    DENSE_FRACTION,
+    INDEX_MIN_ROWS,
+    QueryBox,
+    merge_boxes,
+    theta_join_batch,
+    theta_join_inverse_batch,
+)
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .catalog import DSLog, LineageEntry
+
+__all__ = ["HopChoice", "EdgeStep", "QueryPlan", "QueryPlanner"]
+
+# Cost-model constants (unitless "per candidate pair" work).
+_INVERSE_OVERHEAD = 2.0  # inverse join does strictly more per-pair work
+_INDEX_BUILD_WEIGHT = 0.25  # amortized first-build cost of an uncached index
+_POINT_ROW_COVER = 4.0  # unloaded-table fallback: rows a point probe hits
+_MERGE_SHRINK = 0.5  # expected box-count shrink from merge_boxes
+
+
+@dataclass
+class HopChoice:
+    """One executable option for one lineage entry on one hop."""
+
+    lineage_id: int
+    stored: str  # "backward" | "forward": which materialization to read
+    frontier_on: str  # "key" (natural join) | "value" (inverse join)
+    route: str  # "index" | "dense"
+    est_pairs: float
+    est_cost: float
+
+
+@dataclass
+class EdgeStep:
+    """Process every lineage entry between one frontier/produced node pair."""
+
+    u: str  # plan-node key the frontier is read from
+    v: str  # plan-node key the step produces
+    choices: list[HopChoice]
+
+    @property
+    def est_pairs(self) -> float:
+        return sum(c.est_pairs for c in self.choices)
+
+
+@dataclass
+class QueryPlan:
+    """Ordered, costed execution plan between two endpoint sets.
+
+    Plan nodes are opaque keys (equal to array names for graph plans; path
+    plans suffix the position so a path may revisit an array).  ``steps``
+    maps each produced node to its incoming :class:`EdgeStep`s; ``order``
+    lists every node in frontier-propagation order, starts first.
+    """
+
+    direction: str  # "forward" | "backward" | "path"
+    starts: tuple[str, ...]  # node keys where the query frontier lands
+    target_keys: dict[str, str]  # array name -> plan-node key
+    order: list[str]
+    node_array: dict[str, str]  # plan-node key -> array name
+    steps: dict[str, list[EdgeStep]] = field(default_factory=dict)
+    est_cost: float = 0.0
+
+    def describe(self) -> str:
+        """Human-readable plan, one line per hop (EXPLAIN-style)."""
+        lines = [
+            f"{self.direction} plan, {len(self.order)} nodes, "
+            f"est_cost={self.est_cost:.0f}"
+        ]
+        for key in self.order:
+            for step in self.steps.get(key, []):
+                opts = ", ".join(
+                    f"#{c.lineage_id}:{c.stored}/"
+                    f"{'nat' if c.frontier_on == 'key' else 'inv'}/{c.route}"
+                    for c in step.choices
+                )
+                lines.append(
+                    f"  {self.node_array[step.u]} -> "
+                    f"{self.node_array[step.v]}  [{opts}]"
+                )
+        return "\n".join(lines)
+
+
+class QueryPlanner:
+    """Plan and execute multi-hop lineage queries for one :class:`DSLog`."""
+
+    def __init__(self, log: "DSLog"):
+        self.log = log
+
+    # ------------------------------------------------------------------ #
+    # planning
+    # ------------------------------------------------------------------ #
+    def plan(
+        self,
+        sources: str | Iterable[str],
+        targets: str | Iterable[str],
+        frontier: Sequence[QueryBox] | None = None,
+    ) -> QueryPlan:
+        """Plan between endpoint sets; query cells live on ``sources``.
+
+        Orientation is inferred from the graph: a *forward* query when the
+        targets are downstream of the sources, *backward* when upstream.
+        ``frontier`` (the actual initial boxes, when already known) sharpens
+        the first hop's cost estimates; the plan is valid without it.
+        """
+        g = self.log.graph
+        src_set = {sources} if isinstance(sources, str) else set(sources)
+        dst_set = {targets} if isinstance(targets, str) else set(targets)
+        for name in src_set | dst_set:
+            if name not in self.log.arrays:
+                raise KeyError(f"unknown array {name!r}")
+        if src_set & dst_set:
+            raise ValueError("source and target sets must be disjoint")
+
+        nodes, edges = g.induced_subdag(src_set, dst_set)
+        if nodes:
+            direction = "forward"
+            up_set, down_set = src_set, dst_set
+        else:
+            nodes, edges = g.induced_subdag(dst_set, src_set)
+            if not nodes:
+                raise KeyError(
+                    f"no lineage route between {sorted(src_set)} and "
+                    f"{sorted(dst_set)}"
+                )
+            direction = "backward"
+            up_set, down_set = dst_set, src_set
+        covered_dst = nodes & dst_set
+        if covered_dst != dst_set:
+            missing = sorted(dst_set - covered_dst)
+            raise KeyError(f"no lineage route to target(s) {missing}")
+
+        topo = g.topo_order(nodes)
+        order = topo if direction == "forward" else topo[::-1]
+        plan = QueryPlan(
+            direction=direction,
+            starts=tuple(sorted(src_set & nodes)),
+            target_keys={n: n for n in sorted(dst_set)},
+            order=order,
+            node_array={n: n for n in nodes},
+        )
+        # Estimated frontier box count per node, seeded by the real frontier.
+        nq0 = self._frontier_boxes(frontier)
+        est_boxes: dict[str, float] = {s: nq0 for s in plan.starts}
+        for key in order:
+            if key in plan.starts:
+                continue
+            if direction == "forward":
+                frontier_nodes = sorted({u for (u, v) in edges if v == key})
+            else:  # frontier flows dataflow-downstream → upstream
+                frontier_nodes = sorted({v for (u, v) in edges if u == key})
+            for u in frontier_nodes:
+                entries = (
+                    g.edge_ids(u, key)
+                    if direction == "forward"
+                    else g.edge_ids(key, u)
+                )
+                step = self._build_step(
+                    u,
+                    key,
+                    entries,
+                    traverse="forward" if direction == "forward" else "backward",
+                    nq=max(est_boxes.get(u, 1.0), 1.0),
+                    frontier=frontier if u in plan.starts else None,
+                )
+                plan.steps.setdefault(key, []).append(step)
+                plan.est_cost += sum(c.est_cost for c in step.choices)
+                est_boxes[key] = est_boxes.get(key, 0.0) + max(
+                    1.0, step.est_pairs * _MERGE_SHRINK
+                )
+        return plan
+
+    def plan_path(
+        self,
+        path: Sequence[str],
+        frontier: Sequence[QueryBox] | None = None,
+    ) -> QueryPlan:
+        """Plan the paper's explicit-path query form on the same executor.
+
+        One hop per adjacent pair; every stored entry between the pair
+        contributes, whichever dataflow direction it was registered in.
+        Node keys carry the position so a path may legally revisit an array.
+        """
+        if len(path) < 2:
+            raise ValueError("path needs at least two arrays")
+        keys = [f"{k}:{name}" for k, name in enumerate(path)]
+        plan = QueryPlan(
+            direction="path",
+            starts=(keys[0],),
+            target_keys={path[-1]: keys[-1]},
+            order=list(keys),
+            node_array=dict(zip(keys, path)),
+        )
+        nq = self._frontier_boxes(frontier)
+        for k, (a, b) in enumerate(zip(path[:-1], path[1:])):
+            # entries stored with dataflow b -> a: frontier sits on their dst
+            ids_down = self.log.by_pair.get((b, a), [])
+            # entries stored with dataflow a -> b: frontier sits on their src
+            ids_up = self.log.by_pair.get((a, b), [])
+            if not ids_down and not ids_up:
+                raise KeyError(f"no lineage stored between {a!r} and {b!r}")
+            choices: list[HopChoice] = []
+            hop_frontier = frontier if k == 0 else None
+            for lid in ids_down:
+                choices.append(
+                    self._best_choice(lid, "backward", nq, hop_frontier)
+                )
+            for lid in ids_up:
+                choices.append(
+                    self._best_choice(lid, "forward", nq, hop_frontier)
+                )
+            step = EdgeStep(keys[k], keys[k + 1], choices)
+            plan.steps[keys[k + 1]] = [step]
+            plan.est_cost += sum(c.est_cost for c in choices)
+            nq = max(1.0, step.est_pairs * _MERGE_SHRINK)
+        return plan
+
+    # ------------------------------------------------------------------ #
+    def _build_step(
+        self,
+        u: str,
+        v: str,
+        lineage_ids: list[int],
+        traverse: str,
+        nq: float,
+        frontier: Sequence[QueryBox] | None,
+    ) -> EdgeStep:
+        choices = [
+            self._best_choice(lid, traverse, nq, frontier) for lid in lineage_ids
+        ]
+        return EdgeStep(u, v, choices)
+
+    def _best_choice(
+        self,
+        lineage_id: int,
+        traverse: str,
+        nq: float,
+        frontier: Sequence[QueryBox] | None,
+    ) -> HopChoice:
+        """Cheapest (materialization, route) for one entry on one hop.
+
+        ``traverse`` is relative to the entry's dataflow: "forward" moves the
+        frontier src→dst (frontier matches the *forward* table's keys or the
+        backward table's values), "backward" the reverse.
+        """
+        entry = self.log.lineage[lineage_id]
+        options: list[HopChoice] = []
+        if traverse == "backward":
+            options.append(
+                self._cost_option(
+                    entry, lineage_id, "backward", "key", nq, frontier
+                )
+            )
+            if entry.has_forward:
+                options.append(
+                    self._cost_option(
+                        entry, lineage_id, "forward", "value", nq, frontier
+                    )
+                )
+        else:
+            if entry.has_forward:
+                options.append(
+                    self._cost_option(
+                        entry, lineage_id, "forward", "key", nq, frontier
+                    )
+                )
+            options.append(
+                self._cost_option(
+                    entry, lineage_id, "backward", "value", nq, frontier
+                )
+            )
+        return min(options, key=lambda c: c.est_cost)
+
+    def _cost_option(
+        self,
+        entry: "LineageEntry",
+        lineage_id: int,
+        stored: str,
+        frontier_on: str,
+        nq: float,
+        frontier: Sequence[QueryBox] | None,
+    ) -> HopChoice:
+        nr = entry.backward_rows if stored == "backward" else entry.forward_rows
+        nr = max(int(nr), 1)
+        table = entry.peek_table(stored)  # None while the blob is unloaded
+        est_pairs = self._estimate_pairs(table, nr, frontier_on, nq, frontier)
+        # route: small tables and unselective frontiers go dense
+        if nr < INDEX_MIN_ROWS or est_pairs > DENSE_FRACTION * nq * nr:
+            route = "dense"
+            join_cost = nq * nr
+        else:
+            route = "index"
+            join_cost = est_pairs + nq * math.log2(nr + 1)
+            has_index = table is not None and (
+                table.cached_key_index() is not None
+                if frontier_on == "key"
+                else table.cached_val_index() is not None
+            )
+            if not has_index:
+                join_cost += _INDEX_BUILD_WEIGHT * nr * math.log2(nr + 1)
+        if frontier_on == "value":
+            join_cost *= _INVERSE_OVERHEAD
+        return HopChoice(lineage_id, stored, frontier_on, route, est_pairs, join_cost)
+
+    def _estimate_pairs(
+        self,
+        table,
+        nr: int,
+        frontier_on: str,
+        nq: float,
+        frontier: Sequence[QueryBox] | None,
+    ) -> float:
+        """Expected candidate pairs for one hop.
+
+        Preference order: an already-cached IntervalIndex probed with the
+        *real* frontier (exact, first hop only) → closed-form overlap model
+        from the table's interval stats → row-cover fallback when the blob
+        has not been deserialized yet.
+        """
+        if table is None:
+            return nq * min(float(nr), _POINT_ROW_COVER)
+        if frontier is not None:
+            boxes = [q for q in frontier if q.n_rows]
+            if boxes:
+                q_lo = np.concatenate([q.lo for q in boxes], axis=0)
+                q_hi = np.concatenate([q.hi for q in boxes], axis=0)
+                idx = (
+                    table.cached_key_index()
+                    if frontier_on == "key"
+                    else table.cached_val_index()
+                )
+                if idx is not None:
+                    total = idx.estimate_candidates(q_lo, q_hi)
+                    return max(1.0, total / len(frontier))
+                mean_q = (q_hi - q_lo + 1).mean(axis=0)
+                return self._overlap_model(table, frontier_on, nq, mean_q)
+        return self._overlap_model(table, frontier_on, nq, None)
+
+    @staticmethod
+    def _overlap_model(table, frontier_on, nq, mean_q) -> float:
+        mean_r, span = (
+            table.key_stats() if frontier_on == "key" else table.val_stats()
+        )
+        if mean_q is None:
+            mean_q = np.ones_like(mean_r)
+        p = np.minimum(1.0, (mean_q + mean_r - 1.0) / span)
+        return float(nq) * table.n_rows * float(np.prod(p))
+
+    @staticmethod
+    def _frontier_boxes(frontier: Sequence[QueryBox] | None) -> float:
+        if not frontier:
+            return 1.0
+        return max(1.0, float(np.mean([q.n_rows for q in frontier])))
+
+    # ------------------------------------------------------------------ #
+    # execution
+    # ------------------------------------------------------------------ #
+    def execute(
+        self,
+        plan: QueryPlan,
+        queries: "Sequence[QueryBox] | dict[str, Sequence[QueryBox]]",
+        merge: bool = True,
+        collect: str = "targets",
+    ) -> dict[str, list[QueryBox]]:
+        """Run ``plan`` for a batch of queries rooted at its start node(s).
+
+        Nodes are processed in plan order; each node concatenates the
+        contributions of all incoming steps (plus its share of the initial
+        frontier, for start nodes) and — with ``merge`` — deduplicates the
+        combined frontier via ``merge_boxes``: the diamond fan-in
+        optimization.  ``queries`` is the batch for a single-start plan, or
+        ``{array name: batch}`` when the plan has several start arrays (all
+        batches the same length).  Returns ``{array name: [QueryBox per
+        query]}`` for the targets (or every node with ``collect="all"``).
+        """
+        if isinstance(queries, dict):
+            start_by_array = {plan.node_array[k]: k for k in plan.starts}
+            unknown = sorted(set(queries) - set(start_by_array))
+            if unknown:
+                raise KeyError(
+                    f"query batches for non-start array(s) {unknown}; "
+                    f"plan starts at {sorted(start_by_array)}"
+                )
+            missing = sorted(set(start_by_array) - set(queries))
+            if missing:
+                raise ValueError(
+                    f"missing query batch for start array(s) {missing}"
+                )
+            by_start = {
+                start_by_array[name]: qs for name, qs in queries.items()
+            }
+        else:
+            if len(plan.starts) != 1:
+                raise ValueError(
+                    "multi-start plan: pass queries as {array name: batch}"
+                )
+            by_start = {plan.starts[0]: queries}
+        init: dict[str, list[QueryBox]] = {}
+        lengths = set()
+        for key, qs in by_start.items():
+            shape = self.log.arrays[plan.node_array[key]].shape
+            boxes = [
+                q if isinstance(q, QueryBox) else QueryBox.from_cells(shape, q)
+                for q in qs
+            ]
+            if merge:
+                boxes = [merge_boxes(q) for q in boxes]
+            init[key] = boxes
+            lengths.add(len(boxes))
+        if len(lengths) > 1:
+            raise ValueError("per-start query batches must have equal length")
+        nB = lengths.pop() if lengths else 0
+
+        frontier: dict[str, list[QueryBox]] = {}
+        for key in plan.order:
+            shape = self.log.arrays[plan.node_array[key]].shape
+            nd = len(shape)
+            steps = plan.steps.get(key, [])
+            if key in init and not steps:
+                frontier[key] = init[key]
+                continue
+            acc_lo: list[list[np.ndarray]] = [[] for _ in range(nB)]
+            acc_hi: list[list[np.ndarray]] = [[] for _ in range(nB)]
+            for k, q in enumerate(init.get(key, [])):
+                acc_lo[k].append(q.lo)
+                acc_hi[k].append(q.hi)
+            for step in steps:
+                qs = frontier[step.u]
+                for choice in step.choices:
+                    for k, res in enumerate(self._run_choice(choice, qs)):
+                        acc_lo[k].append(res.lo)
+                        acc_hi[k].append(res.hi)
+            boxes = []
+            for k in range(nB):
+                lo = (
+                    np.concatenate(acc_lo[k])
+                    if acc_lo[k]
+                    else np.zeros((0, nd), np.int64)
+                )
+                hi = (
+                    np.concatenate(acc_hi[k])
+                    if acc_hi[k]
+                    else np.zeros((0, nd), np.int64)
+                )
+                res = QueryBox(shape, lo, hi)
+                boxes.append(merge_boxes(res) if merge else res)
+            frontier[key] = boxes
+        if collect == "all":
+            return {plan.node_array[k]: v for k, v in frontier.items()}
+        return {
+            name: frontier[key] for name, key in plan.target_keys.items()
+        }
+
+    def _run_choice(
+        self, choice: HopChoice, qs: list[QueryBox]
+    ) -> list[QueryBox]:
+        entry = self.log.lineage[choice.lineage_id]
+        table = entry.backward if choice.stored == "backward" else entry.forward
+        if choice.frontier_on == "key":
+            return theta_join_batch(qs, table, merge=False, path=choice.route)
+        return theta_join_inverse_batch(qs, table, merge=False, path=choice.route)

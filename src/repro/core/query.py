@@ -59,13 +59,20 @@ __all__ = [
     "theta_join",
     "theta_join_inverse",
     "theta_join_batch",
+    "theta_join_inverse_batch",
     "query_path",
     "merge_boxes",
+    "INDEX_MIN_ROWS",
+    "DENSE_FRACTION",
 ]
 
-# Routing thresholds for path="auto" (see module docstring / README).
-_INDEX_MIN_ROWS = 1024
-_DENSE_FRACTION = 0.25
+# Routing thresholds for path="auto"; the cost-based planner
+# (repro/core/planner.py) shares them when picking a route per hop.
+INDEX_MIN_ROWS = 1024
+DENSE_FRACTION = 0.25
+# back-compat aliases (pre-planner private names)
+_INDEX_MIN_ROWS = INDEX_MIN_ROWS
+_DENSE_FRACTION = DENSE_FRACTION
 # Hand the dense path to the Pallas kernel only when a real accelerator is
 # attached; in interpret mode the blocked numpy evaluation is faster.
 _KERNEL_MIN_PAIRS = 1 << 20
@@ -347,6 +354,47 @@ def theta_join_inverse(
 # --------------------------------------------------------------------------- #
 # Batched multi-query θ-join
 # --------------------------------------------------------------------------- #
+def _pool_boxes(
+    queries: Sequence[QueryBox],
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Dedup the union of all query rows: ``(u_lo, u_hi, inv)`` where ``inv``
+    maps each original row (queries concatenated) to its distinct box."""
+    all_lo = np.concatenate([q.lo for q in queries], axis=0)
+    all_hi = np.concatenate([q.hi for q in queries], axis=0)
+    uniq, inv = np.unique(
+        np.concatenate([all_lo, all_hi], axis=1), axis=0, return_inverse=True
+    )
+    inv = inv.reshape(-1)  # numpy 2.1 returned keepdims-shaped inverse
+    nd = all_lo.shape[1]
+    return uniq[:, :nd], uniq[:, nd:], inv
+
+
+def _scatter_to_owners(
+    queries: Sequence[QueryBox],
+    inv: np.ndarray,
+    ui: np.ndarray,
+    n_uniq: int,
+    out_lo: np.ndarray,
+    out_hi: np.ndarray,
+    shape: tuple[int, ...],
+    merge: bool,
+) -> list[QueryBox]:
+    """Group per-pair outputs by distinct query row, scatter to owners."""
+    perm = np.argsort(ui, kind="stable")
+    pair_counts = np.bincount(ui, minlength=n_uniq).astype(np.int64)
+    pair_offsets = np.cumsum(pair_counts) - pair_counts
+    results: list[QueryBox] = []
+    row_off = 0
+    for q in queries:
+        ids = inv[row_off : row_off + q.n_rows]
+        row_off += q.n_rows
+        _, pos = ragged_ranges(pair_offsets[ids], pair_offsets[ids] + pair_counts[ids])
+        sel = perm[pos]
+        res = QueryBox(shape, out_lo[sel], out_hi[sel])
+        results.append(merge_boxes(res) if merge else res)
+    return results
+
+
 def theta_join_batch(
     queries: Sequence[QueryBox],
     table: CompressedTable,
@@ -372,40 +420,64 @@ def theta_join_batch(
     empty = lambda: QueryBox(table.val_shape, np.zeros((0, m)), np.zeros((0, m)))
     if not queries:
         return []
-    counts = np.array([q.n_rows for q in queries], np.int64)
-    if counts.sum() == 0 or table.n_rows == 0:
+    if sum(q.n_rows for q in queries) == 0 or table.n_rows == 0:
         return [empty() for _ in queries]
 
-    all_lo = np.concatenate([q.lo for q in queries], axis=0)
-    all_hi = np.concatenate([q.hi for q in queries], axis=0)
-    uniq, inv = np.unique(
-        np.concatenate([all_lo, all_hi], axis=1), axis=0, return_inverse=True
-    )
-    inv = inv.reshape(-1)  # numpy 2.1 returned keepdims-shaped inverse
-    nd = all_lo.shape[1]
-    u_lo, u_hi = uniq[:, :nd], uniq[:, nd:]
-
+    u_lo, u_hi, inv = _pool_boxes(queries)
     ui, ri = _route_pairs(
         u_lo, u_hi, table.key_lo, table.key_hi, table.key_index, path
     )
     inter_lo = np.maximum(u_lo[ui], table.key_lo[ri])
     inter_hi = np.minimum(u_hi[ui], table.key_hi[ri])
     out_lo, out_hi = _derelativize(table, ui, ri, inter_lo, inter_hi)
+    return _scatter_to_owners(
+        queries, inv, ui, u_lo.shape[0], out_lo, out_hi, table.val_shape, merge
+    )
 
-    # Group pairs by distinct query row, then scatter to owners.
-    perm = np.argsort(ui, kind="stable")
-    pair_counts = np.bincount(ui, minlength=u_lo.shape[0]).astype(np.int64)
-    pair_offsets = np.cumsum(pair_counts) - pair_counts
-    results: list[QueryBox] = []
-    row_off = 0
+
+def theta_join_inverse_batch(
+    queries: Sequence[QueryBox],
+    table: CompressedTable,
+    merge: bool = True,
+    path: str = "auto",
+) -> list[QueryBox]:
+    """Batched :func:`theta_join_inverse`: many value-side queries, one pass.
+
+    Same pooling/dedup/scatter machinery as :func:`theta_join_batch`, with
+    the candidate pruning running over the table's achievable value bounds
+    and the per-pair key-interval inversion (plus its joint-validity check)
+    done once per *distinct* (box, row) pair.
+    """
+    if table.is_symbolic:
+        raise ValueError("instantiate symbolic table before querying")
     for q in queries:
-        ids = inv[row_off : row_off + q.n_rows]
-        row_off += q.n_rows
-        _, pos = ragged_ranges(pair_offsets[ids], pair_offsets[ids] + pair_counts[ids])
-        sel = perm[pos]
-        res = QueryBox(table.val_shape, out_lo[sel], out_hi[sel])
-        results.append(merge_boxes(res) if merge else res)
-    return results
+        if q.shape != table.val_shape:
+            raise ValueError(
+                f"query shape {q.shape} does not match table val shape "
+                f"{table.val_shape}"
+            )
+    l = table.n_key
+    empty = lambda: QueryBox(table.key_shape, np.zeros((0, l)), np.zeros((0, l)))
+    if not queries:
+        return []
+    if sum(q.n_rows for q in queries) == 0 or table.n_rows == 0:
+        return [empty() for _ in queries]
+
+    u_lo, u_hi, inv = _pool_boxes(queries)
+    vb_lo, vb_hi = table.value_bounds()
+    ui, ri = _route_pairs(u_lo, u_hi, vb_lo, vb_hi, table.val_index, path)
+    pooled = QueryBox(table.val_shape, u_lo, u_hi)
+    key_lo, key_hi, valid = _inverse_key_boxes(pooled, table, ui, ri)
+    return _scatter_to_owners(
+        queries,
+        inv,
+        ui[valid],
+        u_lo.shape[0],
+        key_lo[valid],
+        key_hi[valid],
+        table.key_shape,
+        merge,
+    )
 
 
 # --------------------------------------------------------------------------- #

@@ -297,3 +297,56 @@ class ReusePredictor:
     def status(self, key: str) -> str | None:
         st = self.state.get(key)
         return st.status if st else None
+
+    # ------------------------------------------------------------------ #
+    # persistence (catalog manifest v2)
+    # ------------------------------------------------------------------ #
+    def state_manifest(self, save_table) -> dict:
+        """JSON-safe snapshot of the prediction state.
+
+        ``save_table(sig_key, label, table) -> str`` persists one stored
+        table and returns its blob name — the predictor stays I/O-free; the
+        catalog owns file layout.  Rejected signatures keep only their
+        verdict (their tables can never be consulted again).
+        """
+        sigs = []
+        for key, st in self.state.items():
+            rec = {
+                "key": key,
+                "kind": st.kind,
+                "status": st.status,
+                "matches": st.matches,
+                "seen_shapes": [
+                    [list(map(int, s)) for s in tok] for tok in st.seen_shapes
+                ],
+                "tables": {},
+            }
+            if st.status != "rejected":
+                rec["tables"] = {
+                    label: save_table(key, label, tbl)
+                    for label, tbl in st.tables.items()
+                }
+            sigs.append(rec)
+        return {"m": self.m, "sigs": sigs}
+
+    @classmethod
+    def from_manifest(cls, manifest: dict, load_table) -> "ReusePredictor":
+        """Rebuild a predictor from :meth:`state_manifest` output.
+
+        ``load_table(blob_name) -> CompressedTable`` resolves the stored
+        tables (catalog-owned I/O).  A reloaded predictor keeps confirmed
+        mappings live, so ``register_operation`` on a reopened catalog still
+        bypasses capture.
+        """
+        p = cls(m=int(manifest.get("m", 1)))
+        for rec in manifest.get("sigs", []):
+            st = _SigState(rec["kind"], rec["status"], int(rec["matches"]))
+            st.seen_shapes = {
+                tuple(tuple(int(x) for x in s) for s in tok)
+                for tok in rec["seen_shapes"]
+            }
+            st.tables = {
+                label: load_table(fn) for label, fn in rec["tables"].items()
+            }
+            p.state[rec["key"]] = st
+        return p

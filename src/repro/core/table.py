@@ -37,10 +37,12 @@ from dataclasses import dataclass, field, replace
 
 import numpy as np
 
-from .index import IntervalIndex
+from typing import Callable
+
+from .index import IntervalIndex, interval_stats
 from .relation import LineageRelation
 
-__all__ = ["CompressedTable"]
+__all__ = ["CompressedTable", "TableHandle"]
 
 _MAGIC = b"PRVC1\n"
 
@@ -174,9 +176,35 @@ class CompressedTable:
             cache["val"] = idx
         return idx
 
+    def key_stats(self) -> tuple[np.ndarray, np.ndarray]:
+        """Per-key-attribute ``(mean interval length, span)``, cached.
+
+        Fed to the planner's closed-form cost model; invalidated together
+        with the interval indexes when the interval columns change.
+        """
+        cache = self._cache()
+        st = cache.get("key_stats")
+        if st is None:
+            st = interval_stats(self.key_lo, self.key_hi)
+            cache["key_stats"] = st
+        return st
+
+    def val_stats(self) -> tuple[np.ndarray, np.ndarray]:
+        """Like :meth:`key_stats` over the achievable value bounds."""
+        cache = self._cache()
+        st = cache.get("val_stats")
+        if st is None:
+            st = interval_stats(*self.value_bounds())
+            cache["val_stats"] = st
+        return st
+
     def cached_key_index(self) -> IntervalIndex | None:
         """The key index if one is already built/attached, without building."""
         return self._cache().get("key")
+
+    def cached_val_index(self) -> IntervalIndex | None:
+        """The value-bounds index if already built, without building."""
+        return self._cache().get("val")
 
     def invalidate_index(self) -> None:
         """Drop cached indexes.  Reassigning an array field does this
@@ -314,3 +342,50 @@ class CompressedTable:
         else:  # forward: keys are the *input* axes
             rel = LineageRelation(self.val_shape, self.key_shape, inn, out)
         return rel.canonical()
+
+
+class TableHandle:
+    """Lazy handle to a persisted :class:`CompressedTable` blob.
+
+    The catalog's manifest records row counts and blob file names; the blob
+    itself stays on disk until something actually needs the intervals.
+    ``get()`` resolves (and memoizes) the table via the supplied loader,
+    firing ``on_load`` exactly once — the catalog uses that callback for its
+    lazy-I/O counters, and tests assert on them to prove a reload touched
+    only the tables a query needed.
+
+    ``n_rows`` may be ``None`` for pre-v2 manifests that did not record row
+    counts; reading :attr:`rows` then forces the load.
+    """
+
+    __slots__ = ("_loader", "_table", "_on_load", "n_rows")
+
+    def __init__(
+        self,
+        loader: "Callable[[], CompressedTable]",
+        n_rows: int | None = None,
+        on_load: "Callable[[], None] | None" = None,
+    ):
+        self._loader = loader
+        self._table: CompressedTable | None = None
+        self._on_load = on_load
+        self.n_rows = n_rows
+
+    @property
+    def loaded(self) -> bool:
+        return self._table is not None
+
+    @property
+    def rows(self) -> int:
+        """Row count without loading when the manifest recorded it."""
+        if self.n_rows is not None:
+            return int(self.n_rows)
+        return self.get().n_rows
+
+    def get(self) -> CompressedTable:
+        if self._table is None:
+            self._table = self._loader()
+            self.n_rows = self._table.n_rows
+            if self._on_load is not None:
+                self._on_load()
+        return self._table

@@ -1,0 +1,70 @@
+"""Integration facade for logging framework ops into DSLog.
+
+``repro.core.oplib`` promises this module as the surface the training
+framework uses to record pipeline/model operations: one import gives the
+catalog (:class:`DSLog`), the query types, the lineage DAG and planner, the
+op registry with its per-op lineage adapters, and the capture helpers —
+without reaching into individual ``repro.core`` submodules.
+
+    from repro import lineage as L
+
+    log = L.DSLog(root="/tmp/lineage")
+    spec = L.get_op("matmul")            # adapter from the op registry
+    log.register_operation(...)
+    L.QueryBox, log.prov_query("loss", "corpus", cells)  # graph-form query
+
+The data pipeline (``repro.data.pipeline.TokenPipeline``) accepts a
+``dslog=`` instance and logs through this same API; see
+``examples/lineage_debugging.py`` for the end-to-end flow.
+"""
+
+from repro.core import (  # noqa: F401
+    ArrayDef,
+    CompressedTable,
+    CycleError,
+    DSLog,
+    IntervalIndex,
+    LineageEntry,
+    LineageGraph,
+    LineageRelation,
+    QueryBox,
+    QueryPlan,
+    QueryPlanner,
+    ReusePredictor,
+    compress,
+    compress_both,
+    merge_boxes,
+    theta_join,
+    theta_join_batch,
+    theta_join_inverse,
+    theta_join_inverse_batch,
+)
+from repro.core import capture  # noqa: F401
+from repro.core.oplib import OPS, OpSpec, get_op, op_names  # noqa: F401
+
+__all__ = [
+    "ArrayDef",
+    "CompressedTable",
+    "CycleError",
+    "DSLog",
+    "IntervalIndex",
+    "LineageEntry",
+    "LineageGraph",
+    "LineageRelation",
+    "OPS",
+    "OpSpec",
+    "QueryBox",
+    "QueryPlan",
+    "QueryPlanner",
+    "ReusePredictor",
+    "capture",
+    "compress",
+    "compress_both",
+    "get_op",
+    "merge_boxes",
+    "op_names",
+    "theta_join",
+    "theta_join_batch",
+    "theta_join_inverse",
+    "theta_join_inverse_batch",
+]

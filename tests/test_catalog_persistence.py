@@ -1,0 +1,194 @@
+"""Persistence v2: lazy handles, dirty-tracked saves, reuse-state round-trip."""
+
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core.capture import identity_lineage, reduce_lineage
+from repro.core.catalog import DSLog
+
+
+def _three_chains(root):
+    """Three independent 1-hop chains so a query can touch a strict subset."""
+    log = DSLog(root=root, store_forward=True)
+    log.add_lineage("A", "B", identity_lineage((6, 3)))
+    log.add_lineage("C", "D", reduce_lineage((6, 3), 1))
+    log.add_lineage("E", "F", identity_lineage((5,)))
+    log.save()
+    return log
+
+
+def test_lazy_reload_deserializes_only_touched_tables():
+    with tempfile.TemporaryDirectory() as d:
+        _three_chains(d)
+        log2 = DSLog.load(d)
+        assert log2.io_stats["tables_loaded"] == 0
+        assert not any(e.backward_loaded or e.forward_loaded for e in log2.lineage.values())
+        # graph is rebuilt without touching any blob
+        assert log2.graph.has_path("A", "B") and not log2.graph.has_path("A", "D")
+
+        res = log2.prov_query("B", "A", np.array([[4, 1]]))
+        assert res.cell_set() == {(4, 1)}
+        # exactly one materialization of one entry was deserialized
+        assert log2.io_stats["tables_loaded"] == 1
+        touched = [e for e in log2.lineage.values() if e.backward_loaded or e.forward_loaded]
+        assert len(touched) == 1 and touched[0].src == "A"
+        untouched = [e for e in log2.lineage.values() if e.src != "A"]
+        assert all(not e.backward_loaded and not e.forward_loaded for e in untouched)
+
+
+def test_manifest_records_rows_for_costing_without_io():
+    with tempfile.TemporaryDirectory() as d:
+        log = _three_chains(d)
+        want = {e.lineage_id: e.backward.n_rows for e in log.lineage.values()}
+        log2 = DSLog.load(d)
+        got = {e.lineage_id: e.backward_rows for e in log2.lineage.values()}
+        assert got == want
+        assert log2.io_stats["tables_loaded"] == 0  # row counts came from JSON
+        # planning a query is free of blob I/O too
+        log2.planner.plan("B", ["A"])
+        assert log2.io_stats["tables_loaded"] == 0
+
+
+def test_dirty_save_writes_only_new_entries():
+    with tempfile.TemporaryDirectory() as d:
+        log = _three_chains(d)
+        first_written = log.io_stats["tables_written"]
+        assert first_written == 6  # 3 entries x (backward + forward)
+        log.save()  # nothing dirty -> no table rewrites
+        assert log.io_stats["tables_written"] == first_written
+
+        log.add_lineage("F", "G", identity_lineage((5,)))
+        log.save()
+        assert log.io_stats["tables_written"] == first_written + 2
+
+        # a reloaded catalog extends incrementally without deserializing or
+        # rewriting the clean (still-lazy) entries
+        log2 = DSLog.load(d)
+        log2.add_lineage("G", "H", identity_lineage((5,)))
+        log2.save()
+        assert log2.io_stats["tables_written"] == 2
+        assert log2.io_stats["tables_loaded"] == 0
+        log3 = DSLog.load(d)
+        assert len(log3.lineage) == 5
+        res = log3.prov_query(["H", "G", "F", "E"], np.array([[2]]))
+        assert res.cell_set() == {(2,)}
+
+
+def test_ops_round_trip():
+    with tempfile.TemporaryDirectory() as d:
+        log = DSLog(root=d)
+        log.define_array("x", (4, 3))
+        log.define_array("y", (4,))
+        log.register_operation(
+            "rowsum", ["x"], ["y"],
+            capture=lambda: {(0, 0): reduce_lineage((4, 3), 1)},
+            op_args={"axis": 1},
+        )
+        log.save()
+        log2 = DSLog.load(d)
+        assert len(log2.ops) == 1
+        op = log2.ops[0]
+        assert op.op_name == "rowsum"
+        assert op.in_arrs == ("x",) and op.out_arrs == ("y",)
+        assert op.op_args == {"axis": 1}
+        assert op.lineage_ids == [0] and op.reused is None
+
+
+def test_reload_keeps_confirmed_gen_sig_mapping():
+    """Regression (ISSUE 2): load() used to drop ops + predictor state, so a
+    persisted catalog silently restarted reuse from scratch."""
+    with tempfile.TemporaryDirectory() as d:
+        log = DSLog(root=d, reuse_m=1)
+        for i, shape in enumerate([(4, 2), (4, 2), (9, 5)]):
+            log.define_array(f"x{i}", shape)
+            log.define_array(f"y{i}", shape)
+            log.register_operation(
+                "neg", [f"x{i}"], [f"y{i}"],
+                capture=lambda s=shape: {(0, 0): identity_lineage(s)},
+            )
+        from repro.core.reuse import sig_key_gen
+
+        assert log.predictor.status(sig_key_gen("neg", None)) == "confirmed"
+        log.save()
+
+        log2 = DSLog.load(d)
+        assert log2.predictor.status(sig_key_gen("neg", None)) == "confirmed"
+        # a brand-new shape must bypass capture entirely (capture=None works)
+        log2.define_array("x9", (3, 7))
+        log2.define_array("y9", (3, 7))
+        rec = log2.register_operation("neg", ["x9"], ["y9"], capture=None)
+        assert rec.reused == "gen"
+        res = log2.prov_query("y9", "x9", np.array([[2, 6]]))
+        assert res.cell_set() == {(2, 6)}
+
+
+def test_reload_keeps_confirmed_dim_sig_mapping():
+    with tempfile.TemporaryDirectory() as d:
+        log = DSLog(root=d, reuse_m=1)
+        for i in range(2):
+            log.define_array(f"a{i}", (6, 4))
+            log.define_array(f"b{i}", (6, 4))
+            log.register_operation(
+                "exp", [f"a{i}"], [f"b{i}"],
+                capture=lambda: {(0, 0): identity_lineage((6, 4))},
+            )
+        log.save()
+        log2 = DSLog.load(d)
+        calls = {"n": 0}
+
+        def capture():
+            calls["n"] += 1
+            return {(0, 0): identity_lineage((6, 4))}
+
+        log2.define_array("a9", (6, 4))
+        log2.define_array("b9", (6, 4))
+        rec = log2.register_operation("exp", ["a9"], ["b9"], capture=capture)
+        assert rec.reused == "dim"
+        assert calls["n"] == 0  # capture bypassed after reload
+
+
+def test_predictor_state_not_rewritten_when_clean():
+    with tempfile.TemporaryDirectory() as d:
+        log = DSLog(root=d, reuse_m=1)
+        log.define_array("a", (4,))
+        log.define_array("b", (4,))
+        log.register_operation(
+            "neg", ["a"], ["b"], capture=lambda: {(0, 0): identity_lineage((4,))}
+        )
+        log.save()
+        sig_mtime = os.path.getmtime(os.path.join(d, "sig_0.prvc"))
+        log.add_lineage("b", "c", identity_lineage((4,)))  # no predictor change
+        log.save()
+        assert os.path.getmtime(os.path.join(d, "sig_0.prvc")) == sig_mtime
+
+
+def test_v1_manifest_still_loads():
+    """Manifests written before the graph/planner rework (no version, ops,
+    predictor, or row counts) keep loading — just without reuse state."""
+    with tempfile.TemporaryDirectory() as d:
+        _three_chains(d)
+        path = os.path.join(d, "catalog.json")
+        with open(path) as f:
+            meta = json.load(f)
+        for key in ("version", "ops", "predictor"):
+            meta.pop(key, None)
+        for rec in meta["lineage"]:
+            rec.pop("rows", None)
+            rec.pop("fwd_rows", None)
+        with open(path, "w") as f:
+            json.dump(meta, f)
+        log = DSLog.load(d)
+        assert log.ops == []
+        res = log.prov_query(["B", "A"], np.array([[4, 1]]))
+        assert res.cell_set() == {(4, 1)}
+        # rows were absent from the manifest: reading them forces the load
+        assert all(isinstance(e.backward_rows, int) for e in log.lineage.values())
+
+
+def test_save_without_root_raises():
+    with pytest.raises(ValueError):
+        DSLog().save()

@@ -1,0 +1,143 @@
+"""LineageGraph: adjacency, reachability, path sets, cycle rejection."""
+
+import numpy as np
+import pytest
+
+from repro.core.capture import identity_lineage, reduce_lineage
+from repro.core.catalog import DSLog
+from repro.core.graph import CycleError, LineageGraph
+
+
+def _diamond() -> LineageGraph:
+    g = LineageGraph()
+    g.add_edge("x", "a", 0)
+    g.add_edge("x", "b", 1)
+    g.add_edge("a", "z", 2)
+    g.add_edge("b", "z", 3)
+    return g
+
+
+def test_adjacency_and_edge_ids():
+    g = _diamond()
+    assert sorted(g.successors("x")) == ["a", "b"]
+    assert sorted(g.predecessors("z")) == ["a", "b"]
+    assert g.edge_ids("x", "a") == [0]
+    assert g.edge_ids("a", "x") == []
+    g.add_edge("x", "a", 7)  # parallel entry on an existing edge
+    assert g.edge_ids("x", "a") == [0, 7]
+    assert g.n_edges() == 5
+    assert len(g) == 4 and "x" in g
+
+
+def test_reachability_both_directions():
+    g = _diamond()
+    g.add_edge("z", "out", 4)
+    assert g.reachable("x") == {"x", "a", "b", "z", "out"}
+    assert g.reachable("a") == {"a", "z", "out"}
+    assert g.reachable("z", "backward") == {"z", "a", "b", "x"}
+    assert g.has_path("x", "out") and not g.has_path("out", "x")
+    # set-valued starts
+    assert g.reachable({"a", "b"}) == {"a", "b", "z", "out"}
+
+
+def test_cycle_rejection_leaves_graph_untouched():
+    g = _diamond()
+    with pytest.raises(CycleError):
+        g.add_edge("z", "x", 9)
+    with pytest.raises(CycleError):
+        g.add_edge("x", "x", 9)
+    assert g.n_edges() == 4
+    assert "z" not in g.fwd or "x" not in g.fwd.get("z", {})
+
+
+def test_simple_paths_between_sets():
+    g = _diamond()
+    g.add_edge("z", "out", 4)
+    paths = g.simple_paths("x", "z")
+    assert sorted(paths) == [["x", "a", "z"], ["x", "b", "z"]]
+    # endpoint sets: either branch node to either sink
+    paths = g.simple_paths({"a", "b"}, {"z", "out"})
+    assert ["a", "z"] in paths and ["b", "z", "out"] in paths
+    assert len(paths) == 4
+    # a target upstream of another target still terminates paths at both
+    assert ["a", "z"] in g.simple_paths("a", {"z", "out"})
+    assert g.simple_paths("out", "x") == []
+    assert g.simple_paths("x", "z", max_paths=1) == [["x", "a", "z"]]
+
+
+def test_induced_subdag_and_topo_order():
+    g = _diamond()
+    g.add_edge("z", "out", 4)
+    g.add_edge("stray", "other", 5)
+    nodes, edges = g.induced_subdag("x", "z")
+    assert nodes == {"x", "a", "b", "z"}
+    assert ("z", "out") not in edges and len(edges) == 4
+    order = g.topo_order(nodes)
+    assert order[0] == "x" and order[-1] == "z"
+    assert order.index("a") < order.index("z")
+    assert order.index("b") < order.index("z")
+    # deterministic tie-break by name
+    assert order == ["x", "a", "b", "z"]
+
+
+def test_catalog_builds_graph_incrementally():
+    log = DSLog()
+    log.add_lineage("X", "Y", identity_lineage((4, 3)))
+    log.add_lineage("Y", "Z", reduce_lineage((4, 3), 1))
+    assert log.graph.has_path("X", "Z")
+    assert log.graph.edge_ids("X", "Y") == [0]
+    # registering an op adds its edges too
+    log.define_array("W", (4,))
+    log.register_operation(
+        "relu", ["Z"], ["W"], capture=lambda: {(0, 0): identity_lineage((4,))}
+    )
+    assert log.graph.has_path("X", "W")
+
+
+def test_catalog_rejects_cyclic_lineage():
+    log = DSLog()
+    log.add_lineage("X", "Y", identity_lineage((4,)))
+    with pytest.raises(CycleError):
+        log.add_lineage("Y", "X", identity_lineage((4,)))
+    # the failed add must not leave a dangling entry behind
+    assert ("Y", "X") not in log.by_pair
+    assert len(log.lineage) == 1
+
+
+def test_remove_edge_rollback():
+    g = _diamond()
+    g.add_edge("x", "a", 7)
+    g.remove_edge("x", "a", 7)
+    assert g.edge_ids("x", "a") == [0]
+    g.remove_edge("x", "a", 0)
+    assert g.edge_ids("x", "a") == []
+    assert "a" not in g.successors("x")
+    g.remove_edge("x", "a", 99)  # absent id: no-op
+    # with the edge gone, the reverse direction is insertable again
+    g.add_edge("a", "x", 8)
+    assert g.has_path("a", "z") and g.has_path("a", "x")
+
+
+def test_register_operation_is_atomic_on_cycle():
+    """A multi-entry op whose later pair closes a cycle must roll back the
+    sibling entries it already inserted (and observe nothing)."""
+    log = DSLog()
+    log.add_lineage("u", "v", identity_lineage((4,)))
+    log.define_array("w", (4,))
+    log.define_array("x", (4,))
+    n_before = len(log.lineage)
+    with pytest.raises(CycleError):
+        # (0,0) w->... fine; in-place second output closes v->u... use
+        # out list where first pair inserts cleanly, second is cyclic
+        log.register_operation(
+            "op", ["v", "w"], ["x", "u"],
+            capture=lambda: {
+                (0, 0): identity_lineage((4,)),  # v -> x (fine)
+                (1, 0): identity_lineage((4,)),  # v -> u (closes u->v->u)
+            },
+            reuse=False,
+        )
+    assert len(log.lineage) == n_before
+    assert ("v", "x") not in log.by_pair
+    assert log.graph.edge_ids("v", "x") == []
+    assert log.ops == []  # no half-registered op record

@@ -1,0 +1,263 @@
+"""Cost-based planner: graph-form prov_query == path form == row oracle."""
+
+import numpy as np
+import pytest
+
+from repro.core.capture import (
+    flip_lineage,
+    identity_lineage,
+    reduce_lineage,
+    roll_lineage,
+    transpose_lineage,
+)
+from repro.core.catalog import DSLog
+from repro.core.query import QueryBox
+
+
+def _propagate(rel, cells, forward=True):
+    cur = {tuple(c) for c in cells}
+    nxt = set()
+    for o, i in zip(rel.out_idx, rel.in_idx):
+        if forward and tuple(i) in cur:
+            nxt.add(tuple(o))
+        if not forward and tuple(o) in cur:
+            nxt.add(tuple(i))
+    return nxt
+
+
+def _dag_oracle(log, rels, src, dst, cells, forward=True):
+    """Propagate a cell set through the DAG of uncompressed relations.
+
+    ``rels`` maps (src_array, dst_array) -> [LineageRelation, ...].
+    """
+    topo = log.graph.topo_order()
+    order = topo if forward else topo[::-1]
+    influence = {n: set() for n in topo}
+    influence[src] = {tuple(c) for c in cells}
+    for node in order:
+        for (u, v), rlist in rels.items():
+            edge_from = u if forward else v
+            if edge_from != node:
+                continue
+            out = v if forward else u
+            for rel in rlist:
+                influence[out] |= _propagate(rel, influence[node], forward)
+    return influence[dst]
+
+
+def _linear_chain(log):
+    """img -> small -> rot -> scores, mixed op kinds."""
+    rels = [
+        identity_lineage((8, 8)),
+        transpose_lineage((8, 8), (1, 0)),
+        reduce_lineage((8, 8), 1),
+    ]
+    names = ["img", "small", "rot", "scores"]
+    log.define_array(names[0], (8, 8))
+    for k, rel in enumerate(rels):
+        log.define_array(names[k + 1], rel.out_shape)
+        log.register_operation(
+            f"op{k}", [names[k]], [names[k + 1]],
+            capture=lambda r=rel: {(0, 0): r}, reuse=False,
+        )
+    return names, rels
+
+
+def _boxes_equal(a: QueryBox, b: QueryBox) -> bool:
+    ca = np.unique(np.concatenate([a.lo, a.hi], axis=1), axis=0)
+    cb = np.unique(np.concatenate([b.lo, b.hi], axis=1), axis=0)
+    return ca.shape == cb.shape and bool(np.array_equal(ca, cb))
+
+
+def test_graph_form_matches_path_form_linear():
+    log = DSLog()
+    names, _ = _linear_chain(log)
+    cells = np.array([[2, 3], [5, 1]])
+    for merge in (True, False):
+        via_path = log.prov_query(names, cells, merge=merge)
+        via_graph = log.prov_query(names[0], names[-1], cells, merge=merge)
+        assert _boxes_equal(via_path, via_graph)
+        back = np.array([[4]])
+        bp = log.prov_query(names[::-1], back, merge=merge)
+        bg = log.prov_query(names[-1], names[0], back, merge=merge)
+        assert _boxes_equal(bp, bg)
+
+
+def test_graph_form_batch_matches_path_form():
+    log = DSLog()
+    names, _ = _linear_chain(log)
+    queries = [np.array([[1, 1]]), np.array([[2, 3], [5, 1]]), np.array([[1, 1]])]
+    via_path = log.prov_query_batch(names, queries)
+    via_graph = log.prov_query_batch(names[0], names[-1], queries)
+    assert len(via_path) == len(via_graph) == 3
+    for p, g in zip(via_path, via_graph):
+        assert _boxes_equal(p, g)
+    assert log.prov_query_batch(names[0], names[-1], []) == []
+
+
+def _diamond(log, side=8):
+    """x fans out to a and b (one 2-output op), which fan back into z."""
+    rel_xa = flip_lineage((side, side), 0)
+    rel_xb = roll_lineage((side, side), 2, 1)
+    rel_az = identity_lineage((side, side))
+    rel_bz = identity_lineage((side, side))
+    log.define_array("x", (side, side))
+    log.define_array("a", (side, side))
+    log.define_array("b", (side, side))
+    log.define_array("z", (side, side))
+    log.register_operation(
+        "split", ["x"], ["a", "b"],
+        capture=lambda: {(0, 0): rel_xa, (1, 0): rel_xb}, reuse=False,
+    )
+    log.register_operation(
+        "combine", ["a", "b"], ["z"],
+        capture=lambda: {(0, 0): rel_az, (0, 1): rel_bz}, reuse=False,
+    )
+    return {
+        ("x", "a"): [rel_xa],
+        ("x", "b"): [rel_xb],
+        ("a", "z"): [rel_az],
+        ("b", "z"): [rel_bz],
+    }
+
+
+def test_diamond_dag_matches_row_oracle():
+    """Fan-out then fan-in: planner result == uncompressed-row propagation."""
+    log = DSLog()
+    rels = _diamond(log)
+    cells = np.array([[2, 3], [7, 0]])
+    fwd = log.prov_query("x", "z", cells)
+    assert fwd.cell_set() == _dag_oracle(log, rels, "x", "z", cells, forward=True)
+    back = np.array([[4, 4]])
+    bwd = log.prov_query("z", "x", back)
+    assert bwd.cell_set() == _dag_oracle(log, rels, "z", "x", back, forward=False)
+
+
+def test_diamond_equals_per_path_union():
+    """Planner-merged execution covers exactly the union over simple paths."""
+    log = DSLog()
+    _diamond(log)
+    cells = np.array([[1, 5]])
+    merged = log.prov_query("x", "z", cells).cell_set()
+    paths = log.graph.simple_paths("x", "z")
+    assert sorted(paths) == [["x", "a", "z"], ["x", "b", "z"]]
+    union = set()
+    for p in paths:
+        union |= log.prov_query(p, cells).cell_set()
+    assert merged == union
+
+
+def test_fanin_frontier_is_merged():
+    """At the fan-in array the planner deduplicates the combined frontier:
+    identical branch contributions collapse to one box set."""
+    log = DSLog()
+    # both branches are identity -> contributions at z coincide exactly
+    log.define_array("x", (6, 6))
+    log.define_array("a", (6, 6))
+    log.define_array("b", (6, 6))
+    log.define_array("z", (6, 6))
+    ident = lambda: identity_lineage((6, 6))
+    log.register_operation("p", ["x"], ["a"], capture=lambda: {(0, 0): ident()}, reuse=False)
+    log.register_operation("q", ["x"], ["b"], capture=lambda: {(0, 0): ident()}, reuse=False)
+    log.register_operation(
+        "combine", ["a", "b"], ["z"],
+        capture=lambda: {(0, 0): ident(), (0, 1): ident()}, reuse=False,
+    )
+    cells = np.array([[2, 2]])
+    plan = log.planner.plan("x", ["z"])
+    out = log.planner.execute(plan, log._as_boxes("x", [cells]), collect="all")
+    assert out["z"][0].n_rows == 1  # merged, not 2 copies of the same box
+    assert out["z"][0].cell_set() == {(2, 2)}
+
+
+def test_planner_materialization_choice():
+    """Forward traversal without a stored forward table must run the inverse
+    join on the backward table; with one stored, the natural join wins."""
+    log_nofwd = DSLog(store_forward=False)
+    log_fwd = DSLog(store_forward=True)
+    rel = reduce_lineage((8, 4), 1)
+    for log in (log_nofwd, log_fwd):
+        log.add_lineage("in", "out", rel)
+    q = np.array([[3, 2]])
+    plan_no = log_nofwd.planner.plan("in", ["out"])
+    (step,) = plan_no.steps[plan_no.order[-1]]
+    assert step.choices[0].stored == "backward"
+    assert step.choices[0].frontier_on == "value"  # inverse join
+    plan_f = log_fwd.planner.plan("in", ["out"])
+    (step,) = plan_f.steps[plan_f.order[-1]]
+    assert step.choices[0].stored == "forward"
+    assert step.choices[0].frontier_on == "key"  # natural join
+    # both produce identical answers
+    assert (
+        log_nofwd.prov_query("in", "out", q).cell_set()
+        == log_fwd.prov_query("in", "out", q).cell_set()
+        == {(3,)}
+    )
+
+
+def test_multi_target_query_returns_dict():
+    log = DSLog()
+    _diamond(log)
+    cells = np.array([[0, 0]])
+    res = log.prov_query("x", ["a", "z"], cells)
+    assert set(res) == {"a", "z"}
+    assert res["a"].cell_set() == log.prov_query("x", "a", cells).cell_set()
+    assert res["z"].cell_set() == log.prov_query("x", "z", cells).cell_set()
+
+
+def test_no_route_and_bad_args_raise():
+    log = DSLog()
+    log.add_lineage("u", "v", identity_lineage((4,)))
+    log.add_lineage("p", "q", identity_lineage((4,)))
+    with pytest.raises(KeyError):
+        log.prov_query("u", "q", np.array([[1]]))
+    with pytest.raises(KeyError):
+        log.prov_query("u", "nope", np.array([[1]]))
+    with pytest.raises(ValueError):
+        log.planner.plan("u", ["u"])
+    with pytest.raises(TypeError):
+        log.prov_query("u", np.array([[1]]))  # missing dst
+    with pytest.raises(TypeError):
+        log.prov_query("u", "v", np.array([[1]]), "extra")
+
+
+def test_legacy_positional_merge_still_accepted():
+    """Pre-graph signature was prov_query(path, cells, merge) — keep it."""
+    log = DSLog()
+    names, _ = _linear_chain(log)
+    cells = np.array([[2, 3], [5, 1]])
+    pos = log.prov_query(names, cells, False)
+    kw = log.prov_query(names, cells, merge=False)
+    assert _boxes_equal(pos, kw)
+    batch = log.prov_query_batch(names, [cells], False)
+    assert _boxes_equal(batch[0], kw)
+
+
+def test_execute_validates_dict_query_batches():
+    log = DSLog()
+    _diamond(log)
+    # a plan whose starts are the two branch arrays
+    plan = log.planner.plan("z", ["a", "b"])  # backward: frontier on z
+    qs = log._as_boxes("z", [np.array([[1, 1]])])
+    out = log.planner.execute(plan, qs)
+    assert set(out) == {"a", "b"}
+    # multi-start plans demand per-start batches with exact name coverage
+    multi = log.planner.plan({"a", "b"}, ["z"])
+    qa = log._as_boxes("a", [np.array([[1, 1]])])
+    qb = log._as_boxes("b", [np.array([[1, 1]])])
+    with pytest.raises(KeyError):
+        log.planner.execute(multi, {"a": qa, "bogus": qb})
+    with pytest.raises(ValueError):
+        log.planner.execute(multi, {"a": qa})  # 'b' batch missing
+    res = log.planner.execute(multi, {"a": qa, "b": qb})
+    assert res["z"][0].n_cells() >= 1
+
+
+def test_plan_describe_smoke():
+    log = DSLog()
+    _diamond(log)
+    plan = log.planner.plan("x", ["z"])
+    text = plan.describe()
+    assert "forward plan" in text and "x -> " in text
+    back = log.planner.plan("z", ["x"])
+    assert back.direction == "backward"

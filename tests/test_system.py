@@ -18,6 +18,13 @@ from repro.core.capture import (
 from repro.core.relation import LineageRelation
 
 
+def _same_boxes(a, b):
+    """Exact box-level equality (not just cell sets)."""
+    ca = np.unique(np.concatenate([a.lo, a.hi], axis=1), axis=0)
+    cb = np.unique(np.concatenate([b.lo, b.hi], axis=1), axis=0)
+    return ca.shape == cb.shape and bool(np.array_equal(ca, cb))
+
+
 def _compose_oracle(rels, cells, forward=True):
     """Walk uncompressed relations, propagating a cell set."""
     cur = {tuple(c) for c in cells}
@@ -64,14 +71,19 @@ def test_image_like_workflow():
         )
     # forward: one source pixel -> which scores?
     src = np.array([[4, 6]])
-    got = log.prov_query(names, src).cell_set()
+    res = log.prov_query(names, src)
+    got = res.cell_set()
     want = _compose_oracle(rels, src, forward=True)
     assert got == want
+    # graph form (planner-routed) returns exactly the same boxes
+    assert _same_boxes(res, log.prov_query(names[0], names[-1], src))
     # backward: one score -> contributing pixels
     back = np.array([[3]])
-    gotb = log.prov_query(names[::-1], back).cell_set()
+    resb = log.prov_query(names[::-1], back)
+    gotb = resb.cell_set()
     wantb = _compose_oracle(rels, back, forward=False)
     assert gotb == wantb
+    assert _same_boxes(resb, log.prov_query(names[-1], names[0], back))
     # compression actually engaged (at unit scale, serialization headers
     # dominate; the storage benchmark measures the real ratios at 1M cells)
     raw = sum(r.nbytes_raw() for r in rels)
@@ -100,12 +112,18 @@ def test_relational_workflow_join_groupby():
     )
     # backward from one output row to both base tables
     q = np.array([[0]])
-    via_left = log.prov_query(["rowsum", "joined", "left"], q).cell_set()
+    res_left = log.prov_query(["rowsum", "joined", "left"], q)
     want_left = _compose_oracle([rel_l, rel_sum], q, forward=False)
-    assert via_left == want_left
-    via_right = log.prov_query(["rowsum", "joined", "right"], q).cell_set()
+    assert res_left.cell_set() == want_left
+    assert _same_boxes(res_left, log.prov_query("rowsum", "left", q))
+    res_right = log.prov_query(["rowsum", "joined", "right"], q)
     want_right = _compose_oracle([rel_r, rel_sum], q, forward=False)
-    assert via_right == want_right
+    assert res_right.cell_set() == want_right
+    assert _same_boxes(res_right, log.prov_query("rowsum", "right", q))
+    # endpoint-set form answers both base tables from one plan
+    both = log.prov_query("rowsum", ["left", "right"], q)
+    assert both["left"].cell_set() == want_left
+    assert both["right"].cell_set() == want_right
 
 
 def test_resnet_like_block_lineage():
@@ -122,11 +140,13 @@ def test_resnet_like_block_lineage():
     log.register_operation("relu", ["h1"], ["h2"], capture=lambda: {(0, 0): rel_relu})
     log.register_operation("conv2", ["h2"], ["y"], capture=lambda: {(0, 0): rel_c2})
     q = np.array([[2, 2]])
-    got = log.prov_query(["y", "h2", "h1", "x"], q).cell_set()
+    res = log.prov_query(["y", "h2", "h1", "x"], q)
+    got = res.cell_set()
     want = _compose_oracle([rel_c1, rel_relu, rel_c2], q, forward=False)
     assert got == want
     # receptive field of a 2-conv chain is 5x5
     assert len(got) == 25
+    assert _same_boxes(res, log.prov_query("y", "x", q))
 
 
 def test_jax_traced_function_lineage_end_to_end():
@@ -157,5 +177,6 @@ def test_softmax_row_dependency_through_pipeline():
     log.define_array("c", (6,))
     log.register_operation("softmax", ["a"], ["b"], capture=lambda: {(0, 0): rel1})
     log.register_operation("colsum", ["b"], ["c"], capture=lambda: {(0, 0): rel2})
-    fwd = log.prov_query(["a", "b", "c"], np.array([[2, 0]])).cell_set()
-    assert fwd == {(j,) for j in range(6)}  # softmax spreads across the row
+    res = log.prov_query(["a", "b", "c"], np.array([[2, 0]]))
+    assert res.cell_set() == {(j,) for j in range(6)}  # spreads across the row
+    assert _same_boxes(res, log.prov_query("a", "c", np.array([[2, 0]])))
