@@ -44,6 +44,7 @@ __all__ = [
     "run_fig89",
     "run_index_ablation",
     "run_dag_ablation",
+    "run_shard_ablation",
 ]
 
 
@@ -254,7 +255,7 @@ def _scatter_table(n_rows: int, seed: int = 0):
 # --------------------------------------------------------------------------- #
 # DAG-query ablation: planner-merged execution vs naive per-path union
 # --------------------------------------------------------------------------- #
-def _build_diamond(side: int, branches: int, root: str | None = None) -> DSLog:
+def _build_diamond(side: int, branches: int, root: str | None = None, log=None):
     """src fans out to ``branches`` rolled copies, they fan back into one
     array, and a conv tail (the heavy tables) runs to the output:
 
@@ -262,9 +263,12 @@ def _build_diamond(side: int, branches: int, root: str | None = None) -> DSLog:
 
     The tail is shared by every simple path, so the naive per-path union
     re-executes its expensive hops once per branch; the planner walks it
-    once with the branch frontiers merged at ``mid``.
+    once with the branch frontiers merged at ``mid``.  Pass ``log`` to
+    build the same wide fan-in DAG into a different store (the shard
+    ablation feeds ``ShardedDSLog`` instances through here).
     """
-    log = DSLog(root=root, store_forward=True)
+    if log is None:
+        log = DSLog(root=root, store_forward=True)
     shape = (side, side)
     log.define_array("src", shape)
     mids = [f"m{b}" for b in range(branches)]
@@ -381,6 +385,121 @@ def run_dag_ablation(
             flush=True,
         )
     return [rec]
+
+
+# --------------------------------------------------------------------------- #
+# Shard ablation: 1 vs 4 vs 8 shards on the wide fan-in DAG
+# --------------------------------------------------------------------------- #
+def run_shard_ablation(
+    side: int = 96,
+    branches: int = 8,
+    shard_counts=(1, 4, 8),
+    n_queries: int = 8,
+    repeats: int = 3,
+    smoke: bool = False,
+    verbose: bool = True,
+) -> list[dict]:
+    """Plan/query latency, incremental-save bytes, and partial-reload blob
+    counts for the same wide fan-in DAG stored under 1/4/8 shards.
+
+    Per shard count the record carries:
+
+    * ``plan_s`` / ``query_s`` — cross-shard planning and batched execution
+      latency (results asserted equal to the single-store oracle),
+    * ``exchanges`` / ``boxes_exchanged`` — boundary traffic of one batch,
+    * ``incr_bytes`` / ``full_bytes`` — bytes written by an incremental
+      ``save()`` after touching ONE shard vs the initial full save (only
+      dirty shard manifests rewrite, so incr shrinks as N grows),
+    * ``reload_shards`` / ``reload_tables`` — how many shard manifests and
+      table blobs one tail query forces a freshly loaded store to read.
+
+    ``smoke=True`` shrinks everything for CI.
+    """
+    from repro.core.shard import ShardedDSLog
+
+    if smoke:
+        side, branches, n_queries, repeats = 32, 4, 4, 1
+        shard_counts = tuple(n for n in shard_counts if n <= 4) or (1, 2)
+
+    oracle = _build_diamond(side, branches)
+    rng = np.random.default_rng(11)
+    picks = rng.choice(side * side, size=n_queries * 4, replace=False)
+    cells = np.stack(np.unravel_index(picks, (side, side)), axis=1)
+    queries = [cells[k * 4 : (k + 1) * 4] for k in range(n_queries)]
+    want = [r.cell_set() for r in oracle.prov_query_batch("src", "out", queries)]
+
+    def time_of(fn, n=repeats):
+        best = float("inf")
+        for _ in range(n):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    rows = []
+    for n_shards in shard_counts:
+        log = _build_diamond(
+            side, branches, log=ShardedDSLog(n_shards=n_shards, store_forward=True)
+        )
+        got = log.prov_query_batch("src", "out", queries)
+        assert [r.cell_set() for r in got] == want, f"{n_shards}-shard mismatch"
+        boxes_one_batch = log.io_stats["boxes_exchanged"]  # one execution's
+        plan = log.planner.plan("src", ["out"])
+        plan_s = time_of(lambda: log.planner.plan("src", ["out"]))
+        query_s = time_of(lambda: log.prov_query_batch("src", "out", queries))
+
+        with tempfile.TemporaryDirectory() as d:
+            disk = _build_diamond(
+                side, branches, log=ShardedDSLog(n_shards=n_shards, root=d)
+            )
+            disk.save()
+            full_bytes = disk.io_stats["bytes_written"]
+            total_tables = sum(
+                1 + e.has_forward for e in disk.lineage.values()
+            )
+            before = dict(disk.io_stats)
+            # touch exactly one shard: a new entry hanging off the output
+            out_shape = disk.arrays["out"].shape
+            disk.add_lineage("out", "post", C.identity_lineage(out_shape))
+            disk.save()
+            after = disk.io_stats
+            incr_bytes = after["bytes_written"] - before["bytes_written"]
+            incr_manifests = (
+                after["manifests_written"] - before["manifests_written"]
+            )
+            reloaded = ShardedDSLog.load(d)
+            reloaded.prov_query("out", "mid", cells[:2])
+            reload_shards = reloaded.io_stats["shards_loaded"]
+            reload_tables = reloaded.io_stats["tables_loaded"]
+            assert reload_tables < total_tables, "partial reload touched all blobs"
+
+        rec = {
+            "side": side,
+            "branches": branches,
+            "n_shards": n_shards,
+            "plan_s": plan_s,
+            "query_s": query_s,
+            "exchanges": len(plan.exchanges),
+            "boxes_exchanged": boxes_one_batch,
+            "full_bytes": full_bytes,
+            "incr_bytes": incr_bytes,
+            "incr_manifests": incr_manifests,
+            "reload_shards": reload_shards,
+            "reload_tables": reload_tables,
+            "total_tables": total_tables,
+        }
+        rows.append(rec)
+        if verbose:
+            print(
+                f"  shard_ablation n={n_shards} plan={plan_s*1e3:7.2f}ms "
+                f"query={query_s*1e3:8.2f}ms exch={rec['exchanges']:2d} "
+                f"incr_save={incr_bytes}B/{incr_manifests}man "
+                f"(full={full_bytes}B) "
+                f"reload={reload_shards}sh/{reload_tables}of"
+                f"{total_tables}tables",
+                flush=True,
+            )
+    return rows
 
 
 def run_index_ablation(

@@ -69,6 +69,38 @@ def bench_index(quick: bool) -> None:
                   r[m] * 1e6, f"speedup_x={r['speedup']:.1f}")
 
 
+def bench_shard(quick: bool) -> None:
+    from .fig89_query import run_shard_ablation
+
+    print("# Shard ablation — 1/4/8-shard stores on a wide fan-in DAG",
+          flush=True)
+    rows = run_shard_ablation(
+        side=64 if quick else 96, smoke=_SMOKE,
+    )
+    for r in rows:
+        _emit(
+            f"shard/side{r['side']}/b{r['branches']}/n{r['n_shards']}/plan",
+            r["plan_s"] * 1e6,
+            f"exchanges={r['exchanges']};boxes={r['boxes_exchanged']}",
+        )
+        _emit(
+            f"shard/side{r['side']}/b{r['branches']}/n{r['n_shards']}/query",
+            r["query_s"] * 1e6, "",
+        )
+        _emit(
+            f"shard/side{r['side']}/b{r['branches']}/n{r['n_shards']}/save",
+            0.0,
+            f"incr_bytes={r['incr_bytes']};full_bytes={r['full_bytes']};"
+            f"incr_manifests={r['incr_manifests']}",
+        )
+        _emit(
+            f"shard/side{r['side']}/b{r['branches']}/n{r['n_shards']}/reload",
+            0.0,
+            f"shards={r['reload_shards']};"
+            f"tables={r['reload_tables']}of{r['total_tables']}",
+        )
+
+
 def bench_dag(quick: bool) -> None:
     from .fig89_query import run_dag_ablation
 
@@ -141,21 +173,29 @@ BENCHES = {
     "fig89": bench_fig89,
     "index": bench_index,
     "dag": bench_dag,
+    "shard": bench_shard,
     "table9": bench_table9,
     "roofline": bench_roofline,
     "kernels": bench_kernels,
 }
 
+# set by main(); benches that support an extra-small CI mode consult it
+_SMOKE = False
+
 
 def main() -> None:
+    global _SMOKE
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized runs (implies --quick where supported)")
     ap.add_argument("--only", default="")
     args = ap.parse_args()
+    _SMOKE = args.smoke
     names = args.only.split(",") if args.only else list(BENCHES)
     print("name,us_per_call,derived")
     for nm in names:
-        BENCHES[nm](args.quick)
+        BENCHES[nm](args.quick or args.smoke)
 
 
 if __name__ == "__main__":

@@ -52,3 +52,25 @@ fwd = log.prov_query("corpus", "shard_s3_k0", np.array([[suspect, 0]]))
 rows = sorted({c[0] for c in fwd.cell_set()})
 print(f"corpus doc {suspect} touched shard-0 rows {rows} (expected [2])")
 assert rows == [2]
+
+# ---- the same forensics on a sharded store: DSLog's surface is unchanged,
+# so the pipeline logs into a 4-shard ShardedDSLog as-is; queries whose
+# route crosses shard boundaries ship merged-box frontiers between the
+# per-shard sub-plans. ------------------------------------------------------
+from repro.core.shard import ShardedDSLog
+
+slog = ShardedDSLog(n_shards=4)
+spipe = TokenPipeline(cfg, data_shards=4, shard_id=0, dslog=slog)
+for _ in range(4):
+    spipe.next_batch()
+
+sres = slog.prov_query("shard_s3_k0", "corpus", np.array([[2, 10]]))
+assert sres.cell_set() == res.cell_set()  # == the single-store answer
+plan = slog.planner.plan("shard_s3_k0", ["corpus"])
+print(
+    f"sharded store: {len(slog.lineage)} entries over "
+    f"{slog.n_shards} shards, {len(slog.sgraph.boundary)} boundary edges; "
+    f"query plan touches shards {plan.shards_touched()} with "
+    f"{len(plan.exchanges)} boundary exchanges "
+    f"({slog.io_stats['boxes_exchanged']} boxes shipped so far)"
+)

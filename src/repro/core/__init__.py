@@ -23,4 +23,14 @@ from .query import (  # noqa: F401
 )
 from .relation import LineageRelation  # noqa: F401
 from .reuse import ReusePredictor, generalize, instantiate  # noqa: F401
+from .shard import (  # noqa: F401
+    AffinityShardPolicy,
+    ExchangeStep,
+    HashShardPolicy,
+    ShardedDSLog,
+    ShardedLineageGraph,
+    ShardedQueryPlan,
+    ShardedQueryPlanner,
+    ShardPolicy,
+)
 from .table import CompressedTable, TableHandle  # noqa: F401

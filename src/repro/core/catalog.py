@@ -25,10 +25,19 @@ cost-based :class:`~repro.core.planner.QueryPlanner`:
 * ``prov_query(path, cells)`` — the paper's explicit array path;
 * ``prov_query(src, dst, cells)`` — graph form: the planner routes over the
   lineage DAG itself, merging converging branches at fan-in arrays.
+
+Growth beyond the paper: :meth:`DSLog.compact` vacuums blobs orphaned by
+:meth:`DSLog.drop_lineage` and predictor updates; :meth:`DSLog.version`
+mints ``acc@k`` names for in-place ops; executed hops feed their true pair
+counts back into the manifest (:meth:`DSLog.record_hop` /
+:meth:`DSLog.hop_measurement`) so replanning uses measured selectivities;
+and :class:`~repro.core.shard.ShardedDSLog` serves this whole surface over
+N independently persisted shards.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 from dataclasses import dataclass, field
@@ -57,7 +66,42 @@ __all__ = ["DSLog", "ArrayDef", "LineageEntry"]
 # without paying the O(n log n) sort.
 _INDEX_PERSIST_MIN_ROWS = 4096
 
-_MANIFEST_VERSION = 2
+_MANIFEST_VERSION = 3
+
+
+def _sig_blob_name(key: str, label: str) -> str:
+    """Stable per-(signature, pair-label) blob name.
+
+    Deterministic naming is what makes per-signature dirty tracking work: a
+    re-saved signature overwrites its own blobs, a clean signature's blobs
+    are never touched, and blobs orphaned by a rejected signature are
+    recognizable to :meth:`DSLog.compact`.
+    """
+    h = hashlib.sha1(key.encode()).hexdigest()[:10]
+    return f"sig_{h}_{label.replace(':', '-')}.prvc"
+
+
+def _vacuum_dir(root: str, referenced: set[str]) -> dict[str, int]:
+    """Delete catalog-owned blob files under ``root`` not in ``referenced``.
+
+    Only files matching the catalog's own naming patterns
+    (``lineage_*.prvc/.idx``, ``sig_*.prvc``) are candidates; anything else
+    in the directory is left alone.
+    """
+    removed = reclaimed = 0
+    for fn in os.listdir(root):
+        path = os.path.join(root, fn)
+        if not os.path.isfile(path) or fn in referenced:
+            continue
+        owned = (fn.startswith("lineage_") and fn.endswith((".prvc", ".idx"))) or (
+            fn.startswith("sig_") and fn.endswith(".prvc")
+        )
+        if not owned:
+            continue
+        reclaimed += os.path.getsize(path)
+        os.remove(path)
+        removed += 1
+    return {"files_removed": removed, "bytes_reclaimed": reclaimed}
 
 
 @dataclass
@@ -204,11 +248,34 @@ class DSLog:
         # counters that tests/benchmarks assert on.
         self._dirty: set[int] = set()
         self._persisted: dict[int, dict] = {}
-        self._predictor_dirty = False
         self._predictor_chunk: dict | None = None
-        self.io_stats = {"tables_loaded": 0, "tables_written": 0}
+        # non-blob manifest state (arrays, ops, versions, hop stats) changed
+        # since the last save/load — what a sharded root consults to decide
+        # whether this shard's manifest needs rewriting at all
+        self._meta_dirty = False
+        # measured per-hop selectivities: "lid:stored:side" -> [pairs, qrows]
+        self.hop_stats: dict[str, list[float]] = {}
+        # versioned-name counters for in-place ops: base name -> latest k
+        self._versions: dict[str, int] = {}
+        self.io_stats = {
+            "tables_loaded": 0,
+            "tables_written": 0,
+            "manifests_written": 0,
+            "sig_tables_written": 0,
+            "bytes_written": 0,
+        }
         if root:
             os.makedirs(root, exist_ok=True)
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        self.io_stats[key] = self.io_stats.get(key, 0) + n
+
+    @property
+    def dirty(self) -> bool:
+        """Anything (entries, predictor, or manifest metadata) unsaved?"""
+        return (
+            bool(self._dirty) or self.predictor.dirty or self._meta_dirty
+        )
 
     # ------------------------------------------------------------------ #
     # Array / lineage definition (paper §III.A)
@@ -216,7 +283,47 @@ class DSLog:
     def define_array(self, name: str, shape: tuple[int, ...]) -> ArrayDef:
         arr = ArrayDef(name, tuple(int(d) for d in shape))
         self.arrays[name] = arr
+        self._meta_dirty = True
         return arr
+
+    # ------------------------------------------------------------------ #
+    # Versioned array names for in-place ops (acc@1 → acc@2 → …)
+    # ------------------------------------------------------------------ #
+    def version(self, name: str, shape: tuple[int, ...] | None = None) -> str:
+        """Mint (and define) the next versioned name for ``name``.
+
+        The lineage DAG rejects self-lineage (``acc → acc``), so in-place /
+        accumulator-style updates must be logged under fresh names.  Each
+        call returns ``base@k`` with ``k`` increasing from 1; the new array
+        is auto-defined with ``shape`` (or the latest version's shape when
+        omitted), so the idiom is::
+
+            prev = log.latest_version("acc")
+            cur = log.version("acc")
+            log.add_lineage(prev, cur, relation)
+
+        Version counters persist in the manifest, so a reloaded catalog
+        keeps minting from where it left off.
+        """
+        base = name.split("@", 1)[0]
+        if shape is None:
+            prev = self.latest_version(base)
+            if prev in self.arrays:
+                shape = self.arrays[prev].shape
+        k = self._versions.get(base, 0) + 1
+        self._versions[base] = k
+        new = f"{base}@{k}"
+        if shape is not None:
+            self.define_array(new, shape)
+        self._meta_dirty = True
+        return new
+
+    def latest_version(self, name: str) -> str:
+        """Current name of ``name``: ``base@k`` after k ``version()`` calls,
+        the base name itself before the first."""
+        base = name.split("@", 1)[0]
+        k = self._versions.get(base, 0)
+        return base if k == 0 else f"{base}@{k}"
 
     def add_lineage(
         self,
@@ -263,6 +370,7 @@ class DSLog:
         self.lineage[entry.lineage_id] = entry
         self.by_pair.setdefault((src, dst), []).append(entry.lineage_id)
         self._dirty.add(entry.lineage_id)
+        self._meta_dirty = True
         return entry
 
     def _remove_entry(self, lineage_id: int) -> None:
@@ -274,6 +382,59 @@ class DSLog:
             del self.by_pair[(e.src, e.dst)]
         self.graph.remove_edge(e.src, e.dst, lineage_id)
         self._dirty.discard(lineage_id)
+        self._meta_dirty = True
+
+    def drop_lineage(self, lineage_id: int) -> None:
+        """Remove one lineage entry from the catalog.
+
+        The entry leaves the graph, pair index, and op records immediately;
+        its persisted blobs (if any) stay on disk until :meth:`compact`
+        vacuums them — mirroring how dirty-tracked saves never delete files.
+        """
+        if lineage_id not in self.lineage:
+            raise KeyError(f"no lineage entry {lineage_id}")
+        self._remove_entry(lineage_id)
+        self._persisted.pop(lineage_id, None)
+        self.hop_stats = {
+            k: v
+            for k, v in self.hop_stats.items()
+            if int(k.split(":", 1)[0]) != lineage_id
+        }
+        for op in self.ops:
+            if lineage_id in op.lineage_ids:
+                op.lineage_ids.remove(lineage_id)
+
+    # ------------------------------------------------------------------ #
+    # Planner cost-model feedback (measured per-hop selectivities)
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _hop_key(lineage_id: int, stored: str, frontier_on: str) -> str:
+        return f"{lineage_id}:{stored}:{frontier_on}"
+
+    def record_hop(
+        self,
+        lineage_id: int,
+        stored: str,
+        frontier_on: str,
+        pairs: int,
+        qrows: int,
+    ) -> None:
+        """Accumulate the true pair count one executed hop produced."""
+        st = self.hop_stats.setdefault(
+            self._hop_key(lineage_id, stored, frontier_on), [0.0, 0.0]
+        )
+        st[0] += float(pairs)
+        st[1] += float(qrows)
+        self._meta_dirty = True
+
+    def hop_measurement(
+        self, lineage_id: int, stored: str, frontier_on: str
+    ) -> float | None:
+        """Measured pairs-per-query-box for one hop, or None if never run."""
+        st = self.hop_stats.get(self._hop_key(lineage_id, stored, frontier_on))
+        if not st or st[1] <= 0:
+            return None
+        return st[0] / st[1]
 
     def _check_shapes(self, src: str, dst: str, rel: LineageRelation) -> None:
         if src in self.arrays and self.arrays[src].shape != rel.in_shape:
@@ -368,7 +529,6 @@ class DSLog:
             raise
         if use_reuse:
             self.predictor.observe(dim_key, gen_key, shapes_token, captured_tables)
-            self._predictor_dirty = True
         self.ops.append(rec)
         return rec
 
@@ -519,6 +679,8 @@ class DSLog:
                 }
                 for op in self.ops
             ],
+            "versions": dict(self._versions),
+            "hops": {k: list(v) for k, v in self.hop_stats.items()},
         }
         for e in self.lineage.values():
             rec = self._persisted.get(e.lineage_id)
@@ -528,20 +690,25 @@ class DSLog:
             meta["lineage"].append(rec)
         self._dirty.clear()
 
-        if self._predictor_chunk is None or self._predictor_dirty:
+        if self._predictor_chunk is None or self.predictor.dirty:
             self._predictor_chunk = self._write_predictor()
-            self._predictor_dirty = False
         meta["predictor"] = self._predictor_chunk
 
+        payload = json.dumps(meta)
         with open(os.path.join(self.root, "catalog.json"), "w") as f:
-            json.dump(meta, f)
+            f.write(payload)
+        self._bump("manifests_written")
+        self._bump("bytes_written", len(payload))
+        self._meta_dirty = False
 
     def _write_entry(self, e: LineageEntry) -> dict:
         assert self.root is not None
         fn = f"lineage_{e.lineage_id}.prvc"
+        blob = e.backward.serialize(compress=self.gzip)
         with open(os.path.join(self.root, fn), "wb") as f:
-            f.write(e.backward.serialize(compress=self.gzip))
-        self.io_stats["tables_written"] += 1
+            f.write(blob)
+        self._bump("tables_written")
+        self._bump("bytes_written", len(blob))
         rec = {
             "id": e.lineage_id,
             "src": e.src,
@@ -557,9 +724,11 @@ class DSLog:
         }
         if e.forward is not None:
             fwd_fn = f"lineage_{e.lineage_id}_fwd.prvc"
+            blob = e.forward.serialize(compress=self.gzip)
             with open(os.path.join(self.root, fwd_fn), "wb") as f:
-                f.write(e.forward.serialize(compress=self.gzip))
-            self.io_stats["tables_written"] += 1
+                f.write(blob)
+            self._bump("tables_written")
+            self._bump("bytes_written", len(blob))
             rec["fwd"] = fwd_fn
             rec["fwd_rows"] = e.forward.n_rows
             rec["fwd_idx"] = self._save_index(
@@ -569,12 +738,15 @@ class DSLog:
 
     def _write_predictor(self) -> dict:
         assert self.root is not None
-        blob_no = iter(range(1 << 30))
+        root = self.root
 
         def save_table(key: str, label: str, tbl: CompressedTable) -> str:
-            fn = f"sig_{next(blob_no)}.prvc"
-            with open(os.path.join(self.root, fn), "wb") as f:
-                f.write(tbl.serialize(compress=self.gzip))
+            fn = _sig_blob_name(key, label)
+            blob = tbl.serialize(compress=self.gzip)
+            with open(os.path.join(root, fn), "wb") as f:
+                f.write(blob)
+            self._bump("sig_tables_written")
+            self._bump("bytes_written", len(blob))
             return fn
 
         return self.predictor.state_manifest(save_table)
@@ -588,8 +760,10 @@ class DSLog:
         if cached is None and table.n_rows < _INDEX_PERSIST_MIN_ROWS:
             return None
         idx = cached if cached is not None else table.key_index()
+        blob = idx.to_bytes()
         with open(os.path.join(self.root, fn), "wb") as f:
-            f.write(idx.to_bytes())
+            f.write(blob)
+        self._bump("bytes_written", len(blob))
         return fn
 
     @staticmethod
@@ -636,6 +810,11 @@ class DSLog:
         log = DSLog(root=root)
         with open(os.path.join(root, "catalog.json")) as f:
             meta = json.load(f)
+        if meta.get("sharded"):
+            raise ValueError(
+                f"{root!r} holds a sharded catalog root; open it with "
+                "repro.core.shard.ShardedDSLog.load"
+            )
         version = int(meta.get("version", 1))
         for n, shp in meta["arrays"].items():
             log.define_array(n, tuple(shp))
@@ -675,7 +854,45 @@ class DSLog:
 
                 log.predictor = ReusePredictor.from_manifest(chunk, load_table)
                 log._predictor_chunk = chunk
+        log._versions = {
+            k: int(v) for k, v in meta.get("versions", {}).items()
+        }
+        log.hop_stats = {
+            k: [float(x) for x in v] for k, v in meta.get("hops", {}).items()
+        }
+        log._meta_dirty = False
         return log
+
+    # ------------------------------------------------------------------ #
+    # Garbage collection (persistence v2 vacuum)
+    # ------------------------------------------------------------------ #
+    def compact(self, save: bool = True) -> dict[str, int]:
+        """Vacuum blobs no longer referenced by the catalog.
+
+        Dirty-tracked saves never delete files, so dropped entries
+        (:meth:`drop_lineage`) and re-saved/rejected predictor signatures
+        leave stale ``lineage_*.prvc``/``.idx`` and ``sig_*.prvc`` blobs
+        behind.  ``compact()`` saves first (unless ``save=False``, for
+        callers that just synced), then deletes every catalog-owned file the
+        current manifest does not reference.  Returns
+        ``{"files_removed": n, "bytes_reclaimed": b}``.
+        """
+        if not self.root:
+            raise ValueError("DSLog opened without a root directory")
+        if save:
+            self.save()
+        for lid in list(self._persisted):
+            if lid not in self.lineage:
+                del self._persisted[lid]
+        referenced = {"catalog.json"}
+        for rec in self._persisted.values():
+            for key in ("file", "idx", "fwd", "fwd_idx"):
+                if rec.get(key):
+                    referenced.add(rec[key])
+        if self._predictor_chunk:
+            for rec in self._predictor_chunk.get("sigs", []):
+                referenced.update(rec.get("tables", {}).values())
+        return _vacuum_dir(self.root, referenced)
 
     # ------------------------------------------------------------------ #
     def storage_bytes(self) -> int:

@@ -105,6 +105,9 @@ class QueryPlan:
     node_array: dict[str, str]  # plan-node key -> array name
     steps: dict[str, list[EdgeStep]] = field(default_factory=dict)
     est_cost: float = 0.0
+    # estimated frontier box count per plan node (filled by the planner;
+    # consumed by the sharded planner's boundary-exchange cost term)
+    est_boxes: dict[str, float] = field(default_factory=dict)
 
     def describe(self) -> str:
         """Human-readable plan, one line per hop (EXPLAIN-style)."""
@@ -186,7 +189,8 @@ class QueryPlanner:
         )
         # Estimated frontier box count per node, seeded by the real frontier.
         nq0 = self._frontier_boxes(frontier)
-        est_boxes: dict[str, float] = {s: nq0 for s in plan.starts}
+        est_boxes = plan.est_boxes
+        est_boxes.update({s: nq0 for s in plan.starts})
         for key in order:
             if key in plan.starts:
                 continue
@@ -237,6 +241,7 @@ class QueryPlanner:
             node_array=dict(zip(keys, path)),
         )
         nq = self._frontier_boxes(frontier)
+        plan.est_boxes[keys[0]] = nq
         for k, (a, b) in enumerate(zip(path[:-1], path[1:])):
             # entries stored with dataflow b -> a: frontier sits on their dst
             ids_down = self.log.by_pair.get((b, a), [])
@@ -258,6 +263,7 @@ class QueryPlanner:
             plan.steps[keys[k + 1]] = [step]
             plan.est_cost += sum(c.est_cost for c in choices)
             nq = max(1.0, step.est_pairs * _MERGE_SHRINK)
+            plan.est_boxes[keys[k + 1]] = nq
         return plan
 
     # ------------------------------------------------------------------ #
@@ -328,7 +334,10 @@ class QueryPlanner:
         nr = entry.backward_rows if stored == "backward" else entry.forward_rows
         nr = max(int(nr), 1)
         table = entry.peek_table(stored)  # None while the blob is unloaded
-        est_pairs = self._estimate_pairs(table, nr, frontier_on, nq, frontier)
+        measured = self.log.hop_measurement(lineage_id, stored, frontier_on)
+        est_pairs = self._estimate_pairs(
+            table, nr, frontier_on, nq, frontier, measured
+        )
         # route: small tables and unselective frontiers go dense
         if nr < INDEX_MIN_ROWS or est_pairs > DENSE_FRACTION * nq * nr:
             route = "dense"
@@ -354,17 +363,18 @@ class QueryPlanner:
         frontier_on: str,
         nq: float,
         frontier: Sequence[QueryBox] | None,
+        measured: float | None = None,
     ) -> float:
         """Expected candidate pairs for one hop.
 
         Preference order: an already-cached IntervalIndex probed with the
-        *real* frontier (exact, first hop only) → closed-form overlap model
-        from the table's interval stats → row-cover fallback when the blob
-        has not been deserialized yet.
+        *real* frontier (exact, first hop only) → the measured per-box pair
+        count fed back from earlier executions of this hop
+        (:meth:`~repro.core.catalog.DSLog.hop_measurement`) → closed-form
+        overlap model from the table's interval stats → row-cover fallback
+        when the blob has not been deserialized yet.
         """
-        if table is None:
-            return nq * min(float(nr), _POINT_ROW_COVER)
-        if frontier is not None:
+        if table is not None and frontier is not None:
             boxes = [q for q in frontier if q.n_rows]
             if boxes:
                 q_lo = np.concatenate([q.lo for q in boxes], axis=0)
@@ -377,8 +387,13 @@ class QueryPlanner:
                 if idx is not None:
                     total = idx.estimate_candidates(q_lo, q_hi)
                     return max(1.0, total / len(frontier))
-                mean_q = (q_hi - q_lo + 1).mean(axis=0)
-                return self._overlap_model(table, frontier_on, nq, mean_q)
+                if measured is None:
+                    mean_q = (q_hi - q_lo + 1).mean(axis=0)
+                    return self._overlap_model(table, frontier_on, nq, mean_q)
+        if measured is not None:
+            return max(1.0, measured * nq)
+        if table is None:
+            return nq * min(float(nr), _POINT_ROW_COVER)
         return self._overlap_model(table, frontier_on, nq, None)
 
     @staticmethod
@@ -470,9 +485,11 @@ class QueryPlanner:
                 acc_lo[k].append(q.lo)
                 acc_hi[k].append(q.hi)
             for step in steps:
-                qs = frontier[step.u]
+                qs = self._incoming_frontier(plan, step, frontier[step.u])
                 for choice in step.choices:
-                    for k, res in enumerate(self._run_choice(choice, qs)):
+                    res_list = self._run_choice(choice, qs)
+                    self._record_step_output(plan, step, res_list)
+                    for k, res in enumerate(res_list):
                         acc_lo[k].append(res.lo)
                         acc_hi[k].append(res.hi)
             boxes = []
@@ -496,11 +513,44 @@ class QueryPlanner:
             name: frontier[key] for name, key in plan.target_keys.items()
         }
 
+    def _incoming_frontier(
+        self, plan: QueryPlan, step: EdgeStep, qs: list[QueryBox]
+    ) -> list[QueryBox]:
+        """Hook: transform a step's input frontier before the joins run.
+
+        The base planner passes it through; the sharded planner overrides
+        this to account for (and compress) frontiers crossing a shard
+        boundary.
+        """
+        return qs
+
+    def _record_step_output(
+        self, plan: QueryPlan, step: EdgeStep, res_list: list[QueryBox]
+    ) -> None:
+        """Hook: observe one choice's per-query results (sharded planner
+        uses it to meter output-side boundary exchanges)."""
+
     def _run_choice(
         self, choice: HopChoice, qs: list[QueryBox]
     ) -> list[QueryBox]:
         entry = self.log.lineage[choice.lineage_id]
         table = entry.backward if choice.stored == "backward" else entry.forward
         if choice.frontier_on == "key":
-            return theta_join_batch(qs, table, merge=False, path=choice.route)
-        return theta_join_inverse_batch(qs, table, merge=False, path=choice.route)
+            res = theta_join_batch(qs, table, merge=False, path=choice.route)
+        else:
+            res = theta_join_inverse_batch(
+                qs, table, merge=False, path=choice.route
+            )
+        # cost-model feedback: the true pair counts this hop produced, keyed
+        # by (entry, materialization, join side) — replanning the same
+        # catalog prefers these measurements over the closed-form model
+        qrows = sum(q.n_rows for q in qs)
+        if qrows:
+            self.log.record_hop(
+                choice.lineage_id,
+                choice.stored,
+                choice.frontier_on,
+                pairs=sum(r.n_rows for r in res),
+                qrows=qrows,
+            )
+        return res

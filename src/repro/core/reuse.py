@@ -211,11 +211,27 @@ class ReuseDecision:
 
 
 class ReusePredictor:
-    """Tracks per-partial-signature reuse state across registrations."""
+    """Tracks per-partial-signature reuse state across registrations.
+
+    Persistence is dirty-tracked *per signature* (mirroring the catalog's
+    per-entry ``_dirty``/``_persisted`` split): :meth:`observe` marks only
+    the signatures it actually mutates, and :meth:`state_manifest` reuses
+    the previously persisted record (blob names included) for every clean
+    signature — so one new observation no longer rewrites every ``sig_*``
+    blob on ``save()``.
+    """
 
     def __init__(self, m: int = 1):
         self.m = m
         self.state: dict[str, _SigState] = {}
+        # per-signature persistence bookkeeping
+        self._dirty: set[str] = set()
+        self._persisted_recs: dict[str, dict] = {}
+
+    @property
+    def dirty(self) -> bool:
+        """Whether any signature changed since the last snapshot/load."""
+        return bool(self._dirty)
 
     # ------------------------------------------------------------------ #
     def lookup(
@@ -260,6 +276,7 @@ class ReusePredictor:
         st = self.state.get(dim_key)
         if st is None:
             self.state[dim_key] = _SigState("dim", tables=dict(captured))
+            self._dirty.add(dim_key)
         elif st.status in ("tentative",):
             ok = all(
                 label in st.tables and tables_equal(st.tables[label], t)
@@ -271,6 +288,7 @@ class ReusePredictor:
                     st.status = "confirmed"
             else:
                 st.status = "rejected"
+            self._dirty.add(dim_key)
         # ---- gen_sig ---------------------------------------------------- #
         gen_tables = {label: generalize(t) for label, t in captured.items()}
         st = self.state.get(gen_key)
@@ -278,6 +296,7 @@ class ReusePredictor:
             s = _SigState("gen", tables=gen_tables)
             s.seen_shapes.add(shapes_token)
             self.state[gen_key] = s
+            self._dirty.add(gen_key)
         elif st.status == "tentative":
             ok = all(
                 label in st.tables
@@ -286,6 +305,7 @@ class ReusePredictor:
             ) and len(st.tables) == len(gen_tables)
             if not ok:
                 st.status = "rejected"
+                self._dirty.add(gen_key)
             elif shapes_token not in st.seen_shapes:
                 # gen_sig confirmation requires a *different* shape (§VI.C)
                 st.matches += 1
@@ -293,6 +313,7 @@ class ReusePredictor:
                 st.tables = gen_tables  # keep the latest generalization
                 if st.matches >= self.m:
                     st.status = "confirmed"
+                self._dirty.add(gen_key)
 
     def status(self, key: str) -> str | None:
         st = self.state.get(key)
@@ -308,25 +329,33 @@ class ReusePredictor:
         table and returns its blob name — the predictor stays I/O-free; the
         catalog owns file layout.  Rejected signatures keep only their
         verdict (their tables can never be consulted again).
+
+        Dirty tracking is per signature: a clean signature's previous record
+        is reused verbatim (no blob rewrite); only signatures touched by
+        :meth:`observe` since the last snapshot have their tables re-saved.
         """
         sigs = []
         for key, st in self.state.items():
-            rec = {
-                "key": key,
-                "kind": st.kind,
-                "status": st.status,
-                "matches": st.matches,
-                "seen_shapes": [
-                    [list(map(int, s)) for s in tok] for tok in st.seen_shapes
-                ],
-                "tables": {},
-            }
-            if st.status != "rejected":
-                rec["tables"] = {
-                    label: save_table(key, label, tbl)
-                    for label, tbl in st.tables.items()
+            rec = self._persisted_recs.get(key)
+            if rec is None or key in self._dirty:
+                rec = {
+                    "key": key,
+                    "kind": st.kind,
+                    "status": st.status,
+                    "matches": st.matches,
+                    "seen_shapes": [
+                        [list(map(int, s)) for s in tok] for tok in st.seen_shapes
+                    ],
+                    "tables": {},
                 }
+                if st.status != "rejected":
+                    rec["tables"] = {
+                        label: save_table(key, label, tbl)
+                        for label, tbl in st.tables.items()
+                    }
+                self._persisted_recs[key] = rec
             sigs.append(rec)
+        self._dirty.clear()
         return {"m": self.m, "sigs": sigs}
 
     @classmethod
@@ -349,4 +378,5 @@ class ReusePredictor:
                 label: load_table(fn) for label, fn in rec["tables"].items()
             }
             p.state[rec["key"]] = st
+            p._persisted_recs[rec["key"]] = rec
         return p

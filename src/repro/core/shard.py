@@ -1,0 +1,823 @@
+"""Sharded lineage store: partitioned DAG, per-shard manifests, cross-shard
+query planning.
+
+One :class:`~repro.core.catalog.DSLog` stops scaling when the catalog must
+serve production traffic: every save rewrites one manifest, every query
+plans over one graph, and one process owns all blobs.
+:class:`ShardedDSLog` splits the store into ``N`` independent shards while
+keeping the single-store surface:
+
+* **graph layer** — :class:`ShardedLineageGraph` assigns every array to a
+  shard through a pluggable :class:`ShardPolicy` (stable hashing by default,
+  explicit :class:`AffinityShardPolicy` pinning when the workload knows
+  better).  Each shard keeps its own
+  :class:`~repro.core.graph.LineageGraph`; lineage whose endpoints live on
+  different shards is tracked in an explicit **boundary-edge table** (the
+  entry itself is stored with its *output* array's shard, so backward
+  queries start local — the SMOKE argument for tight per-partition
+  indexes).
+
+* **planner layer** — :class:`ShardedQueryPlanner` routes over the global
+  DAG exactly like the single-store planner, then decomposes the plan into
+  per-shard sub-plans stitched by :class:`ExchangeStep`s.  A frontier
+  crossing a shard boundary is first coalesced with
+  :func:`~repro.core.query.merge_boxes` so only merged cell boxes ship
+  (predicate-pushdown style: prune before crossing), and the cost model
+  adds a per-box exchange term (``_EXCHANGE_WEIGHT``) on top of the
+  single-shard per-hop costs.
+
+* **persistence layer** — the v2 manifest splits into a **root manifest**
+  (``catalog.json`` with a ``"sharded"`` marker: policy, array→shard map,
+  edge topology, boundary table, ops, predictor state, version counters)
+  plus one ordinary DSLog manifest per shard under ``shard_XX/``.  Each
+  shard dirty-tracks independently: ``save()`` rewrites only the manifests
+  and blobs of shards that actually changed, and a reloaded store resolves
+  a shard's manifest lazily, the first time a plan touches it.
+
+* **facade layer** — ``ShardedDSLog`` reuses ``DSLog``'s method objects
+  (``add_lineage``, ``register_operation``, ``prov_query`` …) over sharded
+  storage, so ``N=1`` is the single-store special case with byte-identical
+  query results, and existing ``prov_query(src, dst, cells)`` calls work
+  unchanged on any ``N``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import zlib
+from collections.abc import Mapping
+from dataclasses import dataclass, field
+
+from .catalog import ArrayDef, DSLog, _json_safe, _OpRecord, _vacuum_dir
+from .graph import CycleError, LineageGraph
+from .planner import _MERGE_SHRINK, EdgeStep, QueryPlan, QueryPlanner
+from .query import QueryBox, merge_boxes
+from .reuse import ReusePredictor
+from .table import CompressedTable
+
+__all__ = [
+    "ShardPolicy",
+    "HashShardPolicy",
+    "AffinityShardPolicy",
+    "ShardedLineageGraph",
+    "ShardedDSLog",
+    "ShardedQueryPlan",
+    "ShardedQueryPlanner",
+    "ExchangeStep",
+]
+
+_ROOT_MANIFEST_VERSION = 3
+
+# Cost-model weight per frontier box shipped across a shard boundary
+# (serialization + transfer, in the planner's unitless per-pair scale).
+_EXCHANGE_WEIGHT = 4.0
+
+
+def _base_name(name: str) -> str:
+    """Strip a ``@k`` version suffix: versions of an array co-locate."""
+    return name.split("@", 1)[0]
+
+
+# --------------------------------------------------------------------------- #
+# Shard assignment policies
+# --------------------------------------------------------------------------- #
+class ShardPolicy:
+    """Maps array names to shard ids.  Must be deterministic: the same name
+    resolves to the same shard across processes and reloads."""
+
+    def __init__(self, n_shards: int):
+        if n_shards < 1:
+            raise ValueError("need at least one shard")
+        self.n_shards = int(n_shards)
+
+    def shard_of(self, name: str) -> int:
+        raise NotImplementedError
+
+    def to_manifest(self) -> dict:
+        raise NotImplementedError
+
+    @staticmethod
+    def from_manifest(rec: dict) -> "ShardPolicy":
+        kind = rec.get("kind", "hash")
+        if kind == "hash":
+            return HashShardPolicy(int(rec["n_shards"]))
+        if kind == "affinity":
+            return AffinityShardPolicy(
+                int(rec["n_shards"]),
+                {k: int(v) for k, v in rec.get("assign", {}).items()},
+            )
+        raise ValueError(f"unknown shard policy {kind!r}")
+
+
+class HashShardPolicy(ShardPolicy):
+    """Stable crc32 hash of the array's *base* name (``acc@3`` → ``acc``),
+    so in-place version chains never cross a shard boundary."""
+
+    def shard_of(self, name: str) -> int:
+        return zlib.crc32(_base_name(name).encode()) % self.n_shards
+
+    def to_manifest(self) -> dict:
+        return {"kind": "hash", "n_shards": self.n_shards}
+
+
+class AffinityShardPolicy(ShardPolicy):
+    """Explicit name→shard pins with hash fallback for unpinned names.
+
+    Lets a pipeline keep hot co-queried arrays on one shard (affinity)
+    while everything else spreads by hash.
+    """
+
+    def __init__(self, n_shards: int, assign: dict[str, int] | None = None):
+        super().__init__(n_shards)
+        self.assign: dict[str, int] = {}
+        for name, shard in (assign or {}).items():
+            self.pin(name, shard)
+
+    def pin(self, name: str, shard: int) -> None:
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard {shard} out of range 0..{self.n_shards - 1}")
+        self.assign[_base_name(name)] = int(shard)
+
+    def shard_of(self, name: str) -> int:
+        base = _base_name(name)
+        if base in self.assign:
+            return self.assign[base]
+        return zlib.crc32(base.encode()) % self.n_shards
+
+    def to_manifest(self) -> dict:
+        return {
+            "kind": "affinity",
+            "n_shards": self.n_shards,
+            "assign": dict(self.assign),
+        }
+
+
+# --------------------------------------------------------------------------- #
+# Partitioned lineage DAG
+# --------------------------------------------------------------------------- #
+class ShardedLineageGraph:
+    """Lineage DAG partitioned across shards.
+
+    Keeps the global :class:`LineageGraph` (cycle checks and routing need
+    whole-DAG reachability), one per-shard graph holding the edges each
+    shard stores, and an explicit boundary table for edges whose src and
+    dst arrays live on different shards.  Entries are owned by their *dst*
+    array's shard.
+    """
+
+    def __init__(self, n_shards: int):
+        self.n_shards = int(n_shards)
+        self.global_graph = LineageGraph()
+        self.shard_graphs = [LineageGraph() for _ in range(self.n_shards)]
+        # lineage_id -> (src, dst, src_shard, dst_shard), cross-shard only
+        self.boundary: dict[int, tuple[str, str, int, int]] = {}
+
+    def add_edge(
+        self, src: str, dst: str, lineage_id: int, src_shard: int, dst_shard: int
+    ) -> None:
+        """Record one entry; raises :class:`CycleError` (mutating nothing)
+        when the edge would close a cycle anywhere in the global DAG."""
+        self.global_graph.add_edge(src, dst, lineage_id)
+        self.shard_graphs[dst_shard].add_edge(src, dst, lineage_id)
+        if src_shard != dst_shard:
+            self.boundary[lineage_id] = (src, dst, src_shard, dst_shard)
+
+    def remove_edge(
+        self, src: str, dst: str, lineage_id: int, src_shard: int, dst_shard: int
+    ) -> None:
+        self.global_graph.remove_edge(src, dst, lineage_id)
+        self.shard_graphs[dst_shard].remove_edge(src, dst, lineage_id)
+        self.boundary.pop(lineage_id, None)
+
+    def shard_graph(self, shard: int) -> LineageGraph:
+        return self.shard_graphs[shard]
+
+    def is_boundary(self, lineage_id: int) -> bool:
+        return lineage_id in self.boundary
+
+    def boundary_edges(self) -> list[tuple[int, str, str, int, int]]:
+        """Explicit boundary-edge table, ordered by lineage id."""
+        return [
+            (lid, src, dst, s, d)
+            for lid, (src, dst, s, d) in sorted(self.boundary.items())
+        ]
+
+    def n_edges(self) -> int:
+        return self.global_graph.n_edges()
+
+
+# --------------------------------------------------------------------------- #
+# Cross-shard query plans
+# --------------------------------------------------------------------------- #
+@dataclass
+class ExchangeStep:
+    """One frontier shipment across a shard boundary.
+
+    ``side`` is "input" when a step's frontier array lives on a different
+    shard than the entry executing the hop, "output" when the produced
+    array does.  ``est_boxes``/``est_cost`` come from the planner;
+    ``shipped_boxes`` is filled during execution.
+    """
+
+    array: str
+    u: str  # plan-node key the consuming step reads from
+    v: str  # plan-node key the step produces
+    side: str  # "input" | "output"
+    from_shard: int
+    to_shard: int
+    est_boxes: float = 1.0
+    est_cost: float = 0.0
+    shipped_boxes: int = 0
+
+
+@dataclass
+class ShardedQueryPlan(QueryPlan):
+    """A :class:`QueryPlan` decomposed across shards.
+
+    Every edge step carries an owning shard (``step_shard``); boundary
+    crossings become explicit :class:`ExchangeStep`s whose cost is part of
+    ``est_cost``.  :meth:`sub_plans` gives the per-shard view — the steps
+    each shard executes locally, stitched back together by the exchanges.
+    """
+
+    node_shard: dict[str, int] = field(default_factory=dict)
+    step_shard: dict[tuple[str, str], int] = field(default_factory=dict)
+    exchanges: list[ExchangeStep] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        self._ex_index: dict[tuple[str, str, str], ExchangeStep] = {}
+
+    def add_exchange(self, ex: ExchangeStep) -> None:
+        self.exchanges.append(ex)
+        self._ex_index[(ex.u, ex.v, ex.side)] = ex
+        self.est_cost += ex.est_cost
+
+    def exchange_for(self, u: str, v: str, side: str) -> ExchangeStep | None:
+        return self._ex_index.get((u, v, side))
+
+    def shards_touched(self) -> list[int]:
+        touched = set(self.step_shard.values())
+        touched.update(self.node_shard[k] for k in self.starts)
+        return sorted(touched)
+
+    def sub_plans(self) -> dict[int, QueryPlan]:
+        """Per-shard sub-plan views (local steps in global plan order)."""
+        out: dict[int, QueryPlan] = {}
+        for shard in self.shards_touched():
+            steps: dict[str, list[EdgeStep]] = {}
+            nodes: set[str] = set()
+            for key, step_list in self.steps.items():
+                local = [
+                    s for s in step_list if self.step_shard[(s.u, s.v)] == shard
+                ]
+                if local:
+                    steps[key] = local
+                    nodes.add(key)
+                    nodes.update(s.u for s in local)
+            nodes.update(k for k in self.starts if self.node_shard[k] == shard)
+            order = [k for k in self.order if k in nodes]
+            cost = sum(
+                c.est_cost for sl in steps.values() for s in sl for c in s.choices
+            )
+            out[shard] = QueryPlan(
+                direction=self.direction,
+                starts=tuple(k for k in self.starts if k in nodes),
+                target_keys={
+                    n: k for n, k in self.target_keys.items() if k in nodes
+                },
+                order=order,
+                node_array={k: self.node_array[k] for k in order},
+                steps=steps,
+                est_cost=cost,
+                est_boxes={k: self.est_boxes.get(k, 1.0) for k in order},
+            )
+        return out
+
+    def describe(self) -> str:
+        """EXPLAIN output: per-hop lines tagged with shards, then exchanges."""
+        lines = [
+            f"sharded {self.direction} plan, {len(self.order)} nodes, "
+            f"shards={self.shards_touched()}, est_cost={self.est_cost:.0f}"
+        ]
+        for key in self.order:
+            for step in self.steps.get(key, []):
+                opts = ", ".join(
+                    f"#{c.lineage_id}:{c.stored}/"
+                    f"{'nat' if c.frontier_on == 'key' else 'inv'}/{c.route}"
+                    for c in step.choices
+                )
+                shard = self.step_shard[(step.u, step.v)]
+                lines.append(
+                    f"  [s{shard}] {self.node_array[step.u]} -> "
+                    f"{self.node_array[step.v]}  [{opts}]"
+                )
+        for ex in self.exchanges:
+            lines.append(
+                f"  exchange {ex.array!r} ({ex.side}) s{ex.from_shard} -> "
+                f"s{ex.to_shard}  est_boxes={ex.est_boxes:.0f}"
+            )
+        return "\n".join(lines)
+
+
+class ShardedQueryPlanner(QueryPlanner):
+    """Plan over the global DAG, execute per shard with boundary exchanges.
+
+    Routing, materialization choice, and per-hop costing are inherited from
+    :class:`QueryPlanner` (run against the facade's global graph and lazy
+    entry view); this subclass decomposes the result by owning shard, adds
+    the cross-shard exchange cost term, and meters the frontiers that
+    actually cross boundaries at execution time.
+    """
+
+    def plan(self, sources, targets, frontier=None) -> ShardedQueryPlan:
+        return self._shardify(QueryPlanner.plan(self, sources, targets, frontier))
+
+    def plan_path(self, path, frontier=None) -> ShardedQueryPlan:
+        return self._shardify(QueryPlanner.plan_path(self, path, frontier))
+
+    # ------------------------------------------------------------------ #
+    def _shardify(self, base: QueryPlan) -> ShardedQueryPlan:
+        log: "ShardedDSLog" = self.log
+        plan = ShardedQueryPlan(
+            direction=base.direction,
+            starts=base.starts,
+            target_keys=base.target_keys,
+            order=base.order,
+            node_array=base.node_array,
+            steps=base.steps,
+            est_cost=base.est_cost,
+            est_boxes=base.est_boxes,
+        )
+        for key in plan.order:
+            plan.node_shard[key] = log.shard_of_array(plan.node_array[key])
+        for key, step_list in plan.steps.items():
+            for step in step_list:
+                # entries between one array pair share a dst, hence a shard
+                owner = (
+                    log.owner_shard(step.choices[0].lineage_id)
+                    if step.choices
+                    else plan.node_shard[key]
+                )
+                plan.step_shard[(step.u, step.v)] = owner
+                if plan.node_shard[step.u] != owner:
+                    nb = max(1.0, plan.est_boxes.get(step.u, 1.0))
+                    plan.add_exchange(
+                        ExchangeStep(
+                            plan.node_array[step.u],
+                            step.u,
+                            step.v,
+                            "input",
+                            plan.node_shard[step.u],
+                            owner,
+                            nb,
+                            _EXCHANGE_WEIGHT * nb,
+                        )
+                    )
+                if plan.node_shard[step.v] != owner:
+                    nb = max(1.0, step.est_pairs * _MERGE_SHRINK)
+                    plan.add_exchange(
+                        ExchangeStep(
+                            plan.node_array[step.v],
+                            step.u,
+                            step.v,
+                            "output",
+                            owner,
+                            plan.node_shard[step.v],
+                            nb,
+                            _EXCHANGE_WEIGHT * nb,
+                        )
+                    )
+        return plan
+
+    # ------------------------------------------------------------------ #
+    # execution hooks: meter (and compress) boundary-crossing frontiers
+    # ------------------------------------------------------------------ #
+    def _incoming_frontier(self, plan, step, qs):
+        if not isinstance(plan, ShardedQueryPlan):
+            return qs
+        ex = plan.exchange_for(step.u, step.v, "input")
+        if ex is None:
+            return qs
+        shipped = [merge_boxes(q) for q in qs]  # prune before crossing
+        n = sum(q.n_rows for q in shipped)
+        ex.shipped_boxes += n
+        self.log._bump("boxes_exchanged", n)
+        return shipped
+
+    def _record_step_output(self, plan, step, res_list):
+        if not isinstance(plan, ShardedQueryPlan):
+            return
+        ex = plan.exchange_for(step.u, step.v, "output")
+        if ex is None:
+            return
+        n = sum(r.n_rows for r in res_list)
+        ex.shipped_boxes += n
+        self.log._bump("boxes_exchanged", n)
+
+
+# --------------------------------------------------------------------------- #
+# The sharded store facade
+# --------------------------------------------------------------------------- #
+class _ShardedLineageView(Mapping):
+    """Read-only ``lineage_id -> LineageEntry`` view across all shards.
+
+    Resolving an id loads its owning shard's manifest (not its blobs) on
+    first touch — the mechanism behind lazy shard loading.
+    """
+
+    def __init__(self, log: "ShardedDSLog"):
+        self._log = log
+
+    def __getitem__(self, lineage_id: int):
+        shard = self._log.owner_shard(lineage_id)
+        return self._log.shard(shard).lineage[lineage_id]
+
+    def __iter__(self):
+        return iter(self._log._lid_shard)
+
+    def __len__(self) -> int:
+        return len(self._log._lid_shard)
+
+
+class ShardedDSLog:
+    """N independent DSLog shards behind the single-store interface.
+
+    ``N=1`` is the single-store special case: same planner decisions, same
+    query bytes, one shard manifest under the root.  The shard of every
+    array comes from ``policy`` (sticky: recorded in the root manifest so a
+    later policy change cannot orphan existing data); a lineage entry is
+    stored in its dst array's shard.  Lineage ids stay globally unique.
+    """
+
+    def __init__(
+        self,
+        n_shards: int = 1,
+        root: str | None = None,
+        policy: ShardPolicy | None = None,
+        store_forward: bool = True,
+        compress_method: str = "auto",
+        reuse_m: int = 1,
+        gzip: bool = True,
+    ):
+        self.policy = policy if policy is not None else HashShardPolicy(n_shards)
+        self.n_shards = self.policy.n_shards
+        self.root = root
+        self.store_forward = store_forward
+        self.compress_method = compress_method
+        self.reuse_m = reuse_m
+        self.gzip = gzip
+        self.arrays: dict[str, ArrayDef] = {}
+        self.sgraph = ShardedLineageGraph(self.n_shards)
+        self.by_pair: dict[tuple[str, str], list[int]] = {}
+        self.ops: list[_OpRecord] = []
+        self.predictor = ReusePredictor(m=reuse_m)
+        self.planner = ShardedQueryPlanner(self)
+        self.lineage = _ShardedLineageView(self)
+        self._next_id = 0
+        self._versions: dict[str, int] = {}
+        self._array_shard: dict[str, int] = {}
+        self._lid_shard: dict[int, int] = {}
+        self._shards: list[DSLog | None] = [None] * self.n_shards
+        self._predictor_chunk: dict | None = None
+        self._meta_dirty = False
+        self._io: dict[str, int] = {"shards_loaded": 0, "boxes_exchanged": 0}
+        if root:
+            os.makedirs(root, exist_ok=True)
+
+    # -- single-store machinery reused verbatim over sharded storage ----- #
+    add_lineage = DSLog.add_lineage
+    register_operation = DSLog.register_operation
+    _rollback_op = DSLog._rollback_op
+    _derive_forward = DSLog._derive_forward
+    _check_shapes = DSLog._check_shapes
+    prov_query = DSLog.prov_query
+    prov_query_batch = DSLog.prov_query_batch
+    _as_boxes = DSLog._as_boxes
+    _parse_query_args = staticmethod(DSLog._parse_query_args)
+    version = DSLog.version
+    latest_version = DSLog.latest_version
+    storage_bytes = DSLog.storage_bytes
+    _write_predictor = DSLog._write_predictor
+
+    # ------------------------------------------------------------------ #
+    @property
+    def graph(self) -> LineageGraph:
+        """Global DAG view (the planner routes over this)."""
+        return self.sgraph.global_graph
+
+    def shard_of_array(self, name: str) -> int:
+        """Sticky shard assignment: policy decides once, then it's recorded."""
+        shard = self._array_shard.get(name)
+        if shard is None:
+            shard = self.policy.shard_of(name) % self.n_shards
+            self._array_shard[name] = shard
+        return shard
+
+    def owner_shard(self, lineage_id: int) -> int:
+        return self._lid_shard[lineage_id]
+
+    def _shard_dir(self, shard: int) -> str | None:
+        if self.root is None:
+            return None
+        return os.path.join(self.root, f"shard_{shard:02d}")
+
+    def shard(self, shard: int) -> DSLog:
+        """The shard's DSLog, loading its manifest lazily on first touch."""
+        sh = self._shards[shard]
+        if sh is None:
+            sub = self._shard_dir(shard)
+            if sub is not None and os.path.exists(
+                os.path.join(sub, "catalog.json")
+            ):
+                sh = DSLog.load(sub)
+                sh.store_forward = self.store_forward
+                sh.compress_method = self.compress_method
+                sh.gzip = self.gzip
+                self._bump("shards_loaded")
+            else:
+                sh = DSLog(
+                    root=sub,
+                    store_forward=self.store_forward,
+                    compress_method=self.compress_method,
+                    reuse_m=self.reuse_m,
+                    gzip=self.gzip,
+                )
+            self._shards[shard] = sh
+        return sh
+
+    def loaded_shards(self) -> list[int]:
+        return [k for k, sh in enumerate(self._shards) if sh is not None]
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        self._io[key] = self._io.get(key, 0) + n
+
+    @property
+    def io_stats(self) -> dict[str, int]:
+        """Aggregated I/O counters: facade-level plus every loaded shard."""
+        total = {
+            "tables_loaded": 0,
+            "tables_written": 0,
+            "manifests_written": 0,
+            "sig_tables_written": 0,
+            "bytes_written": 0,
+        }
+        total.update(self._io)
+        for sh in self._shards:
+            if sh is None:
+                continue
+            for key, val in sh.io_stats.items():
+                total[key] = total.get(key, 0) + val
+        return total
+
+    @property
+    def dirty(self) -> bool:
+        return (
+            self._meta_dirty
+            or self.predictor.dirty
+            or any(sh is not None and sh.dirty for sh in self._shards)
+        )
+
+    # ------------------------------------------------------------------ #
+    # Array / lineage definition (routes through the policy)
+    # ------------------------------------------------------------------ #
+    def define_array(self, name: str, shape: tuple[int, ...]) -> ArrayDef:
+        arr = ArrayDef(name, tuple(int(d) for d in shape))
+        self.arrays[name] = arr
+        self.shard_of_array(name)
+        self._meta_dirty = True
+        return arr
+
+    def _insert_entry(
+        self,
+        src: str,
+        dst: str,
+        bwd: CompressedTable,
+        fwd: CompressedTable | None,
+        op_name: str | None,
+        reused_from: str | None = None,
+    ):
+        src_shard = self.shard_of_array(src)
+        dst_shard = self.shard_of_array(dst)
+        lineage_id = self._next_id
+        # global cycle check first; a rejected edge leaves everything intact
+        self.sgraph.add_edge(src, dst, lineage_id, src_shard, dst_shard)
+        sh = self.shard(dst_shard)
+        for name in (src, dst):
+            arr = self.arrays.get(name)
+            if arr is not None:
+                sh.arrays.setdefault(name, ArrayDef(name, arr.shape))
+        sh._next_id = lineage_id  # shards mint from the global id space
+        try:
+            entry = sh._insert_entry(src, dst, bwd, fwd, op_name, reused_from)
+        except CycleError:  # pragma: no cover - global check already passed
+            self.sgraph.remove_edge(src, dst, lineage_id, src_shard, dst_shard)
+            raise
+        self._next_id = sh._next_id
+        self.by_pair.setdefault((src, dst), []).append(lineage_id)
+        self._lid_shard[lineage_id] = dst_shard
+        self._meta_dirty = True
+        return entry
+
+    def _remove_entry(self, lineage_id: int) -> None:
+        dst_shard = self._lid_shard.pop(lineage_id)
+        sh = self.shard(dst_shard)
+        e = sh.lineage[lineage_id]
+        sh._remove_entry(lineage_id)
+        self.sgraph.remove_edge(
+            e.src, e.dst, lineage_id, self.shard_of_array(e.src), dst_shard
+        )
+        ids = self.by_pair[(e.src, e.dst)]
+        ids.remove(lineage_id)
+        if not ids:
+            del self.by_pair[(e.src, e.dst)]
+        self._meta_dirty = True
+
+    def drop_lineage(self, lineage_id: int) -> None:
+        """Remove one entry; its blobs are vacuumed by :meth:`compact`."""
+        if lineage_id not in self._lid_shard:
+            raise KeyError(f"no lineage entry {lineage_id}")
+        shard = self._lid_shard[lineage_id]
+        self._remove_entry(lineage_id)
+        sh = self.shard(shard)
+        sh._persisted.pop(lineage_id, None)
+        sh.hop_stats = {
+            k: v
+            for k, v in sh.hop_stats.items()
+            if int(k.split(":", 1)[0]) != lineage_id
+        }
+        for op in self.ops:
+            if lineage_id in op.lineage_ids:
+                op.lineage_ids.remove(lineage_id)
+
+    # ------------------------------------------------------------------ #
+    # Planner cost-model feedback routes to the owning shard
+    # ------------------------------------------------------------------ #
+    def record_hop(
+        self,
+        lineage_id: int,
+        stored: str,
+        frontier_on: str,
+        pairs: int,
+        qrows: int,
+    ) -> None:
+        self.shard(self.owner_shard(lineage_id)).record_hop(
+            lineage_id, stored, frontier_on, pairs, qrows
+        )
+
+    def hop_measurement(
+        self, lineage_id: int, stored: str, frontier_on: str
+    ) -> float | None:
+        return self.shard(self.owner_shard(lineage_id)).hop_measurement(
+            lineage_id, stored, frontier_on
+        )
+
+    # ------------------------------------------------------------------ #
+    # Persistence: root manifest + independently saved shard manifests
+    # ------------------------------------------------------------------ #
+    def save(self) -> None:
+        """Save dirty shards and (when needed) the root manifest.
+
+        Each shard's DSLog dirty-tracks its own entries, so only shards
+        that changed since the last save write anything — manifests
+        included.  The root manifest (policy, array→shard map, topology,
+        boundary table, ops, predictor) rewrites only when facade-level
+        state changed.
+        """
+        if not self.root:
+            raise ValueError("ShardedDSLog opened without a root directory")
+        for sh in self._shards:
+            if sh is not None and sh.dirty:
+                sh.save()
+        manifest = os.path.join(self.root, "catalog.json")
+        if not (
+            self._meta_dirty
+            or self.predictor.dirty
+            or self._predictor_chunk is None
+            or not os.path.exists(manifest)
+        ):
+            return
+        if self._predictor_chunk is None or self.predictor.dirty:
+            self._predictor_chunk = self._write_predictor()
+        edges = [
+            [src, dst, lid, self._lid_shard[lid]]
+            for (src, dst), ids in self.by_pair.items()
+            for lid in ids
+        ]
+        meta = {
+            "version": _ROOT_MANIFEST_VERSION,
+            "sharded": True,
+            "n_shards": self.n_shards,
+            "policy": self.policy.to_manifest(),
+            "arrays": {
+                n: {"shape": list(a.shape), "shard": self.shard_of_array(n)}
+                for n, a in self.arrays.items()
+            },
+            "edges": edges,
+            "boundary": [list(rec) for rec in self.sgraph.boundary_edges()],
+            "next_id": self._next_id,
+            "versions": dict(self._versions),
+            "ops": [
+                {
+                    "op": op.op_name,
+                    "in": list(op.in_arrs),
+                    "out": list(op.out_arrs),
+                    "args": _json_safe(op.op_args),
+                    "lineage_ids": list(op.lineage_ids),
+                    "reused": op.reused,
+                }
+                for op in self.ops
+            ],
+            "predictor": self._predictor_chunk,
+        }
+        payload = json.dumps(meta)
+        with open(manifest, "w") as f:
+            f.write(payload)
+        self._bump("manifests_written")
+        self._bump("bytes_written", len(payload))
+        self._meta_dirty = False
+
+    @staticmethod
+    def load(root: str, eager: bool = False) -> "ShardedDSLog":
+        """Reopen a sharded root without touching any shard manifest.
+
+        The root manifest restores the policy, array→shard map, global
+        topology (graph + boundary table), ops, version counters, and
+        predictor state; each shard's own manifest (and its blobs) resolves
+        lazily the first time a plan or query touches that shard —
+        ``io_stats["shards_loaded"]`` counts those resolutions.  Pass
+        ``eager=True`` to open every shard up front.
+        """
+        with open(os.path.join(root, "catalog.json")) as f:
+            meta = json.load(f)
+        if not meta.get("sharded"):
+            raise ValueError(
+                f"{root!r} holds a plain DSLog catalog; use DSLog.load"
+            )
+        policy = ShardPolicy.from_manifest(meta["policy"])
+        log = ShardedDSLog(n_shards=policy.n_shards, root=root, policy=policy)
+        for name, rec in meta["arrays"].items():
+            log.arrays[name] = ArrayDef(name, tuple(rec["shape"]))
+            log._array_shard[name] = int(rec["shard"])
+        for src, dst, lid, shard in meta["edges"]:
+            lid, shard = int(lid), int(shard)
+            log.sgraph.add_edge(src, dst, lid, log.shard_of_array(src), shard)
+            log.by_pair.setdefault((src, dst), []).append(lid)
+            log._lid_shard[lid] = shard
+        log._next_id = int(meta["next_id"])
+        log._versions = {k: int(v) for k, v in meta.get("versions", {}).items()}
+        for op in meta.get("ops", []):
+            log.ops.append(
+                _OpRecord(
+                    op["op"],
+                    tuple(op["in"]),
+                    tuple(op["out"]),
+                    op["args"],
+                    list(op["lineage_ids"]),
+                    op["reused"],
+                )
+            )
+        chunk = meta.get("predictor")
+        if chunk is not None:
+
+            def load_table(fn: str) -> CompressedTable:
+                with open(os.path.join(root, fn), "rb") as f:
+                    return CompressedTable.deserialize(f.read())
+
+            log.predictor = ReusePredictor.from_manifest(chunk, load_table)
+            log._predictor_chunk = chunk
+        log._meta_dirty = False
+        if eager:
+            for k in range(log.n_shards):
+                log.shard(k)
+        return log
+
+    def compact(self) -> dict[str, int]:
+        """Vacuum every shard independently, plus root-level sig blobs."""
+        if not self.root:
+            raise ValueError("ShardedDSLog opened without a root directory")
+        self.save()
+        stats = {"files_removed": 0, "bytes_reclaimed": 0}
+        for k in range(self.n_shards):
+            sub = self._shard_dir(k)
+            if sub is None or not os.path.isdir(sub):
+                continue
+            # the facade save() already synced dirty shards
+            for key, val in self.shard(k).compact(save=False).items():
+                stats[key] += val
+        referenced = {"catalog.json"}
+        if self._predictor_chunk:
+            for rec in self._predictor_chunk.get("sigs", []):
+                referenced.update(rec.get("tables", {}).values())
+        for key, val in _vacuum_dir(self.root, referenced).items():
+            stats[key] += val
+        return stats
+
+    # ------------------------------------------------------------------ #
+    def __repr__(self) -> str:
+        return (
+            f"ShardedDSLog(n_shards={self.n_shards}, arrays={len(self.arrays)}, "
+            f"entries={len(self._lid_shard)}, "
+            f"boundary={len(self.sgraph.boundary)}, "
+            f"loaded={self.loaded_shards()})"
+        )

@@ -19,10 +19,13 @@ The data pipeline (``repro.data.pipeline.TokenPipeline``) accepts a
 """
 
 from repro.core import (  # noqa: F401
+    AffinityShardPolicy,
     ArrayDef,
     CompressedTable,
     CycleError,
     DSLog,
+    ExchangeStep,
+    HashShardPolicy,
     IntervalIndex,
     LineageEntry,
     LineageGraph,
@@ -31,6 +34,11 @@ from repro.core import (  # noqa: F401
     QueryPlan,
     QueryPlanner,
     ReusePredictor,
+    ShardedDSLog,
+    ShardedLineageGraph,
+    ShardedQueryPlan,
+    ShardedQueryPlanner,
+    ShardPolicy,
     compress,
     compress_both,
     merge_boxes,
@@ -43,10 +51,13 @@ from repro.core import capture  # noqa: F401
 from repro.core.oplib import OPS, OpSpec, get_op, op_names  # noqa: F401
 
 __all__ = [
+    "AffinityShardPolicy",
     "ArrayDef",
     "CompressedTable",
     "CycleError",
     "DSLog",
+    "ExchangeStep",
+    "HashShardPolicy",
     "IntervalIndex",
     "LineageEntry",
     "LineageGraph",
@@ -57,6 +68,11 @@ __all__ = [
     "QueryPlan",
     "QueryPlanner",
     "ReusePredictor",
+    "ShardPolicy",
+    "ShardedDSLog",
+    "ShardedLineageGraph",
+    "ShardedQueryPlan",
+    "ShardedQueryPlanner",
     "capture",
     "compress",
     "compress_both",
