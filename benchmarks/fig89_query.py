@@ -21,6 +21,7 @@ counting how many table blobs one query actually deserializes.
 
 from __future__ import annotations
 
+import os
 import tempfile
 import time
 
@@ -45,6 +46,7 @@ __all__ = [
     "run_index_ablation",
     "run_dag_ablation",
     "run_shard_ablation",
+    "run_wal_ablation",
 ]
 
 
@@ -499,6 +501,228 @@ def run_shard_ablation(
                 f"{total_tables}tables",
                 flush=True,
             )
+    return rows
+
+
+# --------------------------------------------------------------------------- #
+# WAL ingest ablation: synchronous saves vs group commit, writer scaling,
+# parallel vs serial sub-plan execution
+# --------------------------------------------------------------------------- #
+_WAL_WORKER = """
+import os, sys, time
+import numpy as np
+from repro.core.shard import ShardedDSLog
+from repro.core.capture import identity_lineage
+
+root, writer, n, side = sys.argv[1], int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4])
+log = ShardedDSLog.open(root, exclusive=False)
+go = os.path.join(root, "go")
+deadline = time.time() + 60
+while not os.path.exists(go):
+    if time.time() > deadline:
+        raise SystemExit("rendezvous timed out")
+    time.sleep(0.001)
+rel = identity_lineage((side, side))
+t0 = time.perf_counter()
+prev = f"w{writer}c0"
+for k in range(1, n + 1):
+    log.add_lineage(prev, f"w{writer}c{k}", rel)
+    prev = f"w{writer}c{k}"
+log.commit()  # durability barrier ends the measured ingest window
+dt = time.perf_counter() - t0
+with open(os.path.join(root, f"elapsed_{writer}.txt"), "w") as f:
+    f.write(repr(dt))
+log.close()
+"""
+
+
+def _spawn_writers(root: str, n_writers: int, per_writer: int, side: int):
+    import subprocess
+    import sys as _sys
+
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    procs = [
+        subprocess.Popen(
+            [_sys.executable, "-c", _WAL_WORKER, root, str(i),
+             str(per_writer), str(side)],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        )
+        for i in range(n_writers)
+    ]
+    time.sleep(0.3)  # both sides of the rendezvous are polling now
+    t0 = time.perf_counter()
+    with open(os.path.join(root, "go"), "w") as f:
+        f.write("go")
+    for p in procs:
+        _, err = p.communicate(timeout=600)
+        if p.returncode != 0:
+            raise RuntimeError(err.decode())
+    wall = time.perf_counter() - t0
+    # the measured window is each writer's ingest (go -> commit); the
+    # slowest writer bounds the aggregate throughput
+    ingest = max(
+        float(open(os.path.join(root, f"elapsed_{i}.txt")).read())
+        for i in range(n_writers)
+    )
+    return wall, ingest
+
+
+def run_wal_ablation(
+    n_entries: int = 200,
+    writer_counts=(1, 2, 4),
+    side: int = 32,
+    smoke: bool = False,
+    verbose: bool = True,
+) -> list[dict]:
+    """Ingest durability ablation (ISSUE 4 acceptance measurement).
+
+    * **Single-writer modes** — the same ``n_entries``-long chain ingested
+      with (a) a synchronous ``save()`` after every entry (the only
+      durability the store had before the WAL), (b) WAL with per-record
+      fsync, (c) WAL with group commit.  Group commit must beat per-entry
+      synchronous saves on entries/sec.
+    * **Writer scaling** — the same *total* entry count split across
+      1/2/4 concurrent writer processes ingesting into disjoint shards
+      under writer-mode leases.
+    * **Query execution** — serial vs ``parallel=4`` batched execution of
+      a wide fan-in DAG on a 4-shard store (non-dependent sub-plans run on
+      the thread pool).
+    """
+    import tempfile as _tmp
+
+    from repro.core.catalog import DSLog
+    from repro.core.shard import AffinityShardPolicy, ShardedDSLog
+
+    if smoke:
+        n_entries, writer_counts, side = 30, (1, 2), 16
+    rows: list[dict] = []
+    rel = C.identity_lineage((side, side))
+
+    def ingest_chain(log, n, commit_every=None):
+        prev = "c0"
+        for k in range(1, n + 1):
+            log.add_lineage(prev, f"c{k}", rel)
+            if commit_every is not None and k % commit_every == 0:
+                log.save()
+            prev = f"c{k}"
+
+    # -- single-writer durability modes --------------------------------- #
+    modes = {}
+    with _tmp.TemporaryDirectory() as d:
+        log = DSLog(root=d, store_forward=False)
+        t0 = time.perf_counter()
+        ingest_chain(log, n_entries, commit_every=1)  # save per entry
+        modes["sync_save"] = time.perf_counter() - t0
+    for mode in ("sync", "group"):
+        with _tmp.TemporaryDirectory() as d:
+            log = DSLog.open(d, durability=mode, store_forward=False)
+            t0 = time.perf_counter()
+            ingest_chain(log, n_entries)
+            log.commit()  # durability barrier: fair comparison point
+            modes[f"wal_{mode}"] = time.perf_counter() - t0
+            log.close()
+    rec = {
+        "kind": "modes",
+        "n_entries": n_entries,
+        **{f"{m}_s": s for m, s in modes.items()},
+        "group_vs_sync_save_x": modes["sync_save"] / modes["wal_group"],
+    }
+    rows.append(rec)
+    if verbose:
+        print(
+            f"  wal_ablation n={n_entries} "
+            + " ".join(
+                f"{m}={n_entries / s:8.0f}ent/s" for m, s in modes.items()
+            )
+            + f" group_commit_speedup={rec['group_vs_sync_save_x']:.1f}x",
+            flush=True,
+        )
+    assert rec["group_vs_sync_save_x"] > 1.0, (
+        "group commit must beat per-entry synchronous saves"
+    )
+
+    # -- concurrent writer scaling (processes, disjoint shards) ---------- #
+    for w in writer_counts:
+        per_writer = max(1, n_entries // w)
+        with _tmp.TemporaryDirectory() as d:
+            pins = {
+                f"w{i}c{k}": i
+                for i in range(w)
+                for k in range(per_writer + 1)
+            }
+            with ShardedDSLog.open(
+                d, max(w, 1), policy=AffinityShardPolicy(max(w, 1), pins)
+            ):
+                pass
+            wall, ingest = _spawn_writers(d, w, per_writer, side)
+            total = per_writer * w
+            with ShardedDSLog.open(d) as folded:  # fold + sanity check
+                assert len(folded._lid_shard) == total
+        rec = {
+            "kind": "writers",
+            "n_writers": w,
+            "total_entries": total,
+            "wall_s": wall,
+            "ingest_s": ingest,
+            "entries_per_s": total / ingest,
+        }
+        rows.append(rec)
+        if verbose:
+            print(
+                f"  wal_ablation writers={w} total={total} "
+                f"ingest={ingest * 1e3:8.1f}ms (wall={wall * 1e3:7.1f}ms) "
+                f"throughput={rec['entries_per_s']:8.0f}ent/s",
+                flush=True,
+            )
+
+    # -- parallel vs serial sub-plan execution --------------------------- #
+    qside = max(side, 48) if not smoke else 32
+    log = _build_diamond(
+        qside, 8 if not smoke else 4,
+        log=ShardedDSLog(n_shards=4, store_forward=True),
+    )
+    rng = np.random.default_rng(5)
+    picks = rng.choice(qside * qside, size=32, replace=False)
+    cells = np.stack(np.unravel_index(picks, (qside, qside)), axis=1)
+    queries = [cells[k * 4 : (k + 1) * 4] for k in range(8)]
+    serial_res = log.prov_query_batch("src", "out", queries)
+    par_res = log.prov_query_batch("src", "out", queries, parallel=4)
+    assert [r.cell_set() for r in serial_res] == [
+        r.cell_set() for r in par_res
+    ]
+
+    def time_of(fn, n=3):
+        best = float("inf")
+        for _ in range(n):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    serial_s = time_of(
+        lambda: log.prov_query_batch("src", "out", queries)
+    )
+    par_s = time_of(
+        lambda: log.prov_query_batch("src", "out", queries, parallel=4)
+    )
+    rec = {
+        "kind": "exec",
+        "serial_s": serial_s,
+        "parallel_s": par_s,
+        "speedup": serial_s / par_s if par_s > 0 else float("inf"),
+    }
+    rows.append(rec)
+    if verbose:
+        print(
+            f"  wal_ablation exec serial={serial_s * 1e3:8.2f}ms "
+            f"parallel4={par_s * 1e3:8.2f}ms "
+            f"speedup={rec['speedup']:.2f}x",
+            flush=True,
+        )
     return rows
 
 

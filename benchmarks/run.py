@@ -101,6 +101,33 @@ def bench_shard(quick: bool) -> None:
         )
 
 
+def bench_wal(quick: bool) -> None:
+    from .fig89_query import run_wal_ablation
+
+    print("# WAL ingest ablation — sync saves vs group commit, writer "
+          "scaling, parallel execution", flush=True)
+    rows = run_wal_ablation(smoke=_SMOKE)
+    for r in rows:
+        if r["kind"] == "modes":
+            for m in ("sync_save", "wal_sync", "wal_group"):
+                _emit(
+                    f"wal/modes/n{r['n_entries']}/{m}", r[f"{m}_s"] * 1e6,
+                    f"entries_per_s={r['n_entries'] / r[f'{m}_s']:.0f}",
+                )
+            _emit(f"wal/modes/n{r['n_entries']}/speedup", 0.0,
+                  f"group_vs_sync_save_x={r['group_vs_sync_save_x']:.1f}")
+        elif r["kind"] == "writers":
+            _emit(
+                f"wal/writers/{r['n_writers']}", r["ingest_s"] * 1e6,
+                f"total={r['total_entries']};"
+                f"entries_per_s={r['entries_per_s']:.0f}",
+            )
+        elif r["kind"] == "exec":
+            _emit("wal/exec/serial", r["serial_s"] * 1e6, "")
+            _emit("wal/exec/parallel4", r["parallel_s"] * 1e6,
+                  f"speedup_x={r['speedup']:.2f}")
+
+
 def bench_dag(quick: bool) -> None:
     from .fig89_query import run_dag_ablation
 
@@ -174,6 +201,7 @@ BENCHES = {
     "index": bench_index,
     "dag": bench_dag,
     "shard": bench_shard,
+    "wal": bench_wal,
     "table9": bench_table9,
     "roofline": bench_roofline,
     "kernels": bench_kernels,

@@ -64,20 +64,22 @@ for i, shape in enumerate([(512, 32), (2048, 128), (99, 7)]):
     )
     print(f"normalize on {shape}: reused={rec.reused}")
 
-# Persistence v2: the manifest round-trips ops + reuse state, and a
-# reloaded catalog deserializes blobs lazily — only what a query touches.
+# Durable persistence: DSLog.open is the context-managed writer — ingest
+# is write-ahead logged (group commit), a second concurrent open raises
+# LeaseHeldError, and the with-exit checkpoints (incremental save + log
+# truncation).  A reloaded catalog deserializes blobs lazily — only what a
+# query touches — and, after a crash, replays the WAL tail on load.
 with tempfile.TemporaryDirectory() as d:
-    disk = DSLog(root=d)
-    for name, shape in log.arrays.items():
-        disk.define_array(name, shape.shape)
-    disk.register_operation(
-        "normalize", ["X"], ["Y"],
-        capture=lambda: {(0, 0): identity_lineage((1024, 64))},
-    )
-    disk.register_operation(
-        "project", ["Y"], ["Z"], capture=lambda: {(0, 0): rel_y}
-    )
-    disk.save()
+    with DSLog.open(d) as disk:
+        for name, shape in log.arrays.items():
+            disk.define_array(name, shape.shape)
+        disk.register_operation(
+            "normalize", ["X"], ["Y"],
+            capture=lambda: {(0, 0): identity_lineage((1024, 64))},
+        )
+        disk.register_operation(
+            "project", ["Y"], ["Z"], capture=lambda: {(0, 0): rel_y}
+        )
     reloaded = DSLog.load(d)
     reloaded.prov_query("Z", "Y", np.array([[7, 3]]))
     print(

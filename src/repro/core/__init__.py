@@ -8,6 +8,7 @@ In-Situ Query Processing for Fine-Grained Array Lineage").  Public API:
 
 from .capture import capture_jacobian  # noqa: F401
 from .catalog import ArrayDef, DSLog, LineageEntry  # noqa: F401
+from .commit import CommitPipeline, LeaseHeldError, WriterLease  # noqa: F401
 from .graph import CycleError, LineageGraph  # noqa: F401
 from .index import IntervalIndex  # noqa: F401
 from .planner import QueryPlan, QueryPlanner  # noqa: F401
@@ -34,3 +35,4 @@ from .shard import (  # noqa: F401
     ShardPolicy,
 )
 from .table import CompressedTable, TableHandle  # noqa: F401
+from .wal import WalRecord, WriteAheadLog  # noqa: F401

@@ -40,11 +40,13 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from .commit import CommitPipeline, WriterLease
 from .graph import CycleError, LineageGraph
 from .index import IntervalIndex
 from .planner import QueryPlanner
@@ -58,6 +60,7 @@ from .reuse import (
     sig_key_gen,
 )
 from .table import CompressedTable, TableHandle
+from .wal import WAL_FILENAME, WalRecord, WriteAheadLog
 
 __all__ = ["DSLog", "ArrayDef", "LineageEntry"]
 
@@ -67,6 +70,34 @@ __all__ = ["DSLog", "ArrayDef", "LineageEntry"]
 _INDEX_PERSIST_MIN_ROWS = 4096
 
 _MANIFEST_VERSION = 3
+
+# Constructor options that open() may apply to an already-loaded store.
+# (reuse_m lands on the predictor: the ctor only forwards it there.)
+_OPEN_OVERRIDES = ("store_forward", "compress_method", "gzip", "hop_decay", "reuse_m")
+
+
+def _apply_open_overrides(log, ctor_kw: dict) -> None:
+    for key, val in ctor_kw.items():
+        if key not in _OPEN_OVERRIDES:
+            raise TypeError(
+                f"unknown store option {key!r} for open(); valid on an "
+                f"existing store: {', '.join(_OPEN_OVERRIDES)}"
+            )
+        if key == "reuse_m" and not hasattr(log, "reuse_m"):
+            log.predictor.m = int(val)
+        else:
+            setattr(log, key, val)
+            if key == "reuse_m":
+                log.predictor.m = int(val)
+
+# Cost-feedback aging: every new hop measurement decays the accumulated
+# (pairs, qrows) mass by this factor before adding its own, so the measured
+# selectivity is an exponential moving average — replanning stays honest
+# after the workload shifts instead of being pinned to ancient traffic.
+_DEFAULT_HOP_DECAY = 0.9
+# ...and the accumulated qrows mass is capped, bounding how much history a
+# shifted workload has to out-shout (the "sample cap" of the EMA).
+_HOP_SAMPLE_CAP = 1e6
 
 
 def _sig_blob_name(key: str, label: str) -> str:
@@ -79,6 +110,17 @@ def _sig_blob_name(key: str, label: str) -> str:
     """
     h = hashlib.sha1(key.encode()).hexdigest()[:10]
     return f"sig_{h}_{label.replace(':', '-')}.prvc"
+
+
+def _atomic_write(path: str, payload: str) -> None:
+    """Crash-safe manifest write: temp file + fsync + atomic rename, so a
+    torn save can never leave a half-written ``catalog.json`` behind."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(payload)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
 
 
 def _vacuum_dir(root: str, referenced: set[str]) -> dict[str, int]:
@@ -230,11 +272,13 @@ class DSLog:
         compress_method: str = "auto",
         reuse_m: int = 1,
         gzip: bool = True,
+        hop_decay: float = _DEFAULT_HOP_DECAY,
     ):
         self.root = root
         self.store_forward = store_forward
         self.compress_method = compress_method
         self.gzip = gzip
+        self.hop_decay = float(hop_decay)
         self.arrays: dict[str, ArrayDef] = {}
         self.lineage: dict[int, LineageEntry] = {}
         self.by_pair: dict[tuple[str, str], list[int]] = {}
@@ -264,11 +308,21 @@ class DSLog:
             "sig_tables_written": 0,
             "bytes_written": 0,
         }
+        # durability subsystem (attached by open()/load(); None = legacy
+        # explicit-save store with no write-ahead log)
+        self._wal: WriteAheadLog | None = None
+        self._pipeline: CommitPipeline | None = None
+        self._lease: WriterLease | None = None
+        self._wal_lsn = 0  # manifest checkpoint LSN: replay starts past it
+        self._replaying = False
+        self._closed = False
+        self._stats_lock = threading.RLock()
         if root:
             os.makedirs(root, exist_ok=True)
 
     def _bump(self, key: str, n: int = 1) -> None:
-        self.io_stats[key] = self.io_stats.get(key, 0) + n
+        with self._stats_lock:
+            self.io_stats[key] = self.io_stats.get(key, 0) + n
 
     @property
     def dirty(self) -> bool:
@@ -278,12 +332,291 @@ class DSLog:
         )
 
     # ------------------------------------------------------------------ #
+    # Durable concurrent ingest: WAL, group commit, leases, recovery
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def open(
+        cls,
+        root: str,
+        *,
+        durability: str = "group",
+        flush_interval: float = 0.005,
+        max_batch: int = 256,
+        lease_ttl: float = 300.0,
+        **ctor_kw,
+    ) -> "DSLog":
+        """Open ``root`` as the store's (single) writer, durably.
+
+        Acquires the directory's writer lease (a second concurrent open
+        raises :class:`~repro.core.commit.LeaseHeldError`), loads the
+        manifest if one exists, replays the write-ahead log tail past the
+        last checkpoint — truncating any torn trailing record — and
+        attaches a :class:`~repro.core.commit.CommitPipeline` so every
+        subsequent mutation is logged before it is acknowledged.
+
+        ``durability`` is ``"group"`` (default: one fsync per
+        ``flush_interval`` / ``max_batch`` batch), ``"sync"`` (fsync per
+        record), or ``"manual"`` (fsync only at :meth:`commit` /
+        :meth:`checkpoint`).  Use as a context manager::
+
+            with DSLog.open("/data/lineage") as log:
+                log.add_lineage(...)
+            # exit = checkpoint (incremental save + log truncation),
+            # lease release
+        """
+        os.makedirs(root, exist_ok=True)
+        lease = WriterLease.acquire(root, ttl=lease_ttl)
+        try:
+            if os.path.exists(os.path.join(root, "catalog.json")):
+                log = cls.load(root)
+                _apply_open_overrides(log, ctor_kw)
+            else:
+                log = cls(root=root, **ctor_kw)
+            if log._wal is None:
+                # fresh store, or an existing store opened durably for the
+                # first time: create the log (replays nothing).  A crashed
+                # store's log was already replayed by load() above.
+                log._attach_wal()
+            log._wal.repair()  # we hold the lease: torn tails may be cut
+            log._pipeline = CommitPipeline(durability, flush_interval, max_batch)
+            log._pipeline.attach(log._wal)
+            log._lease = lease
+            return log
+        except BaseException:
+            lease.release()
+            raise
+
+    def __enter__(self) -> "DSLog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self, checkpoint: bool = True) -> None:
+        """Flush, optionally checkpoint, and release the writer lease.
+
+        ``checkpoint=False`` leaves the WAL as the only record of unsaved
+        work (the next open replays it) — what a crashed writer looks like,
+        minus the torn tail.  A store that was merely ``load()``-ed (no
+        lease held) never checkpoints on close: truncating the log without
+        the lease could destroy a live writer's records.  Idempotent.
+        """
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            if self._pipeline is not None:
+                self._pipeline.commit()
+            if self._wal is not None:
+                if checkpoint and self._lease is not None:
+                    self.checkpoint()
+                else:
+                    self._wal.flush(sync=True)
+        finally:
+            if self._pipeline is not None:
+                self._pipeline.close()
+            if self._wal is not None:
+                self._wal.close()
+                self._wal = None
+            if self._lease is not None:
+                self._lease.release()
+                self._lease = None
+
+    def commit(self) -> None:
+        """Durability barrier: every logged mutation is on disk on return."""
+        if self._pipeline is not None:
+            self._pipeline.commit()
+        elif self._wal is not None:
+            self._wal.flush(sync=True)
+
+    def checkpoint(self) -> None:
+        """Fold the WAL into the manifest: incremental save + truncation."""
+        self.save()
+
+    def mark_dirty(self, lineage_id: int) -> None:
+        """Declare an entry's tables mutated in place.
+
+        The catalog's dirty tracking only sees *new* entries; a workflow
+        that edits a stored table in place must call this so the mutation
+        is (a) logged to the WAL now — an explicit invalidation record
+        carrying the current table bytes, so a crash cannot silently revert
+        it — and (b) rewritten by the next checkpoint.  Cached interval
+        indexes and stale hop measurements for the entry are dropped.
+        """
+        if lineage_id not in self.lineage:
+            raise KeyError(f"no lineage entry {lineage_id}")
+        e = self.lineage[lineage_id]
+        bwd = e.backward  # a mutated table is necessarily resident
+        bwd.invalidate_index()
+        fwd = e.forward
+        if fwd is not None:
+            fwd.invalidate_index()
+        self._dirty.add(lineage_id)
+        self._meta_dirty = True
+        with self._stats_lock:
+            self.hop_stats = {
+                k: v
+                for k, v in self.hop_stats.items()
+                if int(k.split(":", 1)[0]) != lineage_id
+            }
+        blobs = [bwd.serialize(compress=self.gzip)]
+        meta = {"id": lineage_id, "fwd": fwd is not None}
+        if fwd is not None:
+            blobs.append(fwd.serialize(compress=self.gzip))
+        self._wal_append_entry("dirty", meta, blobs)
+
+    # -- internal plumbing --------------------------------------------- #
+    def _attach_wal(
+        self,
+        pipeline: CommitPipeline | None = None,
+        truncate: bool = False,
+    ) -> int:
+        """Open (or create) the root's WAL and replay its tail past the
+        manifest checkpoint LSN.  Returns the number of replayed records.
+
+        ``truncate=True`` (torn-tail repair) is reserved for callers that
+        hold the store's writer lease — a plain ``load()`` must never
+        mutate a log a live writer may still be appending to."""
+        assert self.root is not None
+        if self._wal is None:
+            self._wal = WriteAheadLog(os.path.join(self.root, WAL_FILENAME))
+        if pipeline is not None:
+            self._pipeline = pipeline
+            pipeline.attach(self._wal)
+        replayed = self._wal.recover(self._wal_lsn, truncate=truncate)
+        for rec in replayed:
+            self._replay_record(rec)
+        if replayed:
+            self._bump("wal_replayed", len(replayed))
+        return len(replayed)
+
+    def _wal_emit(
+        self, wal: WriteAheadLog | None, rtype: str, meta: dict, blobs=()
+    ) -> None:
+        if wal is None or self._replaying:
+            return
+        wal.append(rtype, meta, blobs)
+        if self._pipeline is not None:
+            self._pipeline.notify(wal)
+        else:  # no pipeline attached (plain load): stay conservative
+            wal.flush(sync=True)
+
+    def _wal_append_root(self, rtype: str, meta: dict, blobs=()) -> None:
+        """Log a store-level record (arrays, ops, versions, predictor).
+
+        On the sharded facade this targets the root log instead."""
+        self._wal_emit(self._wal, rtype, meta, blobs)
+
+    def _wal_append_entry(self, rtype: str, meta: dict, blobs=()) -> None:
+        """Log an entry-level record (entry bytes, in-place invalidation)."""
+        self._wal_emit(self._wal, rtype, meta, blobs)
+
+    def _entry_wal_record(self, entry: LineageEntry) -> tuple[dict, list]:
+        blobs = [entry.backward.serialize(compress=self.gzip)]
+        meta = {
+            "id": entry.lineage_id,
+            "src": entry.src,
+            "dst": entry.dst,
+            "op": entry.op_name,
+            "reused": entry.reused_from,
+            "src_shape": list(self.arrays[entry.src].shape),
+            "dst_shape": list(self.arrays[entry.dst].shape),
+            "fwd": entry.has_forward,
+        }
+        if entry.has_forward:
+            blobs.append(entry.forward.serialize(compress=self.gzip))
+        return meta, blobs
+
+    def _replay_store_record(self, rec: WalRecord) -> bool:
+        """Apply one *store-level* record (array/version/op/obs) — the
+        branches shared verbatim between single-store replay and the
+        sharded facade's root-log replay.  Returns False for record types
+        the caller must handle itself.  Caller holds ``_replaying``.
+        """
+        t, m = rec.type, rec.meta
+        if t == "array":
+            self.define_array(m["name"], tuple(m["shape"]))
+        elif t == "version":
+            base = m["base"]
+            self._versions[base] = max(self._versions.get(base, 0), int(m["k"]))
+            self._meta_dirty = True
+        elif t == "op":
+            self.ops.append(
+                _OpRecord(
+                    m["op"],
+                    tuple(m["in"]),
+                    tuple(m["out"]),
+                    m["args"],
+                    list(m["lids"]),
+                    m.get("reused"),
+                )
+            )
+            self._meta_dirty = True
+        elif t == "obs":
+            captured = {
+                label: CompressedTable.deserialize(bytes(blob))
+                for label, blob in zip(m["labels"], rec.blobs)
+            }
+            shapes_token = tuple(tuple(int(x) for x in s) for s in m["shapes"])
+            self.predictor.observe(m["dim"], m["gen"], shapes_token, captured)
+        else:
+            return False
+        return True
+
+    def _replay_record(self, rec: WalRecord) -> None:
+        """Apply one recovered WAL record to in-memory state.
+
+        Replayed mutations are dirty (the manifest has not seen them) and
+        must not re-log themselves — ``_replaying`` gates the WAL hooks.
+        """
+        t, m = rec.type, rec.meta
+        self._replaying = True
+        try:
+            if self._replay_store_record(rec):
+                pass
+            elif t == "entry":
+                bwd = CompressedTable.deserialize(bytes(rec.blobs[0]))
+                fwd = (
+                    CompressedTable.deserialize(bytes(rec.blobs[1]))
+                    if m.get("fwd")
+                    else None
+                )
+                self.arrays.setdefault(
+                    m["src"], ArrayDef(m["src"], tuple(m["src_shape"]))
+                )
+                self.arrays.setdefault(
+                    m["dst"], ArrayDef(m["dst"], tuple(m["dst_shape"]))
+                )
+                nxt = self._next_id
+                self._next_id = int(m["id"])
+                self._insert_entry(
+                    m["src"], m["dst"], bwd, fwd, m.get("op"), m.get("reused")
+                )
+                self._next_id = max(nxt, int(m["id"]) + 1)
+            elif t == "drop":
+                if int(m["id"]) in self.lineage:
+                    self.drop_lineage(int(m["id"]))
+            elif t == "dirty":
+                lid = int(m["id"])
+                e = self.lineage.get(lid)
+                if e is not None:
+                    e._bwd = CompressedTable.deserialize(bytes(rec.blobs[0]))
+                    if m.get("fwd") and len(rec.blobs) > 1:
+                        e._fwd = CompressedTable.deserialize(bytes(rec.blobs[1]))
+                    self._dirty.add(lid)
+                    self._meta_dirty = True
+            # unknown record types are skipped: forward compatibility
+        finally:
+            self._replaying = False
+
+    # ------------------------------------------------------------------ #
     # Array / lineage definition (paper §III.A)
     # ------------------------------------------------------------------ #
     def define_array(self, name: str, shape: tuple[int, ...]) -> ArrayDef:
         arr = ArrayDef(name, tuple(int(d) for d in shape))
         self.arrays[name] = arr
         self._meta_dirty = True
+        self._wal_append_root("array", {"name": name, "shape": list(arr.shape)})
         return arr
 
     # ------------------------------------------------------------------ #
@@ -316,6 +649,7 @@ class DSLog:
         if shape is not None:
             self.define_array(new, shape)
         self._meta_dirty = True
+        self._wal_append_root("version", {"base": base, "k": k})
         return new
 
     def latest_version(self, name: str) -> str:
@@ -371,6 +705,9 @@ class DSLog:
         self.by_pair.setdefault((src, dst), []).append(entry.lineage_id)
         self._dirty.add(entry.lineage_id)
         self._meta_dirty = True
+        if self._wal is not None and not self._replaying:
+            meta, blobs = self._entry_wal_record(entry)
+            self._wal_append_entry("entry", meta, blobs)
         return entry
 
     def _remove_entry(self, lineage_id: int) -> None:
@@ -403,6 +740,7 @@ class DSLog:
         for op in self.ops:
             if lineage_id in op.lineage_ids:
                 op.lineage_ids.remove(lineage_id)
+        self._wal_append_root("drop", {"id": lineage_id})
 
     # ------------------------------------------------------------------ #
     # Planner cost-model feedback (measured per-hop selectivities)
@@ -419,13 +757,23 @@ class DSLog:
         pairs: int,
         qrows: int,
     ) -> None:
-        """Accumulate the true pair count one executed hop produced."""
-        st = self.hop_stats.setdefault(
-            self._hop_key(lineage_id, stored, frontier_on), [0.0, 0.0]
-        )
-        st[0] += float(pairs)
-        st[1] += float(qrows)
-        self._meta_dirty = True
+        """Fold the true pair count one executed hop produced into the
+        measured selectivity — an exponential moving average (each new
+        measurement decays the accumulated mass by ``hop_decay``) with a
+        sample cap, so the feedback tracks workload shifts instead of
+        averaging over all history.  Thread-safe (parallel execution calls
+        this from worker threads)."""
+        with self._stats_lock:
+            st = self.hop_stats.setdefault(
+                self._hop_key(lineage_id, stored, frontier_on), [0.0, 0.0]
+            )
+            st[0] = st[0] * self.hop_decay + float(pairs)
+            st[1] = st[1] * self.hop_decay + float(qrows)
+            if st[1] > _HOP_SAMPLE_CAP:
+                scale = _HOP_SAMPLE_CAP / st[1]
+                st[0] *= scale
+                st[1] *= scale
+            self._meta_dirty = True
 
     def hop_measurement(
         self, lineage_id: int, stored: str, frontier_on: str
@@ -509,6 +857,7 @@ class DSLog:
                     raise
                 rec.reused = decision.source
                 self.ops.append(rec)
+                self._wal_append_root("op", self._op_wal_meta(rec))
                 return rec
 
         if capture is None:
@@ -529,8 +878,35 @@ class DSLog:
             raise
         if use_reuse:
             self.predictor.observe(dim_key, gen_key, shapes_token, captured_tables)
+            if self._wal is not None and not self._replaying:
+                labels = sorted(captured_tables)
+                self._wal_append_root(
+                    "obs",
+                    {
+                        "dim": dim_key,
+                        "gen": gen_key,
+                        "shapes": [list(s) for s in shapes_token],
+                        "labels": labels,
+                    },
+                    [
+                        captured_tables[label].serialize(compress=self.gzip)
+                        for label in labels
+                    ],
+                )
         self.ops.append(rec)
+        self._wal_append_root("op", self._op_wal_meta(rec))
         return rec
+
+    @staticmethod
+    def _op_wal_meta(rec: _OpRecord) -> dict:
+        return {
+            "op": rec.op_name,
+            "in": list(rec.in_arrs),
+            "out": list(rec.out_arrs),
+            "args": _json_safe(rec.op_args),
+            "lids": list(rec.lineage_ids),
+            "reused": rec.reused,
+        }
 
     def _rollback_op(self, rec: _OpRecord) -> None:
         """Registration is atomic: a mid-op CycleError (one pair of a
@@ -551,7 +927,9 @@ class DSLog:
     # ------------------------------------------------------------------ #
     # Multi-hop queries (§V) — both forms served by the planner
     # ------------------------------------------------------------------ #
-    def prov_query(self, *args, merge: bool = True) -> "QueryBox | dict":
+    def prov_query(
+        self, *args, merge: bool = True, parallel: int | None = None
+    ) -> "QueryBox | dict":
         """Lineage between cells of two arrays.
 
         Two call forms::
@@ -563,22 +941,28 @@ class DSLog:
         downstream of ``src``), merges converging branches at fan-in arrays,
         and picks the cheapest stored materialization per hop.  ``dst`` may
         be a sequence of array names — the result is then a dict
-        ``{name: QueryBox}``.
+        ``{name: QueryBox}``.  ``parallel=N`` executes independent plan
+        branches (and, on a sharded store, per-shard sub-plans) on an
+        N-thread pool.
         """
         form = self._parse_query_args(args)
         if form[0] == "path":
             _, path, cells, m_override = form
             if m_override is not None:
                 merge = m_override
-            return self.prov_query_batch(path, [cells], merge=merge)[0]
+            return self.prov_query_batch(
+                path, [cells], merge=merge, parallel=parallel
+            )[0]
         _, src, dst, cells = form
-        res = self.prov_query_batch(src, dst, [cells], merge=merge)
+        res = self.prov_query_batch(
+            src, dst, [cells], merge=merge, parallel=parallel
+        )
         if isinstance(res, dict):
             return {name: boxes[0] for name, boxes in res.items()}
         return res[0]
 
     def prov_query_batch(
-        self, *args, merge: bool = True
+        self, *args, merge: bool = True, parallel: int | None = None
     ) -> "list[QueryBox] | dict[str, list[QueryBox]]":
         """Answer many independent queries in one pass (both call forms).
 
@@ -596,7 +980,9 @@ class DSLog:
                 return []
             boxes = self._as_boxes(path[0], queries)
             plan = self.planner.plan_path(path, frontier=boxes)
-            return self.planner.execute(plan, boxes, merge=merge)[path[-1]]
+            return self.planner.execute(
+                plan, boxes, merge=merge, parallel=parallel
+            )[path[-1]]
         _, src, dst, queries = form
         multi = not isinstance(dst, str)
         targets = list(dst) if multi else [dst]
@@ -604,7 +990,7 @@ class DSLog:
             return {t: [] for t in targets} if multi else []
         boxes = self._as_boxes(src, queries)
         plan = self.planner.plan(src, targets, frontier=boxes)
-        out = self.planner.execute(plan, boxes, merge=merge)
+        out = self.planner.execute(plan, boxes, merge=merge, parallel=parallel)
         return out if multi else out[dst]
 
     def _as_boxes(
@@ -652,7 +1038,7 @@ class DSLog:
     # ------------------------------------------------------------------ #
     # Persistence (manifest v2: lazy handles, dirty tracking, reuse state)
     # ------------------------------------------------------------------ #
-    def save(self) -> None:
+    def save(self, checkpoint_wal: bool = True) -> None:
         """Write the catalog under ``root``, incrementally.
 
         Only entries added since the last ``save()``/``load()`` have their
@@ -660,6 +1046,13 @@ class DSLog:
         their files and manifest records verbatim — a lazily loaded entry is
         never even deserialized by a save.  The JSON manifest itself is
         always rewritten (it is small).
+
+        With a WAL attached this is a checkpoint: the manifest records the
+        log's end LSN and the log truncates afterwards.  ``checkpoint_wal=
+        False`` defers the truncation (the sharded facade saves every shard
+        manifest *and the root manifest* first, then truncates all logs —
+        a crash between the two must leave the shard logs replayable, or
+        the root manifest would silently lose the new topology).
         """
         if not self.root:
             raise ValueError("DSLog opened without a root directory")
@@ -681,7 +1074,14 @@ class DSLog:
             ],
             "versions": dict(self._versions),
             "hops": {k: list(v) for k, v in self.hop_stats.items()},
+            "hop_decay": self.hop_decay,
         }
+        if self._wal is not None:
+            # checkpoint: make every logged record durable, stamp the end
+            # LSN into the manifest, and truncate the log afterwards —
+            # a crash between the two replays nothing twice (LSN skip).
+            self.commit()
+            meta["wal_lsn"] = self._wal.end_lsn
         for e in self.lineage.values():
             rec = self._persisted.get(e.lineage_id)
             if rec is None or e.lineage_id in self._dirty:
@@ -695,11 +1095,17 @@ class DSLog:
         meta["predictor"] = self._predictor_chunk
 
         payload = json.dumps(meta)
-        with open(os.path.join(self.root, "catalog.json"), "w") as f:
-            f.write(payload)
+        _atomic_write(os.path.join(self.root, "catalog.json"), payload)
         self._bump("manifests_written")
         self._bump("bytes_written", len(payload))
         self._meta_dirty = False
+        # Truncate only as the leased owner: a save() on a merely
+        # load()-ed store (pre-WAL workflow) must not cut a log a live
+        # writer may be appending to — its records stay, and replay skips
+        # them via the wal_lsn just recorded.  (Facade shard saves defer
+        # truncation to the root, which holds the root lock.)
+        if self._wal is not None and checkpoint_wal and self._lease is not None:
+            self._wal_lsn = self._wal.checkpoint()
 
     def _write_entry(self, e: LineageEntry) -> dict:
         assert self.root is not None
@@ -806,9 +1212,23 @@ class DSLog:
         touch — ``io_stats["tables_loaded"]`` counts those resolutions.
         Manifests from v1 (pre-graph) load too; they simply have no ops or
         predictor state to restore.
+
+        **Crash recovery** happens here: when a write-ahead log is present
+        (the store was opened with :meth:`open`), its tail past the
+        manifest's checkpoint LSN is replayed — torn trailing records
+        truncated — so a store whose writer died mid-ingest reopens equal
+        to a synchronous-save oracle of every durably logged mutation.  A
+        crash *before the first checkpoint* leaves a WAL with no manifest
+        at all; that loads too, from an empty catalog plus replay.
         """
         log = DSLog(root=root)
-        with open(os.path.join(root, "catalog.json")) as f:
+        manifest = os.path.join(root, "catalog.json")
+        if not os.path.exists(manifest) and os.path.exists(
+            os.path.join(root, WAL_FILENAME)
+        ):
+            log._attach_wal()
+            return log
+        with open(manifest) as f:
             meta = json.load(f)
         if meta.get("sharded"):
             raise ValueError(
@@ -860,7 +1280,11 @@ class DSLog:
         log.hop_stats = {
             k: [float(x) for x in v] for k, v in meta.get("hops", {}).items()
         }
+        log.hop_decay = float(meta.get("hop_decay", log.hop_decay))
         log._meta_dirty = False
+        log._wal_lsn = int(meta.get("wal_lsn", 0))
+        if os.path.exists(os.path.join(root, WAL_FILENAME)):
+            log._attach_wal()
         return log
 
     # ------------------------------------------------------------------ #

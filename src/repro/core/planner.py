@@ -134,6 +134,8 @@ class QueryPlanner:
 
     def __init__(self, log: "DSLog"):
         self.log = log
+        # default thread-pool width for execute(); None/1 = serial
+        self.parallel: int | None = None
 
     # ------------------------------------------------------------------ #
     # planning
@@ -421,6 +423,7 @@ class QueryPlanner:
         queries: "Sequence[QueryBox] | dict[str, Sequence[QueryBox]]",
         merge: bool = True,
         collect: str = "targets",
+        parallel: int | None = None,
     ) -> dict[str, list[QueryBox]]:
         """Run ``plan`` for a batch of queries rooted at its start node(s).
 
@@ -432,6 +435,12 @@ class QueryPlanner:
         ``{array name: batch}`` when the plan has several start arrays (all
         batches the same length).  Returns ``{array name: [QueryBox per
         query]}`` for the targets (or every node with ``collect="all"``).
+
+        ``parallel=N`` (or setting ``planner.parallel``) runs *independent*
+        plan nodes — parallel branches of the DAG and, on a sharded store,
+        per-shard sub-plans with no pending exchange between them — on an
+        N-thread pool.  Each node still accumulates its incoming steps in
+        plan order, so results are identical to serial execution.
         """
         if isinstance(queries, dict):
             start_by_array = {plan.node_array[k]: k for k in plan.starts}
@@ -471,47 +480,130 @@ class QueryPlanner:
             raise ValueError("per-start query batches must have equal length")
         nB = lengths.pop() if lengths else 0
 
-        frontier: dict[str, list[QueryBox]] = {}
-        for key in plan.order:
-            shape = self.log.arrays[plan.node_array[key]].shape
-            nd = len(shape)
-            steps = plan.steps.get(key, [])
-            if key in init and not steps:
-                frontier[key] = init[key]
-                continue
-            acc_lo: list[list[np.ndarray]] = [[] for _ in range(nB)]
-            acc_hi: list[list[np.ndarray]] = [[] for _ in range(nB)]
-            for k, q in enumerate(init.get(key, [])):
-                acc_lo[k].append(q.lo)
-                acc_hi[k].append(q.hi)
-            for step in steps:
-                qs = self._incoming_frontier(plan, step, frontier[step.u])
-                for choice in step.choices:
-                    res_list = self._run_choice(choice, qs)
-                    self._record_step_output(plan, step, res_list)
-                    for k, res in enumerate(res_list):
-                        acc_lo[k].append(res.lo)
-                        acc_hi[k].append(res.hi)
-            boxes = []
-            for k in range(nB):
-                lo = (
-                    np.concatenate(acc_lo[k])
-                    if acc_lo[k]
-                    else np.zeros((0, nd), np.int64)
-                )
-                hi = (
-                    np.concatenate(acc_hi[k])
-                    if acc_hi[k]
-                    else np.zeros((0, nd), np.int64)
-                )
-                res = QueryBox(shape, lo, hi)
-                boxes.append(merge_boxes(res) if merge else res)
-            frontier[key] = boxes
+        workers = parallel if parallel is not None else self.parallel
+        if workers is not None and workers > 1 and len(plan.order) > 1:
+            frontier = self._execute_parallel(plan, init, nB, merge, workers)
+        else:
+            frontier = {}
+            for key in plan.order:
+                frontier[key] = self._compute_node(plan, key, init, frontier, nB, merge)
         if collect == "all":
             return {plan.node_array[k]: v for k, v in frontier.items()}
         return {
             name: frontier[key] for name, key in plan.target_keys.items()
         }
+
+    def _compute_node(
+        self,
+        plan: QueryPlan,
+        key: str,
+        init: dict[str, list[QueryBox]],
+        frontier: dict[str, list[QueryBox]],
+        nB: int,
+        merge: bool,
+    ) -> list[QueryBox]:
+        """One node's frontier: its init share plus every incoming step."""
+        shape = self.log.arrays[plan.node_array[key]].shape
+        nd = len(shape)
+        steps = plan.steps.get(key, [])
+        if key in init and not steps:
+            return init[key]
+        acc_lo: list[list[np.ndarray]] = [[] for _ in range(nB)]
+        acc_hi: list[list[np.ndarray]] = [[] for _ in range(nB)]
+        for k, q in enumerate(init.get(key, [])):
+            acc_lo[k].append(q.lo)
+            acc_hi[k].append(q.hi)
+        for step in steps:
+            qs = self._incoming_frontier(plan, step, frontier[step.u])
+            for choice in step.choices:
+                res_list = self._run_choice(choice, qs)
+                self._record_step_output(plan, step, res_list)
+                for k, res in enumerate(res_list):
+                    acc_lo[k].append(res.lo)
+                    acc_hi[k].append(res.hi)
+        boxes = []
+        for k in range(nB):
+            lo = (
+                np.concatenate(acc_lo[k])
+                if acc_lo[k]
+                else np.zeros((0, nd), np.int64)
+            )
+            hi = (
+                np.concatenate(acc_hi[k])
+                if acc_hi[k]
+                else np.zeros((0, nd), np.int64)
+            )
+            res = QueryBox(shape, lo, hi)
+            boxes.append(merge_boxes(res) if merge else res)
+        return boxes
+
+    def _execute_parallel(
+        self,
+        plan: QueryPlan,
+        init: dict[str, list[QueryBox]],
+        nB: int,
+        merge: bool,
+        workers: int,
+    ) -> dict[str, list[QueryBox]]:
+        """Dependency-driven execution on a thread pool.
+
+        A node is *ready* once every node feeding one of its steps has a
+        computed frontier, so non-dependent branches — and, through the
+        sharded planner's step ownership, exchange-free per-shard sub-plans
+        — run concurrently.  Within a node, incoming steps still execute in
+        plan order: per-node results are bit-identical to serial execution.
+        """
+        import concurrent.futures as cf
+        import threading
+
+        deps = {
+            key: {s.u for s in plan.steps.get(key, [])} for key in plan.order
+        }
+        frontier: dict[str, list[QueryBox]] = {}
+        done: set[str] = set()
+        scheduled: set[str] = set()
+        errors: list[BaseException] = []
+        cond = threading.Condition()
+        pool = cf.ThreadPoolExecutor(
+            max_workers=workers, thread_name_prefix="dslog-exec"
+        )
+
+        def schedule_ready_locked() -> None:
+            for key in plan.order:
+                if key not in scheduled and deps[key] <= done:
+                    scheduled.add(key)
+                    fut = pool.submit(
+                        self._compute_node, plan, key, init, frontier,
+                        nB, merge,
+                    )
+                    fut.add_done_callback(
+                        lambda f, key=key: on_done(key, f)
+                    )
+
+        def on_done(key: str, fut: "cf.Future") -> None:
+            # runs on the worker that finished the node: successors are
+            # submitted here, without a round trip through the main thread
+            with cond:
+                exc = fut.exception()
+                if exc is not None:
+                    errors.append(exc)
+                else:
+                    frontier[key] = fut.result()
+                    done.add(key)
+                    if not errors:
+                        schedule_ready_locked()
+                cond.notify_all()
+
+        try:
+            with cond:
+                schedule_ready_locked()
+                while len(done) < len(plan.order) and not errors:
+                    cond.wait()
+            if errors:
+                raise errors[0]
+        finally:
+            pool.shutdown(wait=True)
+        return frontier
 
     def _incoming_frontier(
         self, plan: QueryPlan, step: EdgeStep, qs: list[QueryBox]

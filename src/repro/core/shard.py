@@ -43,18 +43,32 @@ keeping the single-store surface:
 
 from __future__ import annotations
 
+import glob
 import json
 import os
+import threading
+import uuid
 import zlib
 from collections.abc import Mapping
 from dataclasses import dataclass, field
 
-from .catalog import ArrayDef, DSLog, _json_safe, _OpRecord, _vacuum_dir
+from .catalog import (
+    ArrayDef,
+    DSLog,
+    _apply_open_overrides,
+    _atomic_write,
+    _DEFAULT_HOP_DECAY,
+    _json_safe,
+    _OpRecord,
+    _vacuum_dir,
+)
+from .commit import CommitPipeline, LeaseHeldError, WriterLease
 from .graph import CycleError, LineageGraph
 from .planner import _MERGE_SHRINK, EdgeStep, QueryPlan, QueryPlanner
 from .query import QueryBox, merge_boxes
 from .reuse import ReusePredictor
 from .table import CompressedTable
+from .wal import WAL_FILENAME, WriteAheadLog
 
 __all__ = [
     "ShardPolicy",
@@ -401,7 +415,8 @@ class ShardedQueryPlanner(QueryPlanner):
             return qs
         shipped = [merge_boxes(q) for q in qs]  # prune before crossing
         n = sum(q.n_rows for q in shipped)
-        ex.shipped_boxes += n
+        with self.log._stats_lock:  # parallel sub-plans meter concurrently
+            ex.shipped_boxes += n
         self.log._bump("boxes_exchanged", n)
         return shipped
 
@@ -412,7 +427,8 @@ class ShardedQueryPlanner(QueryPlanner):
         if ex is None:
             return
         n = sum(r.n_rows for r in res_list)
-        ex.shipped_boxes += n
+        with self.log._stats_lock:
+            ex.shipped_boxes += n
         self.log._bump("boxes_exchanged", n)
 
 
@@ -459,6 +475,7 @@ class ShardedDSLog:
         compress_method: str = "auto",
         reuse_m: int = 1,
         gzip: bool = True,
+        hop_decay: float = _DEFAULT_HOP_DECAY,
     ):
         self.policy = policy if policy is not None else HashShardPolicy(n_shards)
         self.n_shards = self.policy.n_shards
@@ -467,6 +484,7 @@ class ShardedDSLog:
         self.compress_method = compress_method
         self.reuse_m = reuse_m
         self.gzip = gzip
+        self.hop_decay = float(hop_decay)
         self.arrays: dict[str, ArrayDef] = {}
         self.sgraph = ShardedLineageGraph(self.n_shards)
         self.by_pair: dict[tuple[str, str], list[int]] = {}
@@ -475,6 +493,9 @@ class ShardedDSLog:
         self.planner = ShardedQueryPlanner(self)
         self.lineage = _ShardedLineageView(self)
         self._next_id = 0
+        # per-shard id streams: lineage_id = shard + n_shards * counter, so
+        # concurrent writers leasing disjoint shards mint disjoint ids
+        self._shard_next: list[int] = [0] * self.n_shards
         self._versions: dict[str, int] = {}
         self._array_shard: dict[str, int] = {}
         self._lid_shard: dict[int, int] = {}
@@ -482,6 +503,23 @@ class ShardedDSLog:
         self._predictor_chunk: dict | None = None
         self._meta_dirty = False
         self._io: dict[str, int] = {"shards_loaded": 0, "boxes_exchanged": 0}
+        # durability subsystem (attached by open(); see DSLog for the
+        # single-store equivalent).  _exclusive=False is writer mode: this
+        # process appends to shard WALs under per-shard leases and never
+        # rewrites manifests — the next exclusive open folds the logs in.
+        self._wal: WriteAheadLog | None = None  # the root log
+        self._pipeline: CommitPipeline | None = None
+        self._root_lease: WriterLease | None = None
+        self._presence_lease: WriterLease | None = None  # writer-mode marker
+        self._shard_leases: dict[int, WriterLease] = {}
+        self._exclusive = True
+        self._wal_lsn = 0
+        self._replaying = False
+        self._closed = False
+        self._stats_lock = threading.RLock()
+        # guards lazy shard loading: parallel plan execution may race two
+        # worker threads onto the same cold shard
+        self._shard_load_lock = threading.Lock()
         if root:
             os.makedirs(root, exist_ok=True)
 
@@ -499,6 +537,11 @@ class ShardedDSLog:
     latest_version = DSLog.latest_version
     storage_bytes = DSLog.storage_bytes
     _write_predictor = DSLog._write_predictor
+    _wal_emit = DSLog._wal_emit
+    _wal_append_root = DSLog._wal_append_root
+    _op_wal_meta = staticmethod(DSLog._op_wal_meta)
+    __enter__ = DSLog.__enter__
+    __exit__ = DSLog.__exit__
 
     # ------------------------------------------------------------------ #
     @property
@@ -523,17 +566,33 @@ class ShardedDSLog:
         return os.path.join(self.root, f"shard_{shard:02d}")
 
     def shard(self, shard: int) -> DSLog:
-        """The shard's DSLog, loading its manifest lazily on first touch."""
+        """The shard's DSLog, loading its manifest lazily on first touch.
+
+        Loading also replays the shard's WAL tail (``DSLog.load`` handles
+        the truncation of torn records) and *absorbs* any replayed entries
+        into the facade's topology — the root manifest has not seen them
+        yet, only the log has.
+        """
         sh = self._shards[shard]
-        if sh is None:
+        if sh is not None:
+            return sh
+        with self._shard_load_lock:  # parallel execution races cold shards
+            sh = self._shards[shard]
+            if sh is not None:
+                return sh
             sub = self._shard_dir(shard)
-            if sub is not None and os.path.exists(
+            has_manifest = sub is not None and os.path.exists(
                 os.path.join(sub, "catalog.json")
-            ):
+            )
+            has_wal = sub is not None and os.path.exists(
+                os.path.join(sub, WAL_FILENAME)
+            )
+            if has_manifest or has_wal:
                 sh = DSLog.load(sub)
                 sh.store_forward = self.store_forward
                 sh.compress_method = self.compress_method
                 sh.gzip = self.gzip
+                sh.hop_decay = self.hop_decay
                 self._bump("shards_loaded")
             else:
                 sh = DSLog(
@@ -542,15 +601,72 @@ class ShardedDSLog:
                     compress_method=self.compress_method,
                     reuse_m=self.reuse_m,
                     gzip=self.gzip,
+                    hop_decay=self.hop_decay,
                 )
+            if self._pipeline is not None and sub is not None:
+                if sh._wal is None:
+                    sh._attach_wal(self._pipeline)
+                else:
+                    sh._pipeline = self._pipeline
+                    self._pipeline.attach(sh._wal)
+            self._absorb_shard_entries(shard, sh)
             self._shards[shard] = sh
         return sh
+
+    def _absorb_shard_entries(self, shard: int, sh: DSLog) -> None:
+        """Fold entries the shard knows but the facade does not (WAL-replayed
+        tail past the root manifest) into the global topology."""
+        fresh = [lid for lid in sh.lineage if lid not in self._lid_shard]
+        for lid in sorted(fresh):
+            e = sh.lineage[lid]
+            self._shard_next[shard] = max(
+                self._shard_next[shard], lid // self.n_shards + 1
+            )
+            self._next_id = max(self._next_id, lid + 1)
+            for name in (e.src, e.dst):
+                if name not in self.arrays and name in sh.arrays:
+                    self.arrays[name] = ArrayDef(name, sh.arrays[name].shape)
+            self._array_shard.setdefault(e.dst, shard)
+            src_shard = self.shard_of_array(e.src)
+            try:
+                self.sgraph.add_edge(e.src, e.dst, lid, src_shard, shard)
+            except CycleError:
+                # concurrent writers each passed their *local* cycle check
+                # but jointly closed a cross-shard cycle; recovery must not
+                # wedge the store — quarantine the later entry instead
+                sh._remove_entry(lid)
+                sh._persisted.pop(lid, None)
+                self._meta_dirty = True
+                continue
+            self.by_pair.setdefault((e.src, e.dst), []).append(lid)
+            self._lid_shard[lid] = shard
+            self._meta_dirty = True
+
+    def _ensure_shard_lease(self, shard: int) -> None:
+        """Writer mode: take the shard's writer lease before the first
+        mutation lands there (one concurrent writer per shard)."""
+        if self.root is None or shard in self._shard_leases:
+            return
+        if WriterLease.held(self.root):
+            raise LeaseHeldError(
+                f"store {self.root!r} is open exclusively; writer-mode "
+                "ingest must wait for the exclusive owner to close"
+            )
+        sub = self._shard_dir(shard)
+        assert sub is not None
+        self._shard_leases[shard] = WriterLease.acquire(
+            sub, what=f"shard {shard} of"
+        )
+        sh = self._shards[shard]
+        if sh is not None and sh._wal is not None:
+            sh._wal.repair()  # now the leased owner of this shard's log
 
     def loaded_shards(self) -> list[int]:
         return [k for k, sh in enumerate(self._shards) if sh is not None]
 
     def _bump(self, key: str, n: int = 1) -> None:
-        self._io[key] = self._io.get(key, 0) + n
+        with self._stats_lock:  # parallel execution bumps from workers
+            self._io[key] = self._io.get(key, 0) + n
 
     @property
     def io_stats(self) -> dict[str, int]:
@@ -586,6 +702,7 @@ class ShardedDSLog:
         self.arrays[name] = arr
         self.shard_of_array(name)
         self._meta_dirty = True
+        self._wal_append_root("array", {"name": name, "shape": list(arr.shape)})
         return arr
 
     def _insert_entry(
@@ -599,7 +716,12 @@ class ShardedDSLog:
     ):
         src_shard = self.shard_of_array(src)
         dst_shard = self.shard_of_array(dst)
-        lineage_id = self._next_id
+        if not self._exclusive:
+            self._ensure_shard_lease(dst_shard)
+        # per-shard id stream: with one (leased) writer per shard these
+        # never collide, even across concurrent writer processes
+        counter = self._shard_next[dst_shard]
+        lineage_id = dst_shard + self.n_shards * counter
         # global cycle check first; a rejected edge leaves everything intact
         self.sgraph.add_edge(src, dst, lineage_id, src_shard, dst_shard)
         sh = self.shard(dst_shard)
@@ -607,13 +729,14 @@ class ShardedDSLog:
             arr = self.arrays.get(name)
             if arr is not None:
                 sh.arrays.setdefault(name, ArrayDef(name, arr.shape))
-        sh._next_id = lineage_id  # shards mint from the global id space
+        sh._next_id = lineage_id  # shards mint from the facade's id space
         try:
             entry = sh._insert_entry(src, dst, bwd, fwd, op_name, reused_from)
         except CycleError:  # pragma: no cover - global check already passed
             self.sgraph.remove_edge(src, dst, lineage_id, src_shard, dst_shard)
             raise
-        self._next_id = sh._next_id
+        self._shard_next[dst_shard] = counter + 1
+        self._next_id = max(self._next_id, lineage_id + 1)
         self.by_pair.setdefault((src, dst), []).append(lineage_id)
         self._lid_shard[lineage_id] = dst_shard
         self._meta_dirty = True
@@ -649,6 +772,18 @@ class ShardedDSLog:
         for op in self.ops:
             if lineage_id in op.lineage_ids:
                 op.lineage_ids.remove(lineage_id)
+        self._wal_append_root("drop", {"id": lineage_id})
+
+    def mark_dirty(self, lineage_id: int) -> None:
+        """Declare an entry's tables mutated in place (see
+        :meth:`DSLog.mark_dirty`); the invalidation record lands in the
+        owning shard's WAL."""
+        if lineage_id not in self._lid_shard:
+            raise KeyError(f"no lineage entry {lineage_id}")
+        shard = self.owner_shard(lineage_id)
+        if not self._exclusive:
+            self._ensure_shard_lease(shard)
+        self.shard(shard).mark_dirty(lineage_id)
 
     # ------------------------------------------------------------------ #
     # Planner cost-model feedback routes to the owning shard
@@ -673,6 +808,192 @@ class ShardedDSLog:
         )
 
     # ------------------------------------------------------------------ #
+    # Durable concurrent ingest: leases, WALs, recovery (see DSLog.open)
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def open(
+        cls,
+        root: str,
+        n_shards: int = 1,
+        *,
+        exclusive: bool = True,
+        durability: str = "group",
+        flush_interval: float = 0.005,
+        max_batch: int = 256,
+        lease_ttl: float = 300.0,
+        policy: ShardPolicy | None = None,
+        **ctor_kw,
+    ) -> "ShardedDSLog":
+        """Open a sharded root durably, as one of two kinds of writer.
+
+        **Exclusive** (default): takes the root writer lock — refusing to
+        open while any live writer (root or shard) exists — recovers every
+        log tail, and may checkpoint (``save()``/``close()`` fold the WALs
+        into the manifests).  A store that does not exist yet is created
+        and its initial root manifest written immediately.
+
+        **Writer mode** (``exclusive=False``): for concurrent ingest.  The
+        process appends to the shared root log and to the WALs of shards it
+        acquires leases for (taken lazily, on the first write landing on a
+        shard) and *never rewrites a manifest* — two writer processes
+        ingesting into disjoint shards therefore never contend on shared
+        files at all beyond the flock-serialized root log.  Durability is
+        the group-committed WAL; the next exclusive open replays and
+        checkpoints everything.  Requires an initialized store.
+        """
+        presence_lease = None
+        if exclusive:
+            root_lease = WriterLease.acquire(root, ttl=lease_ttl)
+            try:
+                blockers = sorted(
+                    glob.glob(os.path.join(root, "shard_*"))
+                ) + sorted(glob.glob(os.path.join(root, "writers", "*")))
+                for sub in blockers:
+                    if not os.path.isdir(sub):
+                        continue
+                    if WriterLease.held(sub, lease_ttl):
+                        holder = WriterLease.holder(sub)
+                        raise LeaseHeldError(
+                            f"{sub!r} has a live writer "
+                            f"(pid {holder and holder.get('pid')}); "
+                            "exclusive open must wait for writers to close"
+                        )
+                    if os.path.dirname(sub).endswith("writers"):
+                        # crashed writer's presence slot: clean it up
+                        try:
+                            lock = os.path.join(sub, WriterLease.FILENAME)
+                            if os.path.exists(lock):
+                                os.remove(lock)
+                            os.rmdir(sub)
+                        except OSError:
+                            pass
+            except BaseException:
+                root_lease.release()
+                raise
+        else:
+            root_lease = None
+            if not os.path.exists(os.path.join(root, "catalog.json")):
+                raise FileNotFoundError(
+                    f"writer-mode open needs an initialized store at "
+                    f"{root!r}; create it with ShardedDSLog.open(root, "
+                    "n_shards, exclusive=True) first"
+                )
+            if WriterLease.held(root, lease_ttl):
+                raise LeaseHeldError(
+                    f"store {root!r} is open exclusively; writer-mode "
+                    "ingest must wait for the exclusive owner to close"
+                )
+            # register presence *before* touching any file, so a racing
+            # exclusive open sees this writer even while it is idle (its
+            # shard leases are only taken on the first write)
+            presence_lease = WriterLease.acquire(
+                os.path.join(root, "writers", uuid.uuid4().hex),
+                ttl=lease_ttl,
+                what="writer slot of",
+            )
+            if WriterLease.held(root, lease_ttl):  # exclusive won the race
+                presence_lease.release()
+                raise LeaseHeldError(
+                    f"store {root!r} is open exclusively; writer-mode "
+                    "ingest must wait for the exclusive owner to close"
+                )
+        try:
+            pipeline = CommitPipeline(durability, flush_interval, max_batch)
+            if os.path.exists(os.path.join(root, "catalog.json")):
+                log = cls.load(root, pipeline=pipeline)
+                _apply_open_overrides(log, ctor_kw)
+            else:
+                log = cls(n_shards=n_shards, root=root, policy=policy, **ctor_kw)
+                log._pipeline = pipeline
+            log._exclusive = exclusive
+            log._root_lease = root_lease
+            log._presence_lease = presence_lease
+            if log._wal is None:
+                log._wal = WriteAheadLog(
+                    os.path.join(root, WAL_FILENAME), shared=True
+                )
+            pipeline.attach(log._wal)
+            if exclusive:
+                # sole owner (root lock held, no live writers): torn tails
+                # may be physically cut from every log we recovered
+                log._wal.repair()
+                for sh in log._shards:
+                    if sh is not None and sh._wal is not None:
+                        sh._wal.repair()
+                if not os.path.exists(os.path.join(root, "catalog.json")):
+                    log.save()  # initial manifest: writer mode needs it
+            return log
+        except BaseException:
+            if root_lease is not None:
+                root_lease.release()
+            if presence_lease is not None:
+                presence_lease.release()
+            raise
+
+    def close(self, checkpoint: bool = True) -> None:
+        """Flush, checkpoint when allowed, release every lease (idempotent).
+
+        An exclusive owner checkpoints (manifests rewritten, logs
+        truncated) unless ``checkpoint=False``; a writer-mode process only
+        flushes its logs — its work becomes manifest state at the next
+        exclusive open.  A store that was merely ``load()``-ed (no root
+        lock held) never checkpoints on close: truncating logs without the
+        locks could destroy a live writer's records.
+        """
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            if self._pipeline is not None:
+                self._pipeline.commit()
+            if (
+                checkpoint
+                and self._exclusive
+                and self.root
+                and self._root_lease is not None
+            ):
+                self.save()
+        finally:
+            if self._pipeline is not None:
+                self._pipeline.close()
+            if self._wal is not None:
+                self._wal.close()
+                self._wal = None
+            for sh in self._shards:
+                if sh is not None and sh._wal is not None:
+                    sh._wal.close()
+                    sh._wal = None
+            for lease in self._shard_leases.values():
+                lease.release()
+            self._shard_leases.clear()
+            if self._presence_lease is not None:
+                slot = os.path.dirname(self._presence_lease.path)
+                self._presence_lease.release()
+                self._presence_lease = None
+                try:
+                    os.rmdir(slot)
+                except OSError:
+                    pass
+            if self._root_lease is not None:
+                self._root_lease.release()
+                self._root_lease = None
+
+    def commit(self) -> None:
+        """Durability barrier over the root log and every shard log."""
+        if self._pipeline is not None:
+            self._pipeline.commit()
+        else:
+            for wal in [self._wal] + [
+                sh._wal for sh in self._shards if sh is not None
+            ]:
+                if wal is not None:
+                    wal.flush(sync=True)
+
+    def checkpoint(self) -> None:
+        """Exclusive-mode checkpoint: incremental save + log truncation."""
+        self.save()
+
+    # ------------------------------------------------------------------ #
     # Persistence: root manifest + independently saved shard manifests
     # ------------------------------------------------------------------ #
     def save(self) -> None:
@@ -682,20 +1003,40 @@ class ShardedDSLog:
         that changed since the last save write anything — manifests
         included.  The root manifest (policy, array→shard map, topology,
         boundary table, ops, predictor) rewrites only when facade-level
-        state changed.
+        state changed.  When WALs are attached this is the **checkpoint**:
+        every saved log is truncated after its manifest records the
+        checkpoint LSN.  Writer-mode stores must not call this — their
+        manifests belong to the next exclusive owner.
         """
         if not self.root:
             raise ValueError("ShardedDSLog opened without a root directory")
+        if not self._exclusive:
+            raise RuntimeError(
+                "writer-mode store persists through its WALs; manifests are "
+                "rewritten by the next exclusive open/close"
+            )
+        # Phase 1: shard manifests, WAL truncation DEFERRED — a crash
+        # before the root manifest lands must leave the shard logs
+        # replayable, or the new cross-shard topology would be lost.
+        saved_shards: list[DSLog] = []
         for sh in self._shards:
-            if sh is not None and sh.dirty:
-                sh.save()
+            if sh is not None and (
+                sh.dirty or (sh._wal is not None and sh._wal.has_records)
+            ):
+                sh.save(checkpoint_wal=False)
+                saved_shards.append(sh)
         manifest = os.path.join(self.root, "catalog.json")
         if not (
             self._meta_dirty
             or self.predictor.dirty
             or self._predictor_chunk is None
+            or (self._wal is not None and self._wal.has_records)
             or not os.path.exists(manifest)
         ):
+            # no root rewrite needed (nothing topology-level changed, so
+            # the shard logs held no entries the root does not know)
+            if self._root_lease is not None:
+                self._checkpoint_shard_wals(saved_shards)
             return
         if self._predictor_chunk is None or self.predictor.dirty:
             self._predictor_chunk = self._write_predictor()
@@ -716,7 +1057,9 @@ class ShardedDSLog:
             "edges": edges,
             "boundary": [list(rec) for rec in self.sgraph.boundary_edges()],
             "next_id": self._next_id,
+            "shard_next": list(self._shard_next),
             "versions": dict(self._versions),
+            "hop_decay": self.hop_decay,
             "ops": [
                 {
                     "op": op.op_name,
@@ -730,16 +1073,36 @@ class ShardedDSLog:
             ],
             "predictor": self._predictor_chunk,
         }
+        if self._wal is not None:
+            self.commit()
+            meta["wal_lsn"] = self._wal.end_lsn
         payload = json.dumps(meta)
-        with open(manifest, "w") as f:
-            f.write(payload)
+        _atomic_write(manifest, payload)
         self._bump("manifests_written")
         self._bump("bytes_written", len(payload))
         self._meta_dirty = False
+        # Phase 2: every manifest is durable — now the logs may truncate,
+        # but only as the locked owner (a merely load()-ed store saving
+        # must not cut logs a live writer may be appending to; replay
+        # skips its records via the wal_lsn values just recorded)
+        if self._root_lease is not None:
+            self._checkpoint_shard_wals(saved_shards)
+            if self._wal is not None:
+                self._wal_lsn = self._wal.checkpoint()
 
     @staticmethod
-    def load(root: str, eager: bool = False) -> "ShardedDSLog":
-        """Reopen a sharded root without touching any shard manifest.
+    def _checkpoint_shard_wals(shards: list[DSLog]) -> None:
+        for sh in shards:
+            if sh._wal is not None:
+                sh._wal_lsn = sh._wal.checkpoint()
+
+    @staticmethod
+    def load(
+        root: str,
+        eager: bool = False,
+        pipeline: "CommitPipeline | None" = None,
+    ) -> "ShardedDSLog":
+        """Reopen a sharded root without touching any *clean* shard.
 
         The root manifest restores the policy, array→shard map, global
         topology (graph + boundary table), ops, version counters, and
@@ -747,6 +1110,13 @@ class ShardedDSLog:
         lazily the first time a plan or query touches that shard —
         ``io_stats["shards_loaded"]`` counts those resolutions.  Pass
         ``eager=True`` to open every shard up front.
+
+        **Crash recovery**: the root log's tail past the manifest's
+        checkpoint LSN is replayed (arrays, ops, versions, predictor
+        observations, drops), and every shard whose WAL holds records is
+        opened eagerly so its entry tail replays and folds back into the
+        global topology.  Recovery cost is proportional to the
+        un-checkpointed tails, not to the store.
         """
         with open(os.path.join(root, "catalog.json")) as f:
             meta = json.load(f)
@@ -756,6 +1126,7 @@ class ShardedDSLog:
             )
         policy = ShardPolicy.from_manifest(meta["policy"])
         log = ShardedDSLog(n_shards=policy.n_shards, root=root, policy=policy)
+        log._pipeline = pipeline
         for name, rec in meta["arrays"].items():
             log.arrays[name] = ArrayDef(name, tuple(rec["shape"]))
             log._array_shard[name] = int(rec["shard"])
@@ -765,7 +1136,14 @@ class ShardedDSLog:
             log.by_pair.setdefault((src, dst), []).append(lid)
             log._lid_shard[lid] = shard
         log._next_id = int(meta["next_id"])
+        if "shard_next" in meta:
+            log._shard_next = [int(x) for x in meta["shard_next"]]
+        else:  # pre-WAL manifest: ids were minted sequentially — start all
+            # per-shard streams past the global max so nothing can collide
+            base = (log._next_id + log.n_shards - 1) // log.n_shards
+            log._shard_next = [base] * log.n_shards
         log._versions = {k: int(v) for k, v in meta.get("versions", {}).items()}
+        log.hop_decay = float(meta.get("hop_decay", log.hop_decay))
         for op in meta.get("ops", []):
             log.ops.append(
                 _OpRecord(
@@ -787,10 +1165,59 @@ class ShardedDSLog:
             log.predictor = ReusePredictor.from_manifest(chunk, load_table)
             log._predictor_chunk = chunk
         log._meta_dirty = False
+        log._wal_lsn = int(meta.get("wal_lsn", 0))
+        log._recover_wals()
         if eager:
             for k in range(log.n_shards):
                 log.shard(k)
         return log
+
+    def _recover_wals(self) -> None:
+        """Replay the root-log tail, then every shard whose WAL holds
+        records (their entries fold into the topology via ``shard()``)."""
+        assert self.root is not None
+        drops: list[int] = []
+        if os.path.exists(os.path.join(self.root, WAL_FILENAME)):
+            self._wal = WriteAheadLog(
+                os.path.join(self.root, WAL_FILENAME), shared=True
+            )
+            if self._pipeline is not None:
+                self._pipeline.attach(self._wal)
+            replayed = self._wal.recover(self._wal_lsn)
+            for rec in replayed:
+                self._replay_root_record(rec, drops)
+            if replayed:
+                self._bump("wal_replayed", len(replayed))
+        for k in range(self.n_shards):
+            sub = self._shard_dir(k)
+            if sub is None:
+                continue
+            wal_path = os.path.join(sub, WAL_FILENAME)
+            if WriteAheadLog.file_has_records(wal_path):
+                self.shard(k)  # DSLog.load replays; shard() absorbs
+        for lid in drops:
+            if lid in self._lid_shard:
+                self._replaying = True
+                try:
+                    self.drop_lineage(lid)
+                finally:
+                    self._replaying = False
+
+    # store-level branches (array/version/op/obs) shared with DSLog replay
+    _replay_store_record = DSLog._replay_store_record
+
+    def _replay_root_record(self, rec, drops: list[int]) -> None:
+        """Apply one recovered root-log record (store-level state only;
+        entries live in, and replay from, the shard logs).  Drops are
+        deferred so they apply after the shard tails are absorbed."""
+        if rec.type == "drop":
+            drops.append(int(rec.meta["id"]))
+            return
+        self._replaying = True
+        try:
+            self._replay_store_record(rec)
+        finally:
+            self._replaying = False
 
     def compact(self) -> dict[str, int]:
         """Vacuum every shard independently, plus root-level sig blobs."""

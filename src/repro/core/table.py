@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import io
 import json
+import threading
 import zlib
 from dataclasses import dataclass, field, replace
 
@@ -358,7 +359,7 @@ class TableHandle:
     counts; reading :attr:`rows` then forces the load.
     """
 
-    __slots__ = ("_loader", "_table", "_on_load", "n_rows")
+    __slots__ = ("_loader", "_table", "_on_load", "_lock", "n_rows")
 
     def __init__(
         self,
@@ -369,6 +370,7 @@ class TableHandle:
         self._loader = loader
         self._table: CompressedTable | None = None
         self._on_load = on_load
+        self._lock = threading.Lock()
         self.n_rows = n_rows
 
     @property
@@ -384,8 +386,13 @@ class TableHandle:
 
     def get(self) -> CompressedTable:
         if self._table is None:
-            self._table = self._loader()
-            self.n_rows = self._table.n_rows
-            if self._on_load is not None:
-                self._on_load()
+            # parallel plan execution may race two threads onto one lazy
+            # blob; the lock keeps the load (and its counter) single-fire
+            with self._lock:
+                if self._table is None:
+                    table = self._loader()
+                    self.n_rows = table.n_rows
+                    if self._on_load is not None:
+                        self._on_load()
+                    self._table = table
         return self._table

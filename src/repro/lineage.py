@@ -21,9 +21,11 @@ The data pipeline (``repro.data.pipeline.TokenPipeline``) accepts a
 from repro.core import (  # noqa: F401
     AffinityShardPolicy,
     ArrayDef,
+    CommitPipeline,
     CompressedTable,
     CycleError,
     DSLog,
+    LeaseHeldError,
     ExchangeStep,
     HashShardPolicy,
     IntervalIndex,
@@ -53,10 +55,12 @@ from repro.core.oplib import OPS, OpSpec, get_op, op_names  # noqa: F401
 __all__ = [
     "AffinityShardPolicy",
     "ArrayDef",
+    "CommitPipeline",
     "CompressedTable",
     "CycleError",
     "DSLog",
     "ExchangeStep",
+    "LeaseHeldError",
     "HashShardPolicy",
     "IntervalIndex",
     "LineageEntry",

@@ -1,0 +1,450 @@
+"""Crash recovery and concurrent ingest: the durability contract.
+
+Two acceptance properties (ISSUE 4):
+
+* **Torn-write crash**: kill the writer at a *random byte offset* of a log
+  (simulated by truncating the file there).  Replay must recover exactly
+  the intact-record prefix, and every ``prov_query`` answer of the
+  recovered store must equal a synchronously-saved oracle built from the
+  surviving entries — for ``DSLog`` and ``ShardedDSLog`` with N ∈ {1, 4}.
+
+* **Concurrent writers**: two OS processes ingesting into disjoint shards
+  under writer-mode leases produce (after the next exclusive open) a store
+  equal to sequential ingest of the same streams.
+"""
+
+import glob
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core
+from repro.core.capture import (
+    flip_lineage,
+    identity_lineage,
+    roll_lineage,
+    transpose_lineage,
+)
+from repro.core.catalog import DSLog
+from repro.core.shard import AffinityShardPolicy, ShardedDSLog
+from repro.core.wal import WriteAheadLog
+
+SHAPE = (8, 8)
+_HEADER = 15  # WAL magic + base_lsn
+
+_OPS = [
+    lambda rng: identity_lineage(SHAPE),
+    lambda rng: flip_lineage(SHAPE, int(rng.integers(0, 2))),
+    lambda rng: roll_lineage(SHAPE, int(rng.integers(1, 4)), 0),
+    lambda rng: transpose_lineage(SHAPE, (1, 0)),
+]
+
+
+def _ingest_random_dag(log, n_ops: int, seed: int):
+    """Chain backbone + random fan-in edges; returns [(lid, src, dst, rel)]."""
+    rng = np.random.default_rng(seed)
+    names = ["a0"]
+    entries = []
+    for k in range(n_ops):
+        new = f"a{k + 1}"
+        rel = _OPS[int(rng.integers(0, len(_OPS)))](rng)
+        e = log.add_lineage(names[-1], new, rel)
+        entries.append((e.lineage_id, names[-1], new, rel))
+        if k % 3 == 2 and len(names) > 2:
+            other = names[int(rng.integers(0, len(names) - 1))]
+            rel2 = _OPS[int(rng.integers(0, len(_OPS)))](rng)
+            e2 = log.add_lineage(other, new, rel2)
+            entries.append((e2.lineage_id, other, new, rel2))
+        names.append(new)
+    return entries
+
+
+def _sync_saved_oracle(root, entries, survivors):
+    """The synchronous baseline: save() after every surviving entry."""
+    oracle = DSLog(root=root)
+    for lid, src, dst, rel in entries:
+        if lid in survivors:
+            oracle.add_lineage(src, dst, rel)
+            oracle.save()
+    if os.path.exists(os.path.join(root, "catalog.json")):
+        return DSLog.load(root)
+    return oracle
+
+
+def _answer(store, src, dst, cells):
+    """One prov_query answer, normalized: unroutable/unknown -> None."""
+    try:
+        return store.prov_query(src, dst, cells).cell_set()
+    except KeyError:
+        return None
+
+
+def _compare_all_queries(recovered, oracle, arrays):
+    cells = np.array([[1, 2], [6, 7]])
+    for src in arrays:
+        for dst in arrays:
+            if src == dst:
+                continue
+            got = _answer(recovered, src, dst, cells)
+            want = _answer(oracle, src, dst, cells)
+            assert got == want, (src, dst, got, want)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n_ops=st.integers(4, 8),
+    seed=st.integers(0, 10_000),
+    kind=st.sampled_from(["dslog", "shard1", "shard4"]),
+    data=st.data(),
+)
+def test_torn_write_crash_recovers_to_oracle(n_ops, seed, kind, data):
+    with tempfile.TemporaryDirectory() as d, \
+            tempfile.TemporaryDirectory() as od:
+        if kind == "dslog":
+            log = DSLog.open(os.path.join(d, "s"))
+        else:
+            n = 1 if kind == "shard1" else 4
+            log = ShardedDSLog.open(os.path.join(d, "s"), n)
+        entries = _ingest_random_dag(log, n_ops, seed)
+        # sometimes checkpoint a prefix: recovery must stitch manifested
+        # state and the replayed tail together
+        ckpt_at = data.draw(st.integers(0, 2), label="ckpt")
+        if ckpt_at == 1:
+            log.checkpoint()
+            extra = _ingest_random_dag(log, 3, seed + 1)
+            entries = entries + [
+                (lid, s, t, r) for lid, s, t, r in extra
+            ]
+        log.commit()
+        log.close(checkpoint=False)
+
+        # crash: truncate one record-bearing log at a random byte offset
+        wals = [
+            p
+            for p in glob.glob(
+                os.path.join(d, "s", "**", "wal.log"), recursive=True
+            )
+            if os.path.getsize(p) > _HEADER
+        ]
+        if wals:
+            victim = wals[data.draw(st.integers(0, len(wals) - 1), label="wal")]
+            size = os.path.getsize(victim)
+            cut = data.draw(st.integers(_HEADER, size - 1), label="cut")
+            with open(victim, "r+b") as f:
+                f.truncate(cut)
+
+        if kind == "dslog":
+            recovered = DSLog.load(os.path.join(d, "s"))
+            survivors = set(recovered.lineage)
+        else:
+            recovered = ShardedDSLog.load(os.path.join(d, "s"))
+            survivors = set(recovered._lid_shard)
+        assert survivors <= {lid for lid, *_ in entries}
+
+        oracle = _sync_saved_oracle(od, entries, survivors)
+        arrays = sorted(
+            set(recovered.arrays) | set(oracle.arrays),
+            key=lambda s: (len(s), s),
+        )
+        _compare_all_queries(recovered, oracle, arrays)
+
+
+def test_recovered_store_checkpoints_and_stays_equal():
+    """Recovery → checkpoint → reload is a fixed point: the store after
+    folding the WAL into manifests answers like the recovered one."""
+    with tempfile.TemporaryDirectory() as d:
+        root = os.path.join(d, "s")
+        log = ShardedDSLog.open(root, 4)
+        entries = _ingest_random_dag(log, 7, seed=3)
+        log.commit()
+        log.close(checkpoint=False)
+        first = ShardedDSLog.load(root)
+        arrays = sorted(first.arrays)
+        cells = np.array([[1, 2], [6, 7]])
+        want = {
+            (s, t): _answer(first, s, t, cells)
+            for s in arrays
+            for t in arrays
+            if s != t
+        }
+        with ShardedDSLog.open(root) as excl:  # replays, then checkpoints
+            pass
+        for k in range(4):  # every shard WAL folded away
+            wal = os.path.join(root, f"shard_{k:02d}", "wal.log")
+            assert not WriteAheadLog.file_has_records(wal)
+        re = ShardedDSLog.load(root)
+        assert re.io_stats.get("wal_replayed", 0) == 0
+        assert set(re._lid_shard) == {lid for lid, *_ in entries}
+        for (s, t), w in want.items():
+            assert _answer(re, s, t, cells) == w
+
+
+# --------------------------------------------------------------------------- #
+# Concurrent writer processes (disjoint shards) vs sequential ingest
+# --------------------------------------------------------------------------- #
+_WORKER = """
+import os, sys, time
+import numpy as np
+from repro.core.shard import ShardedDSLog
+from repro.core.capture import identity_lineage, roll_lineage
+
+root, writer, n = sys.argv[1], int(sys.argv[2]), int(sys.argv[3])
+go = os.path.join(root, "go")
+log = ShardedDSLog.open(root, exclusive=False)
+deadline = time.time() + 30
+while not os.path.exists(go):  # rendezvous: overlap the ingest windows
+    if time.time() > deadline:
+        raise SystemExit("rendezvous timed out")
+    time.sleep(0.001)
+prev = f"w{writer}c0"
+for k in range(1, n + 1):
+    rel = (identity_lineage((8, 8)) if k % 2 else roll_lineage((8, 8), 1 + k % 3, 0))
+    log.add_lineage(prev, f"w{writer}c{k}", rel, op_name=f"op{writer}_{k}")
+    prev = f"w{writer}c{k}"
+log.close()
+"""
+
+
+def _writer_env():
+    env = dict(os.environ)
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(repro.core.__file__), "..", "..")
+    )
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def _sequential_ingest(root, n_writers, n_entries):
+    pins = {
+        f"w{i}c{k}": i
+        for i in range(n_writers)
+        for k in range(n_entries + 1)
+    }
+    with ShardedDSLog.open(
+        root, n_writers, policy=AffinityShardPolicy(n_writers, pins)
+    ) as log:
+        for i in range(n_writers):
+            prev = f"w{i}c0"
+            for k in range(1, n_entries + 1):
+                rel = (
+                    identity_lineage((8, 8))
+                    if k % 2
+                    else roll_lineage((8, 8), 1 + k % 3, 0)
+                )
+                log.add_lineage(prev, f"w{i}c{k}", rel, op_name=f"op{i}_{k}")
+                prev = f"w{i}c{k}"
+    return ShardedDSLog.load(root)
+
+
+@pytest.mark.slow
+def test_two_writer_processes_equal_sequential_ingest():
+    n_writers, n_entries = 2, 25
+    with tempfile.TemporaryDirectory() as d:
+        conc_root = os.path.join(d, "conc")
+        seq_root = os.path.join(d, "seq")
+        pins = {
+            f"w{i}c{k}": i
+            for i in range(n_writers)
+            for k in range(n_entries + 1)
+        }
+        with ShardedDSLog.open(
+            conc_root, n_writers, policy=AffinityShardPolicy(n_writers, pins)
+        ):
+            pass  # initialize the store (policy pins each chain to a shard)
+
+        procs = [
+            subprocess.Popen(
+                [sys.executable, "-c", _WORKER, conc_root, str(i), str(n_entries)],
+                env=_writer_env(),
+                stdout=subprocess.PIPE,
+                stderr=subprocess.PIPE,
+            )
+            for i in range(n_writers)
+        ]
+        time.sleep(0.2)  # let both reach the rendezvous loop
+        with open(os.path.join(conc_root, "go"), "w") as f:
+            f.write("go")
+        for p in procs:
+            out, err = p.communicate(timeout=120)
+            assert p.returncode == 0, err.decode()
+
+        # the next exclusive open folds both writers' WALs into manifests
+        with ShardedDSLog.open(conc_root):
+            pass
+        conc = ShardedDSLog.load(conc_root)
+        seq = _sequential_ingest(seq_root, n_writers, n_entries)
+
+        # identical stores: same ids on the same shards, same topology,
+        # same ops, same query answers
+        assert conc._lid_shard == seq._lid_shard
+        assert set(conc.by_pair) == set(seq.by_pair)
+        assert sorted(
+            (op.op_name, op.in_arrs, op.out_arrs) for op in conc.ops
+        ) == sorted((op.op_name, op.in_arrs, op.out_arrs) for op in seq.ops)
+        cells = np.array([[3, 4]])
+        for i in range(n_writers):
+            got = conc.prov_query(f"w{i}c{n_entries}", f"w{i}c0", cells)
+            want = seq.prov_query(f"w{i}c{n_entries}", f"w{i}c0", cells)
+            assert got.cell_set() == want.cell_set()
+
+
+def test_crash_between_shard_and_root_manifest_keeps_topology(monkeypatch):
+    """Checkpoint ordering: shard WALs must stay replayable until the root
+    manifest is durably written, or a crash in between loses the new
+    cross-shard edges from the global topology."""
+    import repro.core.catalog as catalog_mod
+    import repro.core.shard as shard_mod
+
+    with tempfile.TemporaryDirectory() as d:
+        log = ShardedDSLog.open(d, 4)
+        entries = _ingest_random_dag(log, 6, seed=9)
+        real_write = catalog_mod._atomic_write
+
+        def crash_on_root(path, payload):
+            if os.path.dirname(path) == d:  # the root manifest itself
+                raise OSError("simulated crash before root manifest")
+            return real_write(path, payload)
+
+        monkeypatch.setattr(catalog_mod, "_atomic_write", crash_on_root)
+        monkeypatch.setattr(shard_mod, "_atomic_write", crash_on_root)
+        with pytest.raises(OSError):
+            log.save()  # shard manifests land, root write "crashes"
+        monkeypatch.setattr(catalog_mod, "_atomic_write", real_write)
+        monkeypatch.setattr(shard_mod, "_atomic_write", real_write)
+        log.close(checkpoint=False)
+
+        re = ShardedDSLog.load(d)
+        assert set(re._lid_shard) == {lid for lid, *_ in entries}
+        cells = np.array([[1, 2]])
+        last = max(int(s[1:]) for s in re.arrays if s.startswith("a"))
+        got = _answer(re, f"a{last}", "a0", cells)
+        oracle = DSLog()
+        for lid, s, t, rel in entries:
+            oracle.add_lineage(s, t, rel)
+        assert got == _answer(oracle, f"a{last}", "a0", cells)
+
+
+def test_idle_writer_blocks_exclusive_open():
+    """A writer-mode process that has not written yet (no shard lease)
+    must still be visible: its presence slot blocks an exclusive open,
+    whose checkpoint would otherwise truncate the shared root log under a
+    live appender."""
+    with tempfile.TemporaryDirectory() as d:
+        with ShardedDSLog.open(d, 2):
+            pass
+        from repro.core.commit import LeaseHeldError
+
+        w = ShardedDSLog.open(d, exclusive=False)
+        with pytest.raises(LeaseHeldError):
+            ShardedDSLog.open(d)
+        w.close()
+        with ShardedDSLog.open(d):  # presence released: works again
+            pass
+
+
+def test_readonly_load_never_truncates_a_live_log():
+    """DSLog.load holds no lease; a writer's in-flight (torn-looking)
+    bytes at the log tail must survive a concurrent load."""
+    with tempfile.TemporaryDirectory() as d:
+        log = DSLog.open(d)
+        log.add_lineage("A", "B", identity_lineage((5,)))
+        log.commit()
+        wal = os.path.join(d, "wal.log")
+        size = os.path.getsize(wal)
+        with open(wal, "r+b") as f:  # a partial record reaching the OS
+            f.seek(0, 2)
+            f.write(b"\x99\x03\x00\x00partial")
+        re = DSLog.load(d)
+        assert os.path.getsize(wal) == size + 11  # untouched
+        assert len(re.lineage) == 1
+        log.close(checkpoint=False)
+
+
+def test_cross_writer_cycle_is_quarantined_not_wedged():
+    """Two writers can each pass their local cycle check yet jointly close
+    a cross-shard cycle; recovery must quarantine the later entry, never
+    leave a store that cannot load."""
+    with tempfile.TemporaryDirectory() as d:
+        pol = AffinityShardPolicy(2, {"x": 0, "y": 1})
+        with ShardedDSLog.open(d, 2, policy=pol):
+            pass
+        wa = ShardedDSLog.open(d, exclusive=False)
+        wb = ShardedDSLog.open(d, exclusive=False)
+        wa.add_lineage("x", "y", identity_lineage((4,)))  # dst shard 1
+        wb.add_lineage("y", "x", identity_lineage((4,)))  # dst shard 0: cycle
+        wa.close()
+        wb.close()
+        with ShardedDSLog.open(d) as merged:  # must not raise
+            assert len(merged._lid_shard) == 1
+        re = ShardedDSLog.load(d)
+        assert len(re._lid_shard) == 1
+
+
+# --------------------------------------------------------------------------- #
+# Parallel plan execution
+# --------------------------------------------------------------------------- #
+def _fanin_dag(log, branches=6, side=16):
+    shape = (side, side)
+    log.define_array("src", shape)
+    mids = [f"m{b}" for b in range(branches)]
+    for m in mids:
+        log.define_array(m, shape)
+    log.define_array("mid", shape)
+    log.register_operation(
+        "fanout", ["src"], mids,
+        capture=lambda: {
+            (b, 0): roll_lineage(shape, b + 1, 0) for b in range(branches)
+        },
+        reuse=False,
+    )
+    log.register_operation(
+        "combine", mids, ["mid"],
+        capture=lambda: {
+            (0, b): identity_lineage(shape) for b in range(branches)
+        },
+        reuse=False,
+    )
+    log.define_array("out", shape)
+    log.register_operation(
+        "tail", ["mid"], ["out"],
+        capture=lambda: {(0, 0): flip_lineage(shape, 1)},
+        reuse=False,
+    )
+    return log
+
+
+@pytest.mark.parametrize("make", [lambda: DSLog(), lambda: ShardedDSLog(n_shards=4)])
+def test_parallel_execution_equals_serial(make):
+    log = _fanin_dag(make())
+    cells = np.array([[2, 3], [7, 9], [12, 1]])
+    queries = [cells, cells[:1]]
+    for src, dst in [("src", "out"), ("out", "src")]:
+        serial = log.prov_query_batch(src, dst, queries)
+        par = log.prov_query_batch(src, dst, queries, parallel=4)
+        assert [r.cell_set() for r in serial] == [r.cell_set() for r in par]
+        assert [r.lo.tobytes() for r in serial] == [r.lo.tobytes() for r in par]
+
+
+def test_planner_parallel_attribute_is_default():
+    log = _fanin_dag(ShardedDSLog(n_shards=2))
+    want = log.prov_query("src", "out", np.array([[5, 5]])).cell_set()
+    log.planner.parallel = 3
+    assert log.prov_query("src", "out", np.array([[5, 5]])).cell_set() == want
+
+
+def test_parallel_execution_on_lazy_reloaded_store():
+    """Worker threads racing onto the same lazy blob must load it once."""
+    with tempfile.TemporaryDirectory() as d:
+        _fanin_dag(ShardedDSLog(n_shards=4, root=d)).save()
+        re = ShardedDSLog.load(d)
+        res = re.prov_query("out", "src", np.array([[4, 4]]), parallel=4)
+        want = _fanin_dag(DSLog()).prov_query("out", "src", np.array([[4, 4]]))
+        assert res.cell_set() == want.cell_set()
+        total = sum(1 + e.has_forward for e in re.lineage.values())
+        assert re.io_stats["tables_loaded"] <= total

@@ -265,7 +265,8 @@ def test_incremental_save_writes_only_dirty_shards():
 
         mtime_s1 = os.path.getmtime(os.path.join(d, "shard_01", "catalog.json"))
         log.add_lineage("v", "w", identity_lineage((6, 3)), op_name="grow")
-        dirty_shard = log.owner_shard(2)  # the new entry's owning shard
+        new_lid = log.by_pair[("v", "w")][0]
+        dirty_shard = log.owner_shard(new_lid)  # the new entry's owning shard
         log.save()
         after = log.io_stats
         # exactly the dirty shard's manifest + the root manifest rewrote

@@ -1,0 +1,430 @@
+"""WAL record format, group commit, leases, and the DSLog durability surface.
+
+The crash-*equivalence* properties (torn tail at a random offset vs the
+synchronous-save oracle) live in ``test_crash_recovery.py``; this module
+covers the mechanisms those properties rest on.
+"""
+
+import os
+import tempfile
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.capture import identity_lineage, reduce_lineage
+from repro.core.catalog import DSLog
+from repro.core.commit import CommitPipeline, LeaseHeldError, WriterLease
+from repro.core.wal import WriteAheadLog
+
+
+# --------------------------------------------------------------------------- #
+# Record format and torn-tail truncation
+# --------------------------------------------------------------------------- #
+def test_wal_round_trip_records_and_blobs():
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "wal.log")
+        w = WriteAheadLog(p)
+        w.append("entry", {"id": 7, "src": "a"}, [b"backward-bytes", b"fwd"])
+        w.append("op", {"op": "neg", "args": None})
+        w.flush()
+        recs = WriteAheadLog(p).recover()
+        assert [r.type for r in recs] == ["entry", "op"]
+        assert recs[0].meta == {"id": 7, "src": "a"}
+        assert recs[0].blobs == [b"backward-bytes", b"fwd"]
+        assert recs[1].blobs == []
+        # LSNs are end offsets, strictly increasing
+        assert 0 < recs[0].lsn < recs[1].lsn == w.end_lsn
+
+
+def test_wal_truncates_torn_tail_at_any_cut():
+    """Cutting the file anywhere inside the last record must recover the
+    full prefix before it — whole-record atomicity of the log."""
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "wal.log")
+        w = WriteAheadLog(p)
+        w.append("a", {"k": 1}, [b"xx"])
+        mid = w.end_lsn
+        w.append("b", {"k": 2}, [b"yyyy"])
+        w.flush()
+        full = os.path.getsize(p)
+        header = full - (w.end_lsn - mid)  # file offset where record b starts
+        for cut in range(header, full):
+            with tempfile.TemporaryDirectory() as d2:
+                p2 = os.path.join(d2, "wal.log")
+                with open(p, "rb") as f:
+                    data = f.read()
+                with open(p2, "wb") as f:
+                    f.write(data[:cut])
+                recs = WriteAheadLog(p2).recover()
+                assert [r.type for r in recs] == ["a"], f"cut at {cut}"
+                assert recs[0].blobs == [b"xx"]
+                # the torn bytes are gone: appends continue cleanly
+                w2 = WriteAheadLog(p2)
+                w2.append("c", {})
+                w2.flush()
+                assert [r.type for r in WriteAheadLog(p2).recover()] == ["a", "c"]
+
+
+def test_wal_crc_corruption_drops_tail():
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "wal.log")
+        w = WriteAheadLog(p)
+        w.append("a", {})
+        w.append("b", {})
+        w.flush()
+        size = os.path.getsize(p)
+        with open(p, "r+b") as f:  # flip one byte inside the last record
+            f.seek(size - 1)
+            byte = f.read(1)
+            f.seek(size - 1)
+            f.write(bytes([byte[0] ^ 0xFF]))
+        recs = WriteAheadLog(p).recover()
+        assert [r.type for r in recs] == ["a"]
+
+
+def test_wal_checkpoint_keeps_lsns_monotonic():
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "wal.log")
+        w = WriteAheadLog(p)
+        w.append("a", {})
+        w.flush()
+        ck = w.checkpoint()
+        assert ck == w.base_lsn and not w.has_records
+        w.append("b", {})
+        w.flush()
+        assert w.end_lsn > ck
+        # replay past the checkpoint sees only the new record
+        recs = WriteAheadLog(p).recover(min_lsn=ck)
+        assert [r.type for r in recs] == ["b"]
+        # a pre-checkpoint min_lsn cannot resurrect truncated records
+        assert [r.type for r in WriteAheadLog(p).recover(min_lsn=0)] == ["b"]
+
+
+def test_wal_shared_append_overwrites_torn_tail():
+    """A crashed writer's torn tail must not strand later flock-appended
+    records behind it (repair() would discard them); shared flush rewinds
+    to the last intact boundary."""
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "wal.log")
+        a = WriteAheadLog(p, shared=True)
+        a.append("a", {})
+        a.flush()
+        with open(p, "r+b") as f:  # crashed writer's partial record
+            f.seek(0, 2)
+            f.write(b"\xff\xff\x00\x00torn-partial-bytes")
+        b = WriteAheadLog(p, shared=True)
+        b.append("b", {"k": 1})
+        b.flush()
+        w = WriteAheadLog(p)
+        w.repair()  # exclusive repair must not discard b's record
+        assert [r.type for r in w.recover()] == ["a", "b"]
+
+
+def test_wal_shared_mode_interleaves_whole_records():
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "wal.log")
+        a = WriteAheadLog(p, shared=True)
+        b = WriteAheadLog(p, shared=True)
+        for i in range(5):
+            a.append("a", {"i": i})
+            b.append("b", {"i": i})
+        a.flush()
+        b.flush()
+        recs = WriteAheadLog(p).recover()
+        assert sorted(r.type for r in recs) == ["a"] * 5 + ["b"] * 5
+        # per-writer order is preserved
+        for t in ("a", "b"):
+            assert [r.meta["i"] for r in recs if r.type == t] == list(range(5))
+
+
+# --------------------------------------------------------------------------- #
+# Group commit
+# --------------------------------------------------------------------------- #
+def test_group_commit_amortizes_fsyncs():
+    with tempfile.TemporaryDirectory() as d:
+        w = WriteAheadLog(os.path.join(d, "wal.log"))
+        pipe = CommitPipeline(mode="group", flush_interval=0.5, max_batch=8)
+        pipe.attach(w)
+        for _ in range(32):
+            w.append("e", {})
+            pipe.notify(w)
+        pipe.commit()
+        assert pipe.stats["synced_records"] == 32
+        # 32 records cost ~4 batch fsyncs, not 32
+        assert w.stats["syncs"] <= 8
+        pipe.close()
+        assert len(WriteAheadLog(w.path).recover()) == 32
+
+
+def test_sync_mode_fsyncs_every_record():
+    with tempfile.TemporaryDirectory() as d:
+        w = WriteAheadLog(os.path.join(d, "wal.log"))
+        pipe = CommitPipeline(mode="sync")
+        pipe.attach(w)
+        for _ in range(5):
+            w.append("e", {})
+            pipe.notify(w)
+        assert w.stats["syncs"] == 5
+        pipe.close()
+
+
+def test_group_commit_interval_flushes_in_background():
+    with tempfile.TemporaryDirectory() as d:
+        w = WriteAheadLog(os.path.join(d, "wal.log"))
+        pipe = CommitPipeline(mode="group", flush_interval=0.01, max_batch=10_000)
+        pipe.attach(w)
+        w.append("e", {})
+        pipe.notify(w)
+        deadline = __import__("time").time() + 2.0
+        while pipe.stats["synced_records"] < 1:
+            if __import__("time").time() > deadline:
+                raise AssertionError("interval flusher never fired")
+            __import__("time").sleep(0.005)
+        pipe.close()
+
+
+# --------------------------------------------------------------------------- #
+# Writer leases
+# --------------------------------------------------------------------------- #
+def test_lease_excludes_second_writer_and_releases():
+    with tempfile.TemporaryDirectory() as d:
+        lease = WriterLease.acquire(d)
+        assert WriterLease.held(d)
+        with pytest.raises(LeaseHeldError):
+            WriterLease.acquire(d)
+        lease.release()
+        lease.release()  # idempotent
+        assert not WriterLease.held(d)
+        WriterLease.acquire(d).release()
+
+
+def test_stale_lease_of_dead_pid_is_stolen():
+    with tempfile.TemporaryDirectory() as d:
+        import json
+        import socket
+
+        path = os.path.join(d, WriterLease.FILENAME)
+        with open(path, "w") as f:  # a crashed writer's leftover lease
+            json.dump(
+                {"pid": 2**22 + 12345, "host": socket.gethostname(), "token": "x"},
+                f,
+            )
+        assert not WriterLease.held(d)
+        lease = WriterLease.acquire(d)  # steals, no error
+        assert WriterLease.held(d)
+        lease.release()
+
+
+def test_release_does_not_remove_someone_elses_lease():
+    with tempfile.TemporaryDirectory() as d:
+        lease = WriterLease.acquire(d)
+        os.remove(lease.path)
+        other = WriterLease.acquire(d)
+        lease.release()  # token mismatch: must leave the new lease alone
+        assert WriterLease.held(d)
+        other.release()
+
+
+# --------------------------------------------------------------------------- #
+# DSLog durability surface
+# --------------------------------------------------------------------------- #
+def test_dslog_open_is_context_managed_and_single_writer():
+    with tempfile.TemporaryDirectory() as d:
+        with DSLog.open(d) as log:
+            log.add_lineage("A", "B", identity_lineage((6, 3)))
+            with pytest.raises(LeaseHeldError):
+                DSLog.open(d)
+        # exit checkpointed (manifest exists, WAL truncated) + released
+        assert os.path.exists(os.path.join(d, "catalog.json"))
+        assert not WriteAheadLog.file_has_records(os.path.join(d, "wal.log"))
+        assert not WriterLease.held(d)
+        with DSLog.open(d) as log2:  # reopen after release works
+            res = log2.prov_query("B", "A", np.array([[4, 1]]))
+            assert res.cell_set() == {(4, 1)}
+
+
+def test_dslog_load_replays_wal_without_manifest():
+    """A crash before the first checkpoint leaves only a WAL; load() must
+    reconstruct the catalog from it alone."""
+    with tempfile.TemporaryDirectory() as d:
+        log = DSLog.open(d)
+        log.add_lineage("A", "B", identity_lineage((6, 3)))
+        log.add_lineage("B", "C", reduce_lineage((6, 3), 1))
+        log.version("acc", shape=(4,))
+        log.commit()
+        log.close(checkpoint=False)
+        assert not os.path.exists(os.path.join(d, "catalog.json"))
+
+        re = DSLog.load(d)
+        assert re.io_stats["wal_replayed"] >= 3
+        assert re.prov_query("C", "A", np.array([[2]])).cell_set() == {
+            (2, 0), (2, 1), (2, 2)
+        }
+        assert re.latest_version("acc") == "acc@1"
+        # recovery composes with checkpointing: save, reload, no replay
+        re.save()
+        re2 = DSLog.load(d)
+        assert re2.io_stats.get("wal_replayed", 0) == 0
+        assert len(re2.lineage) == 2
+
+
+def test_checkpoint_skips_already_manifested_records():
+    """Crash between manifest write and WAL truncation: replay must skip
+    records at or below the manifest's checkpoint LSN."""
+    with tempfile.TemporaryDirectory() as d:
+        log = DSLog.open(d)
+        log.add_lineage("A", "B", identity_lineage((5,)))
+        # simulate the torn checkpoint: save writes the manifest, then we
+        # resurrect the WAL bytes as if truncation never happened
+        log.commit()
+        with open(os.path.join(d, "wal.log"), "rb") as f:
+            wal_bytes = f.read()
+        log.checkpoint()
+        log.close(checkpoint=False)
+        with open(os.path.join(d, "wal.log"), "wb") as f:
+            f.write(wal_bytes)
+        re = DSLog.load(d)
+        assert len(re.lineage) == 1  # not doubled
+        assert re.io_stats.get("wal_replayed", 0) == 0
+
+
+def test_mark_dirty_persists_inplace_mutation_across_crash():
+    with tempfile.TemporaryDirectory() as d:
+        log = DSLog.open(d, store_forward=False)
+        e = log.add_lineage("a", "b", identity_lineage((8,)))
+        log.checkpoint()
+        t = e.backward  # mutate the stored table in place: shift values +1
+        t.val_lo[:] = t.val_lo + 1
+        t.val_hi[:] = t.val_hi + 1
+        log.mark_dirty(e.lineage_id)
+        log.commit()
+        log.close(checkpoint=False)  # crash before the next checkpoint
+
+        re = DSLog.load(d)
+        assert re.prov_query("b", "a", np.array([[3]])).cell_set() == {(4,)}
+        re.save()  # ...and the next checkpoint persists it to the manifest
+        re2 = DSLog.load(d)
+        assert re2.prov_query("b", "a", np.array([[3]])).cell_set() == {(4,)}
+
+
+def test_mark_dirty_unknown_id_raises():
+    log = DSLog()
+    with pytest.raises(KeyError):
+        log.mark_dirty(99)
+
+
+def test_dropped_entry_stays_dropped_after_replay():
+    with tempfile.TemporaryDirectory() as d:
+        log = DSLog.open(d)
+        e = log.add_lineage("a", "b", identity_lineage((5,)))
+        log.add_lineage("b", "c", identity_lineage((5,)))
+        log.drop_lineage(e.lineage_id)
+        log.commit()
+        log.close(checkpoint=False)
+        re = DSLog.load(d)
+        assert set(re.lineage) == {1}
+        with pytest.raises(KeyError):
+            re.prov_query("b", "a", np.array([[1]]))
+
+
+def test_unleased_save_never_truncates_a_live_log():
+    """save() on a merely load()-ed store (the pre-WAL workflow) records
+    the checkpoint LSN but must NOT truncate the log — a live leased
+    writer may be appending to it."""
+    with tempfile.TemporaryDirectory() as d:
+        writer = DSLog.open(d)
+        writer.add_lineage("A", "B", identity_lineage((5,)))
+        writer.commit()
+        reader = DSLog.load(d)
+        reader.save()
+        assert WriteAheadLog.file_has_records(os.path.join(d, "wal.log"))
+        writer.add_lineage("B", "C", identity_lineage((5,)))
+        writer.commit()
+        writer.close(checkpoint=False)
+        re = DSLog.load(d)
+        assert len(re.lineage) == 2  # the writer's later record survived
+
+
+def test_legacy_store_gains_durability_on_first_open():
+    """Opening a pre-WAL store with DSLog.open must create the log — a
+    mutation after open survives a crash without any save()."""
+    with tempfile.TemporaryDirectory() as d:
+        legacy = DSLog(root=d)
+        legacy.add_lineage("A", "B", identity_lineage((5,)))
+        legacy.save()
+        log = DSLog.open(d)
+        log.add_lineage("B", "C", identity_lineage((5,)))
+        log.commit()
+        log.close(checkpoint=False)
+        re = DSLog.load(d)
+        assert len(re.lineage) == 2
+        assert re.prov_query("C", "A", np.array([[2]])).cell_set() == {(2,)}
+
+
+def test_legacy_store_without_wal_is_untouched():
+    """Plain DSLog(root)/save()/load() must not create any WAL artifacts."""
+    with tempfile.TemporaryDirectory() as d:
+        log = DSLog(root=d)
+        log.add_lineage("A", "B", identity_lineage((5,)))
+        log.save()
+        assert not os.path.exists(os.path.join(d, "wal.log"))
+        assert not os.path.exists(os.path.join(d, WriterLease.FILENAME))
+        re = DSLog.load(d)
+        assert re._wal is None
+        assert re.prov_query("B", "A", np.array([[2]])).cell_set() == {(2,)}
+
+
+# --------------------------------------------------------------------------- #
+# Cost-feedback aging (hop_stats decay)
+# --------------------------------------------------------------------------- #
+def test_hop_stats_decay_tracks_workload_shift():
+    log = DSLog(hop_decay=0.5)
+    # old regime: 100 pairs per query row, observed many times
+    for _ in range(50):
+        log.record_hop(0, "backward", "key", pairs=1000, qrows=10)
+    assert log.hop_measurement(0, "backward", "key") == pytest.approx(100.0)
+    # workload shifts: 2 pairs per row.  With decay the EMA converges fast;
+    # an un-aged accumulator would still read ~51 after 50 observations.
+    for _ in range(50):
+        log.record_hop(0, "backward", "key", pairs=20, qrows=10)
+    m = log.hop_measurement(0, "backward", "key")
+    assert m == pytest.approx(2.0, rel=0.01)
+
+
+def test_hop_sample_cap_bounds_history():
+    from repro.core.catalog import _HOP_SAMPLE_CAP
+
+    log = DSLog(hop_decay=1.0)  # no decay: only the cap bounds the mass
+    for _ in range(10):
+        log.record_hop(0, "backward", "key", pairs=1, qrows=int(_HOP_SAMPLE_CAP))
+    st = log.hop_stats[log._hop_key(0, "backward", "key")]
+    assert st[1] <= _HOP_SAMPLE_CAP * (1 + 1e-9)
+
+
+def test_hop_decay_round_trips_in_manifest():
+    with tempfile.TemporaryDirectory() as d:
+        log = DSLog(root=d, hop_decay=0.25, store_forward=False)
+        log.add_lineage("a", "b", identity_lineage((8, 8)))
+        log.prov_query("b", "a", np.array([[3, 3]]))
+        m = log.hop_measurement(0, "backward", "key")
+        log.save()
+        re = DSLog.load(d)
+        assert re.hop_decay == 0.25
+        assert re.hop_measurement(0, "backward", "key") == pytest.approx(m)
+
+
+def test_record_hop_is_thread_safe():
+    log = DSLog(hop_decay=1.0)
+
+    def work():
+        for _ in range(200):
+            log.record_hop(0, "backward", "key", pairs=1, qrows=1)
+
+    threads = [threading.Thread(target=work) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    st = log.hop_stats[log._hop_key(0, "backward", "key")]
+    assert st[0] == st[1] == pytest.approx(800.0)
