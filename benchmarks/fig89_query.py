@@ -47,6 +47,7 @@ __all__ = [
     "run_dag_ablation",
     "run_shard_ablation",
     "run_wal_ablation",
+    "run_accel_ablation",
 ]
 
 
@@ -801,3 +802,131 @@ def run_index_ablation(
                 flush=True,
             )
     return rows
+
+
+# --------------------------------------------------------------------------- #
+# Batched accelerator execution: per-hop join loop vs packed frontiers
+# --------------------------------------------------------------------------- #
+def _permutation_lineage(shape, rng) -> LineageRelation:
+    """A random bijection between two same-shape arrays.
+
+    Poorly compressible on purpose (≈ one table row per cell): each hop of
+    the accel DAG is then a *small dense* θ-join — under
+    ``INDEX_MIN_ROWS`` the router always evaluates the all-pairs mask, the
+    exact per-hop inner loop batched frontier execution packs.
+    """
+    n = int(np.prod(shape))
+    cells = np.stack(
+        np.unravel_index(np.arange(n), shape), axis=1
+    ).astype(np.int64)
+    perm = rng.permutation(n)
+    return LineageRelation(shape, shape, cells, cells[perm]).canonical()
+
+
+def _build_accel_dag(shape, branches: int, hops: int, seed: int = 0):
+    """``src`` fans out to ``branches`` independent permutation chains of
+    ``hops`` tables each, all fanning back into ``out``:
+
+        src → b{b}h0 → … → b{b}h{H-1} → out      (for each branch b)
+
+    Every hop's table is a fresh random bijection, so each plan wave holds
+    ``branches`` small dense joins — the workload the batched executor
+    packs into one blocked evaluation and the per-hop loop dispatches one
+    at a time.
+    """
+    rng = np.random.default_rng(seed)
+    log = DSLog(store_forward=True)
+    log.define_array("src", shape)
+    log.define_array("out", shape)
+    for b in range(branches):
+        prev = "src"
+        for h in range(hops):
+            name = f"b{b}h{h}"
+            log.define_array(name, shape)
+            log.add_lineage(prev, name, _permutation_lineage(shape, rng))
+            prev = name
+        log.add_lineage(prev, "out", _permutation_lineage(shape, rng))
+    return log
+
+
+def run_accel_ablation(
+    shape=(32, 31),
+    branches: int = 20,
+    hops: int = 2,
+    n_cells: int = 330,
+    repeats: int = 9,
+    smoke: bool = False,
+    verbose: bool = True,
+) -> list[dict]:
+    """Batched frontier execution vs the per-hop join loop (ISSUE 5).
+
+    The DAG's hops are small dense joins (permutation tables under the
+    index threshold) — the regime where dispatching one tiny mask
+    evaluation per hop loses to packing a whole plan frontier into one
+    blocked int32 evaluation.  Measures, over the same query batch
+    (median of ``repeats`` runs — this box's timing noise is large):
+
+    * ``perhop_s``   — serial per-hop loop (``batched=False``),
+    * ``batched_s``  — serial packed frontier execution,
+    * ``parallel_s`` — packed execution with ``parallel=4`` (the wave's
+      mask evaluations split across workers, clamped to real cores; the
+      twin's numpy inner loops release the GIL, so they overlap on CPU),
+
+    asserts all three produce bit-identical results, and reports the
+    io_stats batching meters.
+    """
+    if smoke:
+        shape, branches, hops, n_cells, repeats = (24, 22), 10, 2, 192, 5
+    log = _build_accel_dag(shape, branches, hops)
+    rng = np.random.default_rng(7)
+    n = int(np.prod(shape))
+    flat = rng.choice(n, size=n_cells, replace=False)
+    cells = np.stack(np.unravel_index(flat, shape), axis=1)
+
+    def run(label, **kw):
+        res = log.prov_query("src", "out", cells, **kw)
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            res = log.prov_query("src", "out", cells, **kw)
+            ts.append(time.perf_counter() - t0)
+        return sorted(ts)[len(ts) // 2], res
+
+    perhop_s, want = run("perhop", batched=False)
+    base = dict(log.io_stats)
+    batched_s, got_b = run("batched", batched=True)
+    # run() issues one warmup query before the `repeats` timed ones, and
+    # every call dispatches the same launches
+    queries_run = repeats + 1
+    launches = log.io_stats["kernel_launches"] - base["kernel_launches"]
+    packed = log.io_stats["joins_packed"] - base["joins_packed"]
+    parallel_s, got_p = run("parallel", batched=True, parallel=4)
+    for got in (got_b, got_p):
+        assert got.lo.tobytes() == want.lo.tobytes(), "engine results differ"
+        assert got.hi.tobytes() == want.hi.tobytes(), "engine results differ"
+
+    total_hops = branches * (hops + 1)
+    rec = {
+        "shape": shape,
+        "branches": branches,
+        "hops": total_hops,
+        "n_cells": n_cells,
+        "perhop_s": perhop_s,
+        "batched_s": batched_s,
+        "parallel_s": parallel_s,
+        "batched_speedup": perhop_s / batched_s,
+        "parallel_speedup": batched_s / parallel_s,
+        "launches_per_query": launches / queries_run,
+        "joins_per_launch": packed / max(launches, 1),
+    }
+    if verbose:
+        print(
+            f"  accel_ablation {branches}x{hops + 1} hops "
+            f"perhop={perhop_s * 1e3:7.1f}ms batched={batched_s * 1e3:7.1f}ms "
+            f"parallel4={parallel_s * 1e3:7.1f}ms "
+            f"batched={rec['batched_speedup']:4.2f}x "
+            f"par={rec['parallel_speedup']:4.2f}x "
+            f"joins/launch={rec['joins_per_launch']:4.1f}",
+            flush=True,
+        )
+    return [rec]

@@ -128,6 +128,34 @@ def bench_wal(quick: bool) -> None:
                   f"speedup_x={r['speedup']:.2f}")
 
 
+def bench_accel(quick: bool) -> None:
+    from .fig89_query import run_accel_ablation
+
+    print("# Accelerator batched execution — per-hop join loop vs packed "
+          "frontiers, serial vs parallel=4", flush=True)
+    rows = run_accel_ablation(smoke=_SMOKE)
+    for r in rows:
+        tag = f"accel/b{r['branches']}/h{r['hops']}/q{r['n_cells']}"
+        _emit(f"{tag}/perhop", r["perhop_s"] * 1e6, "")
+        _emit(
+            f"{tag}/batched", r["batched_s"] * 1e6,
+            f"speedup_x={r['batched_speedup']:.2f};"
+            f"joins_per_launch={r['joins_per_launch']:.1f}",
+        )
+        _emit(
+            f"{tag}/parallel4", r["parallel_s"] * 1e6,
+            f"scaling_x={r['parallel_speedup']:.2f}",
+        )
+        if _SMOKE:
+            # CI gate: packed frontier execution must not lose to the
+            # per-hop loop (results are asserted bit-identical inside the
+            # ablation itself)
+            assert r["batched_speedup"] >= 1.0, (
+                f"batched execution slower than the per-hop loop: "
+                f"{r['batched_speedup']:.2f}x"
+            )
+
+
 def bench_dag(quick: bool) -> None:
     from .fig89_query import run_dag_ablation
 
@@ -202,6 +230,7 @@ BENCHES = {
     "dag": bench_dag,
     "shard": bench_shard,
     "wal": bench_wal,
+    "accel": bench_accel,
     "table9": bench_table9,
     "roofline": bench_roofline,
     "kernels": bench_kernels,

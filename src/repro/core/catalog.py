@@ -307,6 +307,13 @@ class DSLog:
             "manifests_written": 0,
             "sig_tables_written": 0,
             "bytes_written": 0,
+            # batched plan-step execution: packed dense dispatches (device
+            # kernel launches, or their CPU-twin equivalents), how many
+            # joins rode each, and pack occupancy (rows used vs padded)
+            "kernel_launches": 0,
+            "joins_packed": 0,
+            "batch_rows": 0,
+            "batch_rows_padded": 0,
         }
         # durability subsystem (attached by open()/load(); None = legacy
         # explicit-save store with no write-ahead log)
@@ -928,7 +935,11 @@ class DSLog:
     # Multi-hop queries (§V) — both forms served by the planner
     # ------------------------------------------------------------------ #
     def prov_query(
-        self, *args, merge: bool = True, parallel: int | None = None
+        self,
+        *args,
+        merge: bool = True,
+        parallel: int | None = None,
+        batched: bool | None = None,
     ) -> "QueryBox | dict":
         """Lineage between cells of two arrays.
 
@@ -943,7 +954,10 @@ class DSLog:
         be a sequence of array names — the result is then a dict
         ``{name: QueryBox}``.  ``parallel=N`` executes independent plan
         branches (and, on a sharded store, per-shard sub-plans) on an
-        N-thread pool.
+        N-thread pool.  ``batched`` picks the join engine (default
+        ``planner.batched``): packed frontier execution through the
+        :class:`~repro.core.query.BatchedJoinExecutor` vs the per-hop join
+        loop — results are bit-identical either way.
         """
         form = self._parse_query_args(args)
         if form[0] == "path":
@@ -951,18 +965,22 @@ class DSLog:
             if m_override is not None:
                 merge = m_override
             return self.prov_query_batch(
-                path, [cells], merge=merge, parallel=parallel
+                path, [cells], merge=merge, parallel=parallel, batched=batched
             )[0]
         _, src, dst, cells = form
         res = self.prov_query_batch(
-            src, dst, [cells], merge=merge, parallel=parallel
+            src, dst, [cells], merge=merge, parallel=parallel, batched=batched
         )
         if isinstance(res, dict):
             return {name: boxes[0] for name, boxes in res.items()}
         return res[0]
 
     def prov_query_batch(
-        self, *args, merge: bool = True, parallel: int | None = None
+        self,
+        *args,
+        merge: bool = True,
+        parallel: int | None = None,
+        batched: bool | None = None,
     ) -> "list[QueryBox] | dict[str, list[QueryBox]]":
         """Answer many independent queries in one pass (both call forms).
 
@@ -979,9 +997,9 @@ class DSLog:
             if not queries:
                 return []
             boxes = self._as_boxes(path[0], queries)
-            plan = self.planner.plan_path(path, frontier=boxes)
+            plan = self.planner.plan_path(path, frontier=boxes, batched=batched)
             return self.planner.execute(
-                plan, boxes, merge=merge, parallel=parallel
+                plan, boxes, merge=merge, parallel=parallel, batched=batched
             )[path[-1]]
         _, src, dst, queries = form
         multi = not isinstance(dst, str)
@@ -989,8 +1007,10 @@ class DSLog:
         if not queries:
             return {t: [] for t in targets} if multi else []
         boxes = self._as_boxes(src, queries)
-        plan = self.planner.plan(src, targets, frontier=boxes)
-        out = self.planner.execute(plan, boxes, merge=merge, parallel=parallel)
+        plan = self.planner.plan(src, targets, frontier=boxes, batched=batched)
+        out = self.planner.execute(
+            plan, boxes, merge=merge, parallel=parallel, batched=batched
+        )
         return out if multi else out[dst]
 
     def _as_boxes(

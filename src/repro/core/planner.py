@@ -45,7 +45,10 @@ import numpy as np
 from .query import (
     DENSE_FRACTION,
     INDEX_MIN_ROWS,
+    BatchedJoinExecutor,
+    JoinRequest,
     QueryBox,
+    dense_backend,
     merge_boxes,
     theta_join_batch,
     theta_join_inverse_batch,
@@ -61,6 +64,11 @@ _INVERSE_OVERHEAD = 2.0  # inverse join does strictly more per-pair work
 _INDEX_BUILD_WEIGHT = 0.25  # amortized first-build cost of an uncached index
 _POINT_ROW_COVER = 4.0  # unloaded-table fallback: rows a point probe hits
 _MERGE_SHRINK = 0.5  # expected box-count shrink from merge_boxes
+# measured per-pair advantage of the packed batched-dense engine over the
+# per-hop blocked loop (contiguous int32 columns + one dispatch per
+# frontier); makes "batched" competitive where "dense" would lose to the
+# index by less than ~2x
+_BATCHED_PAIR_DISCOUNT = 0.5
 
 
 @dataclass
@@ -70,9 +78,15 @@ class HopChoice:
     lineage_id: int
     stored: str  # "backward" | "forward": which materialization to read
     frontier_on: str  # "key" (natural join) | "value" (inverse join)
-    route: str  # "index" | "dense"
+    route: str  # "index" | "dense" | "batched" (packed frontier execution)
     est_pairs: float
     est_cost: float
+    # dense-route backend annotation ("tpu", "np:cpu", "np:wide", "np:i64")
+    # — why a dense hop will or won't ride the kernel; shown by describe()
+    note: str = ""
+
+    def describe_route(self) -> str:
+        return f"{self.route}({self.note})" if self.note else self.route
 
 
 @dataclass
@@ -119,7 +133,8 @@ class QueryPlan:
             for step in self.steps.get(key, []):
                 opts = ", ".join(
                     f"#{c.lineage_id}:{c.stored}/"
-                    f"{'nat' if c.frontier_on == 'key' else 'inv'}/{c.route}"
+                    f"{'nat' if c.frontier_on == 'key' else 'inv'}/"
+                    f"{c.describe_route()}"
                     for c in step.choices
                 )
                 lines.append(
@@ -136,6 +151,17 @@ class QueryPlanner:
         self.log = log
         # default thread-pool width for execute(); None/1 = serial
         self.parallel: int | None = None
+        # pack each frontier's dense joins into one blocked evaluation
+        # (the BatchedJoinExecutor); False = the per-hop join loop
+        self.batched: bool = True
+        self._executor: BatchedJoinExecutor | None = None
+
+    @property
+    def executor(self) -> BatchedJoinExecutor:
+        """The (lazily created) batched join engine, metering io_stats."""
+        if self._executor is None:
+            self._executor = BatchedJoinExecutor(stats=self.log._bump)
+        return self._executor
 
     # ------------------------------------------------------------------ #
     # planning
@@ -145,6 +171,7 @@ class QueryPlanner:
         sources: str | Iterable[str],
         targets: str | Iterable[str],
         frontier: Sequence[QueryBox] | None = None,
+        batched: bool | None = None,
     ) -> QueryPlan:
         """Plan between endpoint sets; query cells live on ``sources``.
 
@@ -152,7 +179,11 @@ class QueryPlanner:
         targets are downstream of the sources, *backward* when upstream.
         ``frontier`` (the actual initial boxes, when already known) sharpens
         the first hop's cost estimates; the plan is valid without it.
+        ``batched`` (default ``planner.batched``) selects the engine the
+        cost model targets, so routes always match the engine that will
+        execute them.
         """
+        batched = self.batched if batched is None else batched
         g = self.log.graph
         src_set = {sources} if isinstance(sources, str) else set(sources)
         dst_set = {targets} if isinstance(targets, str) else set(targets)
@@ -213,6 +244,7 @@ class QueryPlanner:
                     traverse="forward" if direction == "forward" else "backward",
                     nq=max(est_boxes.get(u, 1.0), 1.0),
                     frontier=frontier if u in plan.starts else None,
+                    batched=batched,
                 )
                 plan.steps.setdefault(key, []).append(step)
                 plan.est_cost += sum(c.est_cost for c in step.choices)
@@ -225,6 +257,7 @@ class QueryPlanner:
         self,
         path: Sequence[str],
         frontier: Sequence[QueryBox] | None = None,
+        batched: bool | None = None,
     ) -> QueryPlan:
         """Plan the paper's explicit-path query form on the same executor.
 
@@ -232,6 +265,7 @@ class QueryPlanner:
         contributes, whichever dataflow direction it was registered in.
         Node keys carry the position so a path may legally revisit an array.
         """
+        batched = self.batched if batched is None else batched
         if len(path) < 2:
             raise ValueError("path needs at least two arrays")
         keys = [f"{k}:{name}" for k, name in enumerate(path)]
@@ -255,11 +289,11 @@ class QueryPlanner:
             hop_frontier = frontier if k == 0 else None
             for lid in ids_down:
                 choices.append(
-                    self._best_choice(lid, "backward", nq, hop_frontier)
+                    self._best_choice(lid, "backward", nq, hop_frontier, batched)
                 )
             for lid in ids_up:
                 choices.append(
-                    self._best_choice(lid, "forward", nq, hop_frontier)
+                    self._best_choice(lid, "forward", nq, hop_frontier, batched)
                 )
             step = EdgeStep(keys[k], keys[k + 1], choices)
             plan.steps[keys[k + 1]] = [step]
@@ -277,9 +311,11 @@ class QueryPlanner:
         traverse: str,
         nq: float,
         frontier: Sequence[QueryBox] | None,
+        batched: bool = True,
     ) -> EdgeStep:
         choices = [
-            self._best_choice(lid, traverse, nq, frontier) for lid in lineage_ids
+            self._best_choice(lid, traverse, nq, frontier, batched)
+            for lid in lineage_ids
         ]
         return EdgeStep(u, v, choices)
 
@@ -289,6 +325,7 @@ class QueryPlanner:
         traverse: str,
         nq: float,
         frontier: Sequence[QueryBox] | None,
+        batched: bool = True,
     ) -> HopChoice:
         """Cheapest (materialization, route) for one entry on one hop.
 
@@ -301,25 +338,28 @@ class QueryPlanner:
         if traverse == "backward":
             options.append(
                 self._cost_option(
-                    entry, lineage_id, "backward", "key", nq, frontier
+                    entry, lineage_id, "backward", "key", nq, frontier, batched
                 )
             )
             if entry.has_forward:
                 options.append(
                     self._cost_option(
-                        entry, lineage_id, "forward", "value", nq, frontier
+                        entry, lineage_id, "forward", "value", nq, frontier,
+                        batched,
                     )
                 )
         else:
             if entry.has_forward:
                 options.append(
                     self._cost_option(
-                        entry, lineage_id, "forward", "key", nq, frontier
+                        entry, lineage_id, "forward", "key", nq, frontier,
+                        batched,
                     )
                 )
             options.append(
                 self._cost_option(
-                    entry, lineage_id, "backward", "value", nq, frontier
+                    entry, lineage_id, "backward", "value", nq, frontier,
+                    batched,
                 )
             )
         return min(options, key=lambda c: c.est_cost)
@@ -332,6 +372,7 @@ class QueryPlanner:
         frontier_on: str,
         nq: float,
         frontier: Sequence[QueryBox] | None,
+        batched: bool = True,
     ) -> HopChoice:
         nr = entry.backward_rows if stored == "backward" else entry.forward_rows
         nr = max(int(nr), 1)
@@ -340,10 +381,11 @@ class QueryPlanner:
         est_pairs = self._estimate_pairs(
             table, nr, frontier_on, nq, frontier, measured
         )
+        dense_cost = nq * nr * (_BATCHED_PAIR_DISCOUNT if batched else 1.0)
         # route: small tables and unselective frontiers go dense
         if nr < INDEX_MIN_ROWS or est_pairs > DENSE_FRACTION * nq * nr:
-            route = "dense"
-            join_cost = nq * nr
+            route = "batched" if batched else "dense"
+            join_cost = dense_cost
         else:
             route = "index"
             join_cost = est_pairs + nq * math.log2(nr + 1)
@@ -354,9 +396,49 @@ class QueryPlanner:
             )
             if not has_index:
                 join_cost += _INDEX_BUILD_WEIGHT * nr * math.log2(nr + 1)
+            # the batched-route option: with packed frontier execution the
+            # dense engine is cheap enough to beat a selective index on
+            # some hops the per-hop model would never route dense
+            if batched and dense_cost < join_cost:
+                route, join_cost = "batched", dense_cost
+        if route != "index":
+            choice_note = self._dense_note(
+                entry, stored, frontier_on, table, segmented=route == "batched"
+            )
+        else:
+            choice_note = ""
         if frontier_on == "value":
             join_cost *= _INVERSE_OVERHEAD
-        return HopChoice(lineage_id, stored, frontier_on, route, est_pairs, join_cost)
+        return HopChoice(
+            lineage_id, stored, frontier_on, route, est_pairs, join_cost,
+            note=choice_note,
+        )
+
+    def _dense_note(
+        self,
+        entry: "LineageEntry",
+        stored: str,
+        frontier_on: str,
+        table,
+        segmented: bool = True,
+    ) -> str:
+        """Backend annotation for a dense/batched hop (see ``dense_backend``).
+
+        Attribute width comes from the array shapes (known without loading
+        the blob); the int32-overflow check needs the actual bounds, so it
+        only sharpens the note once the table is resident — execution
+        re-checks exactly either way.
+        """
+        key_name = entry.dst if stored == "backward" else entry.src
+        val_name = entry.src if stored == "backward" else entry.dst
+        side = key_name if frontier_on == "key" else val_name
+        n_attrs = len(self.log.arrays[side].shape)
+        int32_ok = True
+        if table is not None:
+            int32_ok = table.int32_safe(
+                "key" if frontier_on == "key" else "value"
+            )
+        return dense_backend(n_attrs, int32_ok, segmented=segmented)
 
     def _estimate_pairs(
         self,
@@ -424,6 +506,7 @@ class QueryPlanner:
         merge: bool = True,
         collect: str = "targets",
         parallel: int | None = None,
+        batched: bool | None = None,
     ) -> dict[str, list[QueryBox]]:
         """Run ``plan`` for a batch of queries rooted at its start node(s).
 
@@ -441,6 +524,14 @@ class QueryPlanner:
         per-shard sub-plans with no pending exchange between them — on an
         N-thread pool.  Each node still accumulates its incoming steps in
         plan order, so results are identical to serial execution.
+
+        ``batched`` (default ``planner.batched``) picks the join engine:
+        ``True`` packs every dense join ready in a plan frontier — across
+        branches and sub-plans — into one blocked evaluation through the
+        :class:`~repro.core.query.BatchedJoinExecutor` (in parallel mode,
+        one packed evaluation per node, with the GIL-releasing twin letting
+        workers overlap); ``False`` is the serial per-hop join loop.  Both
+        engines return bit-identical results.
         """
         if isinstance(queries, dict):
             start_by_array = {plan.node_array[k]: k for k in plan.starts}
@@ -481,46 +572,86 @@ class QueryPlanner:
         nB = lengths.pop() if lengths else 0
 
         workers = parallel if parallel is not None else self.parallel
-        if workers is not None and workers > 1 and len(plan.order) > 1:
+        use_batched = self.batched if batched is None else batched
+        if use_batched and plan.steps:
+            frontier = self._execute_waves(plan, init, nB, merge, workers)
+        elif workers is not None and workers > 1 and len(plan.order) > 1:
             frontier = self._execute_parallel(plan, init, nB, merge, workers)
         else:
             frontier = {}
             for key in plan.order:
-                frontier[key] = self._compute_node(plan, key, init, frontier, nB, merge)
+                frontier[key] = self._compute_node(
+                    plan, key, init, frontier, nB, merge, use_batched
+                )
         if collect == "all":
             return {plan.node_array[k]: v for k, v in frontier.items()}
         return {
             name: frontier[key] for name, key in plan.target_keys.items()
         }
 
-    def _compute_node(
+    # ------------------------------------------------------------------ #
+    # node execution: gather join requests, run them, assemble frontiers
+    # ------------------------------------------------------------------ #
+    def _gather_requests(
+        self,
+        plan: QueryPlan,
+        key: str,
+        frontier: dict[str, list[QueryBox]],
+    ) -> list[tuple[EdgeStep, HopChoice, list[QueryBox]]]:
+        """One node's pending joins, in plan order of its incoming steps."""
+        gathered: list[tuple[EdgeStep, HopChoice, list[QueryBox]]] = []
+        for step in plan.steps.get(key, []):
+            qs = self._incoming_frontier(plan, step, frontier[step.u])
+            for choice in step.choices:
+                gathered.append((step, choice, qs))
+        return gathered
+
+    def _requests_for(
+        self, gathered: list[tuple[EdgeStep, HopChoice, list[QueryBox]]]
+    ) -> list[JoinRequest]:
+        reqs = []
+        for _step, choice, qs in gathered:
+            entry = self.log.lineage[choice.lineage_id]
+            table = (
+                entry.backward if choice.stored == "backward" else entry.forward
+            )
+            reqs.append(
+                JoinRequest(
+                    qs,
+                    table,
+                    inverse=choice.frontier_on == "value",
+                    merge=False,
+                    path=choice.route,
+                )
+            )
+        return reqs
+
+    def _assemble_node(
         self,
         plan: QueryPlan,
         key: str,
         init: dict[str, list[QueryBox]],
-        frontier: dict[str, list[QueryBox]],
+        gathered: list[tuple[EdgeStep, HopChoice, list[QueryBox]]],
+        res_lists: list[list[QueryBox]],
         nB: int,
         merge: bool,
     ) -> list[QueryBox]:
-        """One node's frontier: its init share plus every incoming step."""
+        """One node's frontier: its init share plus every step's results."""
         shape = self.log.arrays[plan.node_array[key]].shape
         nd = len(shape)
-        steps = plan.steps.get(key, [])
-        if key in init and not steps:
+        if key in init and not plan.steps.get(key, []):
             return init[key]
         acc_lo: list[list[np.ndarray]] = [[] for _ in range(nB)]
         acc_hi: list[list[np.ndarray]] = [[] for _ in range(nB)]
         for k, q in enumerate(init.get(key, [])):
             acc_lo[k].append(q.lo)
             acc_hi[k].append(q.hi)
-        for step in steps:
-            qs = self._incoming_frontier(plan, step, frontier[step.u])
-            for choice in step.choices:
-                res_list = self._run_choice(choice, qs)
-                self._record_step_output(plan, step, res_list)
-                for k, res in enumerate(res_list):
-                    acc_lo[k].append(res.lo)
-                    acc_hi[k].append(res.hi)
+        for (step, choice, qs), res_list in zip(gathered, res_lists):
+            self._record_step_output(plan, step, res_list)
+            self._record_choice(choice, qs, res_list)
+            for k, res in enumerate(res_list):
+                acc_lo[k].append(res.lo)
+                acc_hi[k].append(res.hi)
         boxes = []
         for k in range(nB):
             lo = (
@@ -537,6 +668,85 @@ class QueryPlanner:
             boxes.append(merge_boxes(res) if merge else res)
         return boxes
 
+    def _compute_node(
+        self,
+        plan: QueryPlan,
+        key: str,
+        init: dict[str, list[QueryBox]],
+        frontier: dict[str, list[QueryBox]],
+        nB: int,
+        merge: bool,
+        use_batched: bool = False,
+    ) -> list[QueryBox]:
+        """One node's frontier: its init share plus every incoming step.
+
+        With ``use_batched`` the node's joins — every choice of every
+        incoming step — run as one packed executor batch; this is the
+        per-node granularity parallel mode uses (each worker packs the node
+        it owns).  Results are identical either way.
+        """
+        gathered = self._gather_requests(plan, key, frontier)
+        if use_batched and gathered:
+            res_lists = self.executor.run(self._requests_for(gathered))
+        else:
+            res_lists = [
+                self._join_choice(choice, qs) for _s, choice, qs in gathered
+            ]
+        return self._assemble_node(
+            plan, key, init, gathered, res_lists, nB, merge
+        )
+
+    def _execute_waves(
+        self,
+        plan: QueryPlan,
+        init: dict[str, list[QueryBox]],
+        nB: int,
+        merge: bool,
+        workers: int | None = None,
+    ) -> dict[str, list[QueryBox]]:
+        """Frontier execution with whole-wave join batching.
+
+        The plan runs as a sequence of *waves*: every node whose
+        dependencies are satisfied is ready, and all ready nodes' joins —
+        across plan branches and, on sharded plans, across exchange-free
+        per-shard sub-plans — are packed into one
+        :meth:`BatchedJoinExecutor.run` dispatch.  Per-node assembly then
+        proceeds in plan order, so results are bit-identical to the serial
+        per-hop loop.
+
+        ``workers=N`` hands each wave's packed dense segments to an
+        N-thread pool inside the executor: the segment tasks are almost
+        entirely GIL-releasing blocked numpy, which is what makes thread
+        parallelism actually pay on CPU (node-granularity threading — the
+        non-batched engine's mode — loses its win to GIL hand-offs between
+        the small Python-held assembly steps).
+        """
+        deps = {
+            key: {s.u for s in plan.steps.get(key, [])} for key in plan.order
+        }
+        frontier: dict[str, list[QueryBox]] = {}
+        done: set[str] = set()
+        pending = list(plan.order)
+        while pending:
+            wave = [k for k in pending if deps[k] <= done]
+            gathered = {
+                k: self._gather_requests(plan, k, frontier) for k in wave
+            }
+            reqs: list[JoinRequest] = []
+            for k in wave:
+                reqs.extend(self._requests_for(gathered[k]))
+            res = self.executor.run(reqs, workers=workers) if reqs else []
+            off = 0
+            for k in wave:
+                n = len(gathered[k])
+                frontier[k] = self._assemble_node(
+                    plan, k, init, gathered[k], res[off : off + n], nB, merge
+                )
+                off += n
+                done.add(k)
+            pending = [k for k in pending if k not in done]
+        return frontier
+
     def _execute_parallel(
         self,
         plan: QueryPlan,
@@ -545,13 +755,16 @@ class QueryPlanner:
         merge: bool,
         workers: int,
     ) -> dict[str, list[QueryBox]]:
-        """Dependency-driven execution on a thread pool.
+        """Dependency-driven node-level execution on a thread pool.
 
-        A node is *ready* once every node feeding one of its steps has a
-        computed frontier, so non-dependent branches — and, through the
-        sharded planner's step ownership, exchange-free per-shard sub-plans
-        — run concurrently.  Within a node, incoming steps still execute in
-        plan order: per-node results are bit-identical to serial execution.
+        The non-batched engine's parallel mode (PR 4): a node is *ready*
+        once every node feeding one of its steps has a computed frontier,
+        so non-dependent branches — and, through the sharded planner's
+        step ownership, exchange-free per-shard sub-plans — run
+        concurrently.  Within a node, incoming steps still execute in plan
+        order: per-node results are bit-identical to serial execution.
+        (With batching enabled, ``execute`` uses wave execution with
+        worker-split dense segments instead — see ``_execute_waves``.)
         """
         import concurrent.futures as cf
         import threading
@@ -622,17 +835,21 @@ class QueryPlanner:
         """Hook: observe one choice's per-query results (sharded planner
         uses it to meter output-side boundary exchanges)."""
 
-    def _run_choice(
+    def _join_choice(
         self, choice: HopChoice, qs: list[QueryBox]
     ) -> list[QueryBox]:
+        """The per-hop join loop: one choice, one ``theta_join_batch``."""
         entry = self.log.lineage[choice.lineage_id]
         table = entry.backward if choice.stored == "backward" else entry.forward
         if choice.frontier_on == "key":
-            res = theta_join_batch(qs, table, merge=False, path=choice.route)
-        else:
-            res = theta_join_inverse_batch(
-                qs, table, merge=False, path=choice.route
-            )
+            return theta_join_batch(qs, table, merge=False, path=choice.route)
+        return theta_join_inverse_batch(
+            qs, table, merge=False, path=choice.route
+        )
+
+    def _record_choice(
+        self, choice: HopChoice, qs: list[QueryBox], res: list[QueryBox]
+    ) -> None:
         # cost-model feedback: the true pair counts this hop produced, keyed
         # by (entry, materialization, join side) — replanning the same
         # catalog prefers these measurements over the closed-form model
@@ -645,4 +862,11 @@ class QueryPlanner:
                 pairs=sum(r.n_rows for r in res),
                 qrows=qrows,
             )
+
+    def _run_choice(
+        self, choice: HopChoice, qs: list[QueryBox]
+    ) -> list[QueryBox]:
+        """One choice's join plus its cost feedback (per-hop loop form)."""
+        res = self._join_choice(choice, qs)
+        self._record_choice(choice, qs, res)
         return res

@@ -44,6 +44,7 @@ their owning queries.
 
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import Sequence
 
@@ -56,12 +57,15 @@ from .table import CompressedTable
 
 __all__ = [
     "QueryBox",
+    "JoinRequest",
+    "BatchedJoinExecutor",
     "theta_join",
     "theta_join_inverse",
     "theta_join_batch",
     "theta_join_inverse_batch",
     "query_path",
     "merge_boxes",
+    "dense_backend",
     "INDEX_MIN_ROWS",
     "DENSE_FRACTION",
 ]
@@ -184,18 +188,86 @@ def _dense_pairs(
 def _kernel_pairs(q_lo, q_hi, r_lo, r_hi):
     """Pallas ``range_join_mask`` dense fallback — only off interpret mode.
 
-    Returns ``None`` when the kernel path is unavailable or not worthwhile
-    (no accelerator, too many attributes for one tile, jax missing), so the
-    caller falls through to blocked numpy.  Genuine kernel failures on an
-    accelerator propagate — silently degrading to numpy would hide them.
+    Returns ``None`` when the kernel path is unavailable or cannot express
+    the join faithfully (no accelerator, too many attributes for one tile,
+    coordinates outside the int32 pack range — they would silently wrap —
+    or jax missing), so the caller falls through to blocked numpy.  Genuine
+    kernel failures on an accelerator propagate — silently degrading to
+    numpy would hide them.
     """
     try:
-        from repro.kernels.ops import LANES, default_interpret, range_join_pairs
+        from repro.kernels.ops import (
+            LANES,
+            default_interpret,
+            fits_int32,
+            range_join_pairs,
+        )
     except ImportError:
         return None
     if default_interpret() or 2 * q_lo.shape[1] > LANES:
         return None
+    if not fits_int32(q_lo, q_hi, r_lo, r_hi):
+        return None
     return range_join_pairs(q_lo, q_hi, r_lo, r_hi)
+
+
+def dense_backend(
+    n_attrs: int, int32_ok: bool = True, segmented: bool = True
+) -> str:
+    """Which engine a dense join of ``n_attrs`` attributes would run on.
+
+    ``"tpu"`` when the Pallas kernel applies, else a ``"np:*"`` reason
+    (``np:cpu`` interpret mode, ``np:wide`` lane capacity — for
+    ``segmented`` joins the batched pack's segment lane counts too,
+    ``np:i64`` int32 overflow, ``np:nojax``).  Rendered into
+    ``plan.describe()`` so dense-route fallbacks are visible instead of
+    silent.
+    """
+    try:
+        from repro.kernels.ops import LANES, default_interpret
+    except ImportError:
+        return "np:nojax"
+    if 2 * (n_attrs + (1 if segmented else 0)) > LANES:
+        return "np:wide"
+    if not int32_ok:
+        return "np:i64"
+    if default_interpret():
+        return "np:cpu"
+    return "tpu"
+
+
+def _route_decision(
+    q_lo: np.ndarray,
+    q_hi: np.ndarray,
+    r_lo: np.ndarray,
+    r_hi: np.ndarray,
+    index_get,
+    path: str,
+):
+    """Shared indexed-vs-dense routing: ``("dense", None)`` or
+    ``("index", windows)``.
+
+    ``path="batched"`` is the planner's batched-dense route: the same dense
+    decision, executed through the packed :class:`BatchedJoinExecutor`
+    engine when one is driving the joins.  ``index_get`` is a zero-arg
+    callable returning the (cached) :class:`IntervalIndex` — deferred so
+    the dense route never builds one.
+    """
+    if path not in ("auto", "index", "dense", "batched"):
+        raise ValueError(f"unknown join path {path!r}")
+    nq, nr = q_lo.shape[0], r_lo.shape[0]
+    if path in ("dense", "batched"):
+        return "dense", None
+    if path == "auto" and nr < _INDEX_MIN_ROWS:
+        return "dense", None
+    index: IntervalIndex = index_get()
+    windows = None
+    if path == "auto" and index.n_attrs:
+        windows = index.probe_windows(q_lo, q_hi)  # one probe pass, reused below
+        est = index.estimate_candidates(q_lo, q_hi, windows)
+        if est > _DENSE_FRACTION * nq * nr:
+            return "dense", None
+    return "index", windows
 
 
 def _route_pairs(
@@ -206,28 +278,16 @@ def _route_pairs(
     index_get,
     path: str,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Pick indexed vs dense execution for one range join.
-
-    ``index_get`` is a zero-arg callable returning the (cached)
-    :class:`IntervalIndex` — deferred so the dense route never builds one.
-    """
-    if path not in ("auto", "index", "dense"):
-        raise ValueError(f"unknown join path {path!r}")
+    """Pick indexed vs dense execution for one range join."""
     nq, nr = q_lo.shape[0], r_lo.shape[0]
     if nq == 0 or nr == 0:
+        if path not in ("auto", "index", "dense", "batched"):
+            raise ValueError(f"unknown join path {path!r}")
         return np.zeros(0, np.int64), np.zeros(0, np.int64)
-    if path == "dense":
+    route, windows = _route_decision(q_lo, q_hi, r_lo, r_hi, index_get, path)
+    if route == "dense":
         return _dense_pairs(q_lo, q_hi, r_lo, r_hi)
-    if path == "auto" and nr < _INDEX_MIN_ROWS:
-        return _dense_pairs(q_lo, q_hi, r_lo, r_hi)
-    index: IntervalIndex = index_get()
-    windows = None
-    if path == "auto" and index.n_attrs:
-        windows = index.probe_windows(q_lo, q_hi)  # one probe pass, reused below
-        est = index.estimate_candidates(q_lo, q_hi, windows)
-        if est > _DENSE_FRACTION * nq * nr:
-            return _dense_pairs(q_lo, q_hi, r_lo, r_hi)
-    return index.candidate_pairs(q_lo, q_hi, windows)
+    return index_get().candidate_pairs(q_lo, q_hi, windows)
 
 
 def _derelativize(
@@ -354,6 +414,32 @@ def theta_join_inverse(
 # --------------------------------------------------------------------------- #
 # Batched multi-query θ-join
 # --------------------------------------------------------------------------- #
+def _unique_rows(
+    a: np.ndarray, return_inverse: bool = False
+) -> "np.ndarray | tuple[np.ndarray, np.ndarray]":
+    """``np.unique(a, axis=0[, return_inverse])`` for 2-D integer arrays.
+
+    Bit-identical output (same lexicographic row order, same inverse), but
+    via ``lexsort`` over the integer columns — ``np.unique(axis=0)`` pays
+    ~4x more for its void-dtype view sort, and these row dedups run on
+    every hop of every query.
+    """
+    n = a.shape[0]
+    if n == 0:
+        return (a, np.zeros(0, np.int64)) if return_inverse else a
+    order = np.lexsort(a.T[::-1])  # first column most significant
+    s = a[order]
+    flag = np.empty(n, bool)
+    flag[0] = True
+    np.any(s[1:] != s[:-1], axis=1, out=flag[1:])
+    uniq = s[flag]
+    if not return_inverse:
+        return uniq
+    inv = np.empty(n, np.int64)
+    inv[order] = np.cumsum(flag) - 1
+    return uniq, inv
+
+
 def _pool_boxes(
     queries: Sequence[QueryBox],
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -361,10 +447,9 @@ def _pool_boxes(
     maps each original row (queries concatenated) to its distinct box."""
     all_lo = np.concatenate([q.lo for q in queries], axis=0)
     all_hi = np.concatenate([q.hi for q in queries], axis=0)
-    uniq, inv = np.unique(
-        np.concatenate([all_lo, all_hi], axis=1), axis=0, return_inverse=True
+    uniq, inv = _unique_rows(
+        np.concatenate([all_lo, all_hi], axis=1), return_inverse=True
     )
-    inv = inv.reshape(-1)  # numpy 2.1 returned keepdims-shaped inverse
     nd = all_lo.shape[1]
     return uniq[:, :nd], uniq[:, nd:], inv
 
@@ -395,6 +480,78 @@ def _scatter_to_owners(
     return results
 
 
+def _prepare_batch(
+    queries: Sequence[QueryBox], table: CompressedTable, inverse: bool
+):
+    """Validate + pool one batched join; shared with the batched executor.
+
+    Returns ``("done", results)`` for trivially-empty joins, else
+    ``("join", u_lo, u_hi, inv, r_lo, r_hi, index_get)`` where the ``r``
+    side is the table's key intervals (natural join) or its achievable
+    value bounds (inverse join).
+    """
+    if table.is_symbolic:
+        raise ValueError("instantiate symbolic table before querying")
+    q_side = table.val_shape if inverse else table.key_shape
+    side_name = "val" if inverse else "key"
+    for q in queries:
+        if q.shape != q_side:
+            raise ValueError(
+                f"query shape {q.shape} does not match table {side_name} "
+                f"shape {q_side}"
+            )
+    n_out = table.n_key if inverse else table.n_val
+    out_shape = table.key_shape if inverse else table.val_shape
+    empty = lambda: QueryBox(
+        out_shape, np.zeros((0, n_out)), np.zeros((0, n_out))
+    )
+    if not queries:
+        return ("done", [])
+    if sum(q.n_rows for q in queries) == 0 or table.n_rows == 0:
+        return ("done", [empty() for _ in queries])
+    u_lo, u_hi, inv = _pool_boxes(queries)
+    if inverse:
+        r_lo, r_hi = table.value_bounds()
+        index_get = table.val_index
+    else:
+        r_lo, r_hi = table.key_lo, table.key_hi
+        index_get = table.key_index
+    return ("join", u_lo, u_hi, inv, r_lo, r_hi, index_get)
+
+
+def _finalize_batch(
+    queries: Sequence[QueryBox],
+    table: CompressedTable,
+    inverse: bool,
+    u_lo: np.ndarray,
+    u_hi: np.ndarray,
+    inv: np.ndarray,
+    ui: np.ndarray,
+    ri: np.ndarray,
+    merge: bool,
+) -> list[QueryBox]:
+    """Steps 2+ of a batched join over an enumerated pair list."""
+    if inverse:
+        pooled = QueryBox(table.val_shape, u_lo, u_hi)
+        key_lo, key_hi, valid = _inverse_key_boxes(pooled, table, ui, ri)
+        return _scatter_to_owners(
+            queries,
+            inv,
+            ui[valid],
+            u_lo.shape[0],
+            key_lo[valid],
+            key_hi[valid],
+            table.key_shape,
+            merge,
+        )
+    inter_lo = np.maximum(u_lo[ui], table.key_lo[ri])
+    inter_hi = np.minimum(u_hi[ui], table.key_hi[ri])
+    out_lo, out_hi = _derelativize(table, ui, ri, inter_lo, inter_hi)
+    return _scatter_to_owners(
+        queries, inv, ui, u_lo.shape[0], out_lo, out_hi, table.val_shape, merge
+    )
+
+
 def theta_join_batch(
     queries: Sequence[QueryBox],
     table: CompressedTable,
@@ -408,31 +565,12 @@ def theta_join_batch(
     outputs are computed once per *distinct* (box, table row) pair and then
     scattered back to the owning queries.
     """
-    if table.is_symbolic:
-        raise ValueError("instantiate symbolic table before querying")
-    for q in queries:
-        if q.shape != table.key_shape:
-            raise ValueError(
-                f"query shape {q.shape} does not match table key shape "
-                f"{table.key_shape}"
-            )
-    m = table.n_val
-    empty = lambda: QueryBox(table.val_shape, np.zeros((0, m)), np.zeros((0, m)))
-    if not queries:
-        return []
-    if sum(q.n_rows for q in queries) == 0 or table.n_rows == 0:
-        return [empty() for _ in queries]
-
-    u_lo, u_hi, inv = _pool_boxes(queries)
-    ui, ri = _route_pairs(
-        u_lo, u_hi, table.key_lo, table.key_hi, table.key_index, path
-    )
-    inter_lo = np.maximum(u_lo[ui], table.key_lo[ri])
-    inter_hi = np.minimum(u_hi[ui], table.key_hi[ri])
-    out_lo, out_hi = _derelativize(table, ui, ri, inter_lo, inter_hi)
-    return _scatter_to_owners(
-        queries, inv, ui, u_lo.shape[0], out_lo, out_hi, table.val_shape, merge
-    )
+    pre = _prepare_batch(queries, table, inverse=False)
+    if pre[0] == "done":
+        return pre[1]
+    _, u_lo, u_hi, inv, r_lo, r_hi, index_get = pre
+    ui, ri = _route_pairs(u_lo, u_hi, r_lo, r_hi, index_get, path)
+    return _finalize_batch(queries, table, False, u_lo, u_hi, inv, ui, ri, merge)
 
 
 def theta_join_inverse_batch(
@@ -448,36 +586,294 @@ def theta_join_inverse_batch(
     and the per-pair key-interval inversion (plus its joint-validity check)
     done once per *distinct* (box, row) pair.
     """
-    if table.is_symbolic:
-        raise ValueError("instantiate symbolic table before querying")
-    for q in queries:
-        if q.shape != table.val_shape:
-            raise ValueError(
-                f"query shape {q.shape} does not match table val shape "
-                f"{table.val_shape}"
-            )
-    l = table.n_key
-    empty = lambda: QueryBox(table.key_shape, np.zeros((0, l)), np.zeros((0, l)))
-    if not queries:
-        return []
-    if sum(q.n_rows for q in queries) == 0 or table.n_rows == 0:
-        return [empty() for _ in queries]
+    pre = _prepare_batch(queries, table, inverse=True)
+    if pre[0] == "done":
+        return pre[1]
+    _, u_lo, u_hi, inv, r_lo, r_hi, index_get = pre
+    ui, ri = _route_pairs(u_lo, u_hi, r_lo, r_hi, index_get, path)
+    return _finalize_batch(queries, table, True, u_lo, u_hi, inv, ui, ri, merge)
 
-    u_lo, u_hi, inv = _pool_boxes(queries)
-    vb_lo, vb_hi = table.value_bounds()
-    ui, ri = _route_pairs(u_lo, u_hi, vb_lo, vb_hi, table.val_index, path)
-    pooled = QueryBox(table.val_shape, u_lo, u_hi)
-    key_lo, key_hi, valid = _inverse_key_boxes(pooled, table, ui, ri)
-    return _scatter_to_owners(
-        queries,
-        inv,
-        ui[valid],
-        u_lo.shape[0],
-        key_lo[valid],
-        key_hi[valid],
-        table.key_shape,
-        merge,
+
+# --------------------------------------------------------------------------- #
+# Batched accelerator execution of plan steps
+# --------------------------------------------------------------------------- #
+@dataclass
+class JoinRequest:
+    """One batched θ-join a plan step wants executed.
+
+    ``path`` follows :func:`_route_decision` (``"batched"`` is the
+    planner's batched-dense route).  Requests are what the planner hands a
+    :class:`BatchedJoinExecutor` — one per (step, lineage entry) pair in a
+    ready plan frontier.
+    """
+
+    queries: Sequence[QueryBox]
+    table: CompressedTable
+    inverse: bool = False
+    merge: bool = True
+    path: str = "auto"
+
+
+def _twin_pairs(
+    q_lo: np.ndarray,
+    q_hi: np.ndarray,
+    rl: np.ndarray,
+    rh: np.ndarray,
+    scratch: dict | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Blocked dense overlap pairs over packed table columns.
+
+    The GIL-releasing numpy twin of the segmented kernel: ``rl``/``rh`` are
+    the table's cached contiguous ``[l, N]`` columns (int32 when safe —
+    see :meth:`CompressedTable.dense_join_cols`), the query side is packed
+    per call, and the conjunction is evaluated with reusable buffers
+    (``scratch``, shared across one packed dispatch's segments) and
+    in-place ufuncs.  Pair extraction runs on the raveled mask
+    (``flatnonzero`` + divmod — numpy's 2-D nonzero pays an order of
+    magnitude more on sparse masks).  All heavy work happens inside numpy
+    inner loops, which drop the GIL — this is what lets thread-pool plan
+    execution actually overlap on CPU.  Pair order is row-major, identical
+    to :func:`_dense_pairs`.
+    """
+    nq, l = q_lo.shape
+    nr = rl.shape[1]
+    if rl.dtype == np.int32:
+        i32 = np.iinfo(np.int32)
+        small = (
+            q_lo.min() >= i32.min and q_hi.max() <= i32.max
+            if q_lo.size
+            else True
+        )
+        qdt = np.int32 if small else np.int64
+    else:
+        qdt = np.int64
+    qlt = np.ascontiguousarray(q_lo.T, dtype=qdt)  # [l, nq]
+    qht = np.ascontiguousarray(q_hi.T, dtype=qdt)
+    block = max(1, int(4_000_000 // max(nr, 1)))
+    rows = min(block, nq)
+    if scratch is None:
+        scratch = {}
+    cells = rows * nr
+    if scratch.get("n", 0) < cells:
+        scratch["ov"] = np.empty(cells, np.bool_)
+        scratch["tmp"] = np.empty(cells, np.bool_)
+        scratch["n"] = cells
+    qi_list, ri_list = [], []
+    for s in range(0, nq, block):
+        e = min(nq, s + block)
+        o = scratch["ov"][: (e - s) * nr].reshape(e - s, nr)
+        t = scratch["tmp"][: (e - s) * nr].reshape(e - s, nr)
+        np.less_equal(qlt[0, s:e, None], rh[0][None, :], out=o)
+        np.less_equal(rl[0][None, :], qht[0, s:e, None], out=t)
+        np.logical_and(o, t, out=o)
+        for j in range(1, l):
+            np.less_equal(qlt[j, s:e, None], rh[j][None, :], out=t)
+            np.logical_and(o, t, out=o)
+            np.less_equal(rl[j][None, :], qht[j, s:e, None], out=t)
+            np.logical_and(o, t, out=o)
+        flat = np.flatnonzero(o.ravel())
+        qi, ri = np.divmod(flat, nr)
+        qi_list.append(qi + s)
+        ri_list.append(ri)
+    if len(qi_list) == 1:
+        return (
+            qi_list[0].astype(np.int64, copy=False),
+            ri_list[0].astype(np.int64, copy=False),
+        )
+    return (
+        np.concatenate(qi_list).astype(np.int64, copy=False),
+        np.concatenate(ri_list).astype(np.int64, copy=False),
     )
+
+
+class BatchedJoinExecutor:
+    """Pack a plan frontier's dense θ-joins into one blocked evaluation.
+
+    The planner hands every :class:`JoinRequest` ready in a frontier —
+    across plan branches and, on sharded stores, across exchange-free
+    sub-plans — to :meth:`run`.  Index-routed requests execute through the
+    per-table :class:`IntervalIndex` as before; every dense-routed request
+    becomes one *segment* of a single packed ``[NQ, 128] × [NR, 128]``
+    evaluation:
+
+    * on an accelerator, one :func:`repro.kernels.ops.segmented_range_join_pairs`
+      launch — segment ids in the spare lanes keep per-step masks separable,
+      so the whole frontier costs one kernel dispatch instead of one per hop;
+    * in interpret/CPU mode, the GIL-releasing blocked-numpy twin
+      (:func:`_twin_pairs`) over the tables' cached contiguous int32
+      columns — same pair lists bit-for-bit, and thread-pool workers in
+      ``planner._execute_parallel`` finally overlap because the hot loops
+      run outside the GIL.
+
+    Segments the kernel cannot express faithfully (lane capacity, int32
+    overflow — see the ``np:*`` notes in ``plan.describe()``) route to the
+    twin automatically.  Results are bit-identical to the serial per-hop
+    loop; ``stats`` (an ``io_stats`` bump callable) meters launches and
+    batch occupancy.
+    """
+
+    def __init__(self, stats=None, interpret: bool | None = None):
+        self._stats = stats if stats is not None else (lambda key, n=1: None)
+        self._interpret = interpret
+        self._pool = None  # lazy worker pool for twin-segment fan-out
+        self._pool_width = 0
+
+    def _workers(self, width: int):
+        """A reusable thread pool for splitting twin segments (CPU mode)."""
+        import concurrent.futures as cf
+
+        if self._pool is None or self._pool_width < width:
+            if self._pool is not None:
+                self._pool.shutdown(wait=False)
+            self._pool = cf.ThreadPoolExecutor(
+                max_workers=width, thread_name_prefix="dslog-join"
+            )
+            self._pool_width = width
+        return self._pool
+
+    # ------------------------------------------------------------------ #
+    def run(
+        self, requests: Sequence[JoinRequest], workers: int | None = None
+    ) -> list[list[QueryBox]]:
+        """Execute one frontier's requests; returns per-request results.
+
+        ``workers=N`` splits the packed dense segments across an N-thread
+        pool — each worker's share is almost entirely GIL-releasing numpy
+        (the twin's blocked mask passes), so the segments genuinely
+        overlap on CPU while preparation, index probes, and result
+        assembly stay on the calling thread.  Results are bit-identical
+        for any worker count.
+        """
+        results: list[list[QueryBox] | None] = [None] * len(requests)
+        dense: list[tuple] = []
+        for i, req in enumerate(requests):
+            pre = _prepare_batch(req.queries, req.table, req.inverse)
+            if pre[0] == "done":
+                results[i] = pre[1]
+                continue
+            _, u_lo, u_hi, inv, r_lo, r_hi, index_get = pre
+            route, windows = _route_decision(
+                u_lo, u_hi, r_lo, r_hi, index_get, req.path
+            )
+            if route == "index":
+                ui, ri = index_get().candidate_pairs(u_lo, u_hi, windows)
+                results[i] = _finalize_batch(
+                    req.queries, req.table, req.inverse,
+                    u_lo, u_hi, inv, ui, ri, req.merge,
+                )
+            else:
+                dense.append((i, req, u_lo, u_hi, inv, r_lo, r_hi))
+        if dense:
+            self._run_dense(dense, results, workers)
+        return results  # type: ignore[return-value]
+
+    # ------------------------------------------------------------------ #
+    def _run_dense(
+        self,
+        items: list[tuple],
+        results: list,
+        workers: int | None = None,
+    ) -> None:
+        """Evaluate and finalize every dense segment, one packed dispatch."""
+        kernel_idx: list[int] = []
+        try:
+            from repro.kernels.ops import LANES, default_interpret, fits_int32
+        except ImportError:
+            LANES = default_interpret = fits_int32 = None  # type: ignore
+        interpret = (
+            self._interpret
+            if self._interpret is not None
+            else (default_interpret() if default_interpret else True)
+        )
+        if not interpret and LANES is not None:
+            # eligibility is per segment: one over-wide or int64 join must
+            # not demote the rest of the frontier off the kernel path (and
+            # over-wide segments never inflate the shared pack width)
+            kernel_idx = [
+                k
+                for k, it in enumerate(items)
+                if 2 * (it[3].shape[1] + 1) <= LANES
+                and fits_int32(it[2], it[3], it[5], it[6])
+            ]
+
+        def finalize(k: int, ui: np.ndarray, ri: np.ndarray) -> None:
+            i, req, u_lo, u_hi, inv, _r_lo, _r_hi = items[k]
+            results[i] = _finalize_batch(
+                req.queries, req.table, req.inverse,
+                u_lo, u_hi, inv, ui, ri, req.merge,
+            )
+
+        if kernel_idx:
+            from repro.kernels.ops import segmented_range_join_pairs
+
+            segs = [
+                (items[k][2], items[k][3], items[k][5], items[k][6])
+                for k in kernel_idx
+            ]
+            seg_pairs, info = segmented_range_join_pairs(
+                segs, interpret=interpret
+            )
+            for k, (ui, ri) in zip(kernel_idx, seg_pairs):
+                finalize(k, ui, ri)
+            self._stats("kernel_launches", info["launches"])
+            self._stats("joins_packed", len(kernel_idx))
+            self._stats("batch_rows", info["rows"])
+            self._stats("batch_rows_padded", info["rows_padded"])
+        done = set(kernel_idx)
+        rest = [k for k in range(len(items)) if k not in done]
+        if not rest:
+            return
+        rows = sum(items[k][2].shape[0] + items[k][5].shape[0] for k in rest)
+        pairs: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+
+        def eval_segments(chunk: list[int]) -> None:
+            scratch: dict = {}  # mask buffers shared within the chunk
+            for k in chunk:
+                _i, req, u_lo, u_hi, _inv, _r_lo, _r_hi = items[k]
+                rl, rh = req.table.dense_join_cols(
+                    "value" if req.inverse else "key"
+                )
+                pairs[k] = _twin_pairs(u_lo, u_hi, rl, rh, scratch)
+
+        # clamp fan-out to real cores: the chunks only overlap while they
+        # hold no GIL, and oversubscribing 2 cores with 4 GIL-trading
+        # threads costs more in hand-offs than it buys
+        width = min(workers or 1, len(rest), os.cpu_count() or 1)
+        if width > 1:
+            # fan only the *mask evaluations* out — the twin's blocked
+            # passes are almost pure released-GIL numpy, so they overlap on
+            # real cores, while finalize (intersect/de-relativize/scatter:
+            # many small Python-held steps that would thrash the GIL across
+            # threads) stays on the calling thread.  Chunks are balanced by
+            # mask size, largest-first onto the lightest chunk; the calling
+            # thread chews chunk 0 instead of idling.  Each pair list lands
+            # in its own slot, so any worker count is bit-identical.
+            chunks: list[list[int]] = [[] for _ in range(width)]
+            loads = [0] * width
+            for k in sorted(
+                rest,
+                key=lambda k: -items[k][2].shape[0] * items[k][5].shape[0],
+            ):
+                w = loads.index(min(loads))
+                chunks[w].append(k)
+                loads[w] += items[k][2].shape[0] * items[k][5].shape[0]
+            futs = [
+                self._workers(width - 1).submit(eval_segments, c)
+                for c in chunks[1:]
+            ]
+            eval_segments(chunks[0])
+            for f in futs:
+                f.result()
+        else:
+            eval_segments(rest)
+        for k in rest:
+            finalize(k, *pairs[k])
+        # the twin is one fused dispatch per frontier: count it like a
+        # launch so CPU runs meter batching the same way TPU runs do
+        self._stats("kernel_launches", 1)
+        self._stats("joins_packed", len(rest))
+        self._stats("batch_rows", rows)
+        self._stats("batch_rows_padded", rows)
 
 
 # --------------------------------------------------------------------------- #
@@ -494,7 +890,7 @@ def merge_boxes(q: QueryBox) -> QueryBox:
         return q
     # exact duplicate removal first
     both = np.concatenate([lo, hi], axis=1)
-    both = np.unique(both, axis=0)
+    both = _unique_rows(both)
     nd = len(q.shape)
     lo, hi = both[:, :nd], both[:, nd:]
     changed = True

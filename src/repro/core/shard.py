@@ -318,7 +318,8 @@ class ShardedQueryPlan(QueryPlan):
             for step in self.steps.get(key, []):
                 opts = ", ".join(
                     f"#{c.lineage_id}:{c.stored}/"
-                    f"{'nat' if c.frontier_on == 'key' else 'inv'}/{c.route}"
+                    f"{'nat' if c.frontier_on == 'key' else 'inv'}/"
+                    f"{c.describe_route()}"
                     for c in step.choices
                 )
                 shard = self.step_shard[(step.u, step.v)]
@@ -344,11 +345,17 @@ class ShardedQueryPlanner(QueryPlanner):
     actually cross boundaries at execution time.
     """
 
-    def plan(self, sources, targets, frontier=None) -> ShardedQueryPlan:
-        return self._shardify(QueryPlanner.plan(self, sources, targets, frontier))
+    def plan(
+        self, sources, targets, frontier=None, batched=None
+    ) -> ShardedQueryPlan:
+        return self._shardify(
+            QueryPlanner.plan(self, sources, targets, frontier, batched)
+        )
 
-    def plan_path(self, path, frontier=None) -> ShardedQueryPlan:
-        return self._shardify(QueryPlanner.plan_path(self, path, frontier))
+    def plan_path(self, path, frontier=None, batched=None) -> ShardedQueryPlan:
+        return self._shardify(
+            QueryPlanner.plan_path(self, path, frontier, batched)
+        )
 
     # ------------------------------------------------------------------ #
     def _shardify(self, base: QueryPlan) -> ShardedQueryPlan:
@@ -677,6 +684,10 @@ class ShardedDSLog:
             "manifests_written": 0,
             "sig_tables_written": 0,
             "bytes_written": 0,
+            "kernel_launches": 0,
+            "joins_packed": 0,
+            "batch_rows": 0,
+            "batch_rows_padded": 0,
         }
         total.update(self._io)
         for sh in self._shards:

@@ -199,6 +199,59 @@ class CompressedTable:
             cache["val_stats"] = st
         return st
 
+    def int32_safe(self, side: str) -> bool:
+        """Whether one join side's bounds survive an int32 pack, cached.
+
+        ``side`` is ``"key"`` (stored key intervals) or ``"value"``
+        (achievable value bounds).  Gates the accelerator kernel pack and
+        the int32 fast path of the blocked dense twin: out-of-range
+        coordinates must take the int64 numpy route or they would silently
+        wrap (the overflow bug this check exists to prevent).
+        """
+        cache = self._cache()
+        k = f"i32_{side}"
+        v = cache.get(k)
+        if v is None:
+            lo, hi = (
+                (self.key_lo, self.key_hi)
+                if side == "key"
+                else self.value_bounds()
+            )
+            info = np.iinfo(np.int32)
+            v = bool(
+                lo.size == 0
+                or (lo.min() >= info.min and hi.max() <= info.max)
+            )
+            cache[k] = v
+        return v
+
+    def dense_join_cols(self, side: str) -> tuple[np.ndarray, np.ndarray]:
+        """Contiguous transposed ``[l, N]`` (lo, hi) columns for the dense
+        join, downcast to int32 when :meth:`int32_safe` — cached, and
+        invalidated together with the indexes on mutation.
+
+        The blocked dense evaluation broadcasts one attribute column at a
+        time; the stored ``[N, l]`` layout makes those columns strided,
+        which dominates the mask cost.  One cached transpose amortizes the
+        fix across every hop and every query touching the table.
+        """
+        cache = self._cache()
+        k = f"dense_{side}"
+        cols = cache.get(k)
+        if cols is None:
+            lo, hi = (
+                (self.key_lo, self.key_hi)
+                if side == "key"
+                else self.value_bounds()
+            )
+            dt = np.int32 if self.int32_safe(side) else np.int64
+            cols = (
+                np.ascontiguousarray(lo.T, dtype=dt),
+                np.ascontiguousarray(hi.T, dtype=dt),
+            )
+            cache[k] = cols
+        return cols
+
     def cached_key_index(self) -> IntervalIndex | None:
         """The key index if one is already built/attached, without building."""
         return self._cache().get("key")

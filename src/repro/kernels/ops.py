@@ -4,6 +4,11 @@ These handle packing/padding from the natural numpy layouts used by
 ``repro.core`` into the 128-lane int32 tiles the kernels expect, and select
 ``interpret=True`` automatically when no TPU is attached (this container) so
 the kernel bodies are validated on CPU.
+
+The packers are int32: coordinates outside the int32 range cannot ride the
+kernel path (they would silently wrap — the bug this module now refuses).
+``fits_int32`` is the gate callers use to route oversized joins to the
+numpy dense path; handing out-of-range values to a packer raises.
 """
 
 from __future__ import annotations
@@ -12,14 +17,39 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .range_join import LANES, range_join_mask
+from .range_join import LANES, check_lane_capacity, range_join_mask
 from .run_boundary import run_boundaries_packed
 
-__all__ = ["run_boundaries", "range_join_pairs", "default_interpret"]
+__all__ = [
+    "run_boundaries",
+    "range_join_pairs",
+    "segmented_range_join_pairs",
+    "default_interpret",
+    "fits_int32",
+]
+
+_I32 = np.iinfo(np.int32)
 
 
 def default_interpret() -> bool:
     return jax.devices()[0].platform != "tpu"
+
+
+def fits_int32(*arrays: np.ndarray) -> bool:
+    """Whether every value survives an int32 pack without wrapping."""
+    for a in arrays:
+        if a.size and (a.min() < _I32.min or a.max() > _I32.max):
+            return False
+    return True
+
+
+def _require_int32(*arrays: np.ndarray) -> None:
+    if not fits_int32(*arrays):
+        raise ValueError(
+            "coordinates outside the int32 range cannot be packed for the "
+            "kernel path (they would wrap); route this join to the numpy "
+            "dense path (fits_int32 gates this)"
+        )
 
 
 def _pad_rows(a: np.ndarray, mult: int, fill: int) -> np.ndarray:
@@ -67,6 +97,21 @@ def run_boundaries(
     return np.asarray(flags[:n]).astype(bool)
 
 
+def _pack_boxes(lo: np.ndarray, hi: np.ndarray, n_attrs: int) -> np.ndarray:
+    """Pack ``[N, l]`` lo/hi into the kernel's ``[N, 128]`` int32 layout.
+
+    Lanes ``[0, n_attrs)`` hold lo columns, ``[n_attrs, 2*n_attrs)`` hi
+    columns; attributes beyond ``lo.shape[1]`` (width padding in segmented
+    packs) are left ``lo = hi = 0`` on *both* operands, which always
+    overlaps and so never filters a pair.
+    """
+    n, l = lo.shape
+    p = np.zeros((n, LANES), np.int32)
+    p[:, :l] = lo.astype(np.int32)
+    p[:, n_attrs : n_attrs + l] = hi.astype(np.int32)
+    return p
+
+
 def range_join_pairs(
     q_lo: np.ndarray,
     q_hi: np.ndarray,
@@ -79,7 +124,10 @@ def range_join_pairs(
     """All (query row, table row) index pairs whose boxes overlap.
 
     Kernel-accelerated replacement for the broadcasting pass inside
-    ``repro.core.query.theta_join``.
+    ``repro.core.query.theta_join``.  Raises for joins the kernel cannot
+    express faithfully (lane capacity, int32 overflow) — the caller's
+    routing (``repro.core.query._kernel_pairs``) checks the same gates and
+    falls back to numpy before ever reaching this point.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -87,31 +135,84 @@ def range_join_pairs(
     nr = r_lo.shape[0]
     if nq == 0 or nr == 0:
         return np.zeros(0, np.int64), np.zeros(0, np.int64)
-    assert 2 * l <= LANES
-
-    def pack(lo, hi):
-        n = lo.shape[0]
-        p = np.zeros((n, LANES), np.int32)
-        p[:, :l] = lo.astype(np.int32)
-        p[:, l : 2 * l] = hi.astype(np.int32)
-        return p
-
-    qp = _pad_rows(pack(q_lo, q_hi), block_q, 0)
-    rp = _pad_rows(pack(r_lo, r_hi), block_r, 0)
-    # make padded rows empty boxes: lo=1, hi=0 (overlap nothing)
-    if qp.shape[0] > nq:
-        qp[nq:, :l] = 1
-        qp[nq:, l : 2 * l] = 0
-    if rp.shape[0] > nr:
-        rp[nr:, :l] = 1
-        rp[nr:, l : 2 * l] = 0
+    check_lane_capacity(l)
+    _require_int32(q_lo, q_hi, r_lo, r_hi)
     mask = range_join_mask(
-        jnp.asarray(qp),
-        jnp.asarray(rp),
+        jnp.asarray(_pack_boxes(q_lo, q_hi, l)),
+        jnp.asarray(_pack_boxes(r_lo, r_hi, l)),
         n_attrs=l,
         block_q=block_q,
         block_r=block_r,
         interpret=interpret,
     )
-    qi, ri = np.nonzero(np.asarray(mask[:nq, :nr]))
+    qi, ri = np.nonzero(np.asarray(mask))
     return qi.astype(np.int64), ri.astype(np.int64)
+
+
+def segmented_range_join_pairs(
+    segments: "list[tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]]",
+    block_q: int = 256,
+    block_r: int = 256,
+    interpret: bool | None = None,
+) -> tuple[list[tuple[np.ndarray, np.ndarray]], dict]:
+    """Many independent range joins in **one** kernel launch.
+
+    ``segments`` is a list of ``(q_lo, q_hi, r_lo, r_hi)`` joins.  All
+    segments are packed into a single ``[NQ, 128] × [NR, 128]`` invocation:
+    attribute widths are padded to the widest segment (spare attributes
+    carry ``lo = hi = 0`` on both sides, never filtering), and one extra
+    spare-lane attribute holds the *segment id* with ``lo = hi = segment``
+    so rows only match within their own join.  Returns the per-segment
+    ``(qi, ri)`` pair lists (row-major order, identical to a per-segment
+    dense evaluation) plus occupancy info for ``io_stats``.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if not segments:
+        return [], {"rows": 0, "rows_padded": 0, "launches": 0}
+    l_max = max(s[0].shape[1] for s in segments)
+    n_attrs = l_max + 1  # + segment-id lane pair
+    check_lane_capacity(l_max, segmented=True)
+    for q_lo, q_hi, r_lo, r_hi in segments:
+        _require_int32(q_lo, q_hi, r_lo, r_hi)
+
+    def pack_side(arrs: list[tuple[np.ndarray, np.ndarray]]) -> np.ndarray:
+        rows = []
+        for seg, (lo, hi) in enumerate(arrs):
+            p = _pack_boxes(lo, hi, n_attrs)
+            p[:, l_max] = seg  # segment id: lo = hi = seg
+            p[:, n_attrs + l_max] = seg
+            rows.append(p)
+        return np.concatenate(rows, axis=0)
+
+    qp = pack_side([(s[0], s[1]) for s in segments])
+    rp = pack_side([(s[2], s[3]) for s in segments])
+    q_off = np.cumsum([0] + [s[0].shape[0] for s in segments])
+    r_off = np.cumsum([0] + [s[2].shape[0] for s in segments])
+    mask = range_join_mask(
+        jnp.asarray(qp),
+        jnp.asarray(rp),
+        n_attrs=n_attrs,
+        block_q=block_q,
+        block_r=block_r,
+        interpret=interpret,
+    )
+    qi, ri = np.nonzero(np.asarray(mask))
+    # pairs are qi-major and the segment lane confines ri to the segment's
+    # own column range, so one cut per segment recovers the per-join lists
+    cuts = np.searchsorted(qi, q_off[1:-1])
+    out = []
+    for seg, (qs, rs) in enumerate(
+        zip(np.split(qi, cuts), np.split(ri, cuts))
+    ):
+        out.append(
+            (
+                (qs - q_off[seg]).astype(np.int64),
+                (rs - r_off[seg]).astype(np.int64),
+            )
+        )
+    rows = int(qp.shape[0] + rp.shape[0])
+    rows_padded = int(
+        -(-qp.shape[0] // block_q) * block_q + -(-rp.shape[0] // block_r) * block_r
+    )
+    return out, {"rows": rows, "rows_padded": rows_padded, "launches": 1}

@@ -12,7 +12,17 @@ round-trips through HBM.  The attribute axis (≤ a few) is carried in the
 lane dimension of each operand tile.
 
 Inputs are packed ``[N, 2*l]`` int32 (lo columns then hi columns), padded to
-128 lanes; the mask output block is ``(block_q, block_r)`` int32.
+128 lanes; the mask output block is ``(block_q, block_r)`` int32.  Row
+counts need **not** be multiples of the block sizes: the kernel pads both
+operands internally with *empty* boxes (``lo = 1, hi = 0`` — they overlap
+nothing) and slices the padding back off the mask, so callers hand in
+natural row counts.
+
+Batched (multi-join) invocations pack a *segment id* into a spare lane as
+one more interval attribute with ``lo = hi = segment``: two rows overlap on
+that attribute iff they belong to the same segment, so one kernel launch
+evaluates many independent joins with their masks kept separable — see
+``repro.kernels.ops.segmented_range_join_pairs``.
 """
 
 from __future__ import annotations
@@ -26,6 +36,25 @@ from jax.experimental import pallas as pl
 LANES = 128
 
 
+def check_lane_capacity(n_attrs: int, segmented: bool = False) -> None:
+    """Raise when ``n_attrs`` interval attributes cannot fit one tile.
+
+    Each attribute needs a lo and a hi lane; a segmented (batched) launch
+    additionally spends one attribute on the segment id.  Beyond this the
+    dense route must run on the numpy path — callers that want the silent
+    fallback check before packing, so reaching the kernel over-capacity is
+    a hard error, not a degradation.
+    """
+    total = n_attrs + (1 if segmented else 0)
+    if 2 * total > LANES:
+        raise ValueError(
+            f"range_join_mask lane capacity exceeded: {n_attrs} attributes"
+            f"{' + 1 segment lane' if segmented else ''} need {2 * total} "
+            f"lanes but one tile has {LANES}; route this join to the numpy "
+            f"dense path instead"
+        )
+
+
 def _kernel(q_ref, r_ref, out_ref, *, n_attrs: int):
     q = q_ref[...]  # [TQ, LANES]
     r = r_ref[...]  # [TR, LANES]
@@ -37,6 +66,16 @@ def _kernel(q_ref, r_ref, out_ref, *, n_attrs: int):
         r_hi = r[:, n_attrs + j][None, :]
         ok &= (q_lo <= r_hi) & (r_lo <= q_hi)
     out_ref[...] = ok.astype(jnp.int32)
+
+
+def _pad_empty(packed: jax.Array, n: int, mult: int, n_attrs: int) -> jax.Array:
+    """Pad rows to a multiple of ``mult`` with empty boxes (lo=1, hi=0)."""
+    pad = (-n) % mult
+    if pad == 0:
+        return packed
+    lane = jnp.arange(LANES)
+    row = jnp.where(lane < n_attrs, 1, 0).astype(jnp.int32)  # hi lanes stay 0
+    return jnp.concatenate([packed, jnp.tile(row, (pad, 1))], axis=0)
 
 
 @functools.partial(
@@ -53,15 +92,18 @@ def range_join_mask(
 ) -> jax.Array:
     """Overlap mask for padded ``[NQ, 128]`` × ``[NR, 128]`` int32 boxes.
 
-    Row counts must be multiples of the block sizes; pad with empty boxes
-    (``lo = 1, hi = 0``) which overlap nothing.
+    Arbitrary row counts: operands are padded internally to the block grid
+    with empty boxes and the returned mask is sliced back to ``[NQ, NR]``.
     """
+    check_lane_capacity(n_attrs)
     nq, lanes = q_packed.shape
     nr, lanes_r = r_packed.shape
-    assert lanes == LANES and lanes_r == LANES
-    assert nq % block_q == 0 and nr % block_r == 0
-    grid = (nq // block_q, nr // block_r)
-    return pl.pallas_call(
+    if lanes != LANES or lanes_r != LANES:
+        raise ValueError(f"operands must be packed to {LANES} lanes")
+    qp = _pad_empty(q_packed, nq, block_q, n_attrs)
+    rp = _pad_empty(r_packed, nr, block_r, n_attrs)
+    grid = (qp.shape[0] // block_q, rp.shape[0] // block_r)
+    mask = pl.pallas_call(
         functools.partial(_kernel, n_attrs=n_attrs),
         grid=grid,
         in_specs=[
@@ -69,6 +111,7 @@ def range_join_mask(
             pl.BlockSpec((block_r, LANES), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((block_q, block_r), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((nq, nr), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((qp.shape[0], rp.shape[0]), jnp.int32),
         interpret=interpret,
-    )(q_packed, r_packed)
+    )(qp, rp)
+    return mask[:nq, :nr]

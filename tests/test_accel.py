@@ -1,0 +1,311 @@
+"""Batched accelerator execution of plan steps (ISSUE 5).
+
+The contract under test: the :class:`BatchedJoinExecutor` — packing a plan
+frontier's dense joins into one blocked evaluation — returns **bit-identical**
+results to the serial per-hop join loop, for DSLog and ShardedDSLog, serial
+and ``parallel=N``; and the Pallas dense path's padding, int32-overflow, and
+lane-capacity limits are enforced instead of silently wrong.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.catalog import DSLog
+from repro.core.query import (
+    BatchedJoinExecutor,
+    JoinRequest,
+    QueryBox,
+    dense_backend,
+    theta_join,
+    theta_join_batch,
+    theta_join_inverse_batch,
+)
+from repro.core.shard import ShardedDSLog
+from repro.core.table import CompressedTable
+
+from test_shard import SHAPE, SIDE, _build_random_dag
+
+rng = np.random.default_rng(11)
+
+
+def _random_table(nr, l=2, m=2, span=500, seed=None):
+    r = np.random.default_rng(seed if seed is not None else rng.integers(1 << 30))
+    key_lo = r.integers(0, span, (nr, l))
+    key_hi = key_lo + r.integers(0, 4, (nr, l))
+    val_lo = r.integers(-3, 0, (nr, m))
+    val_hi = val_lo + r.integers(0, 6, (nr, m))
+    return CompressedTable(
+        key_shape=(span + 10,) * l,
+        val_shape=(span + 10,) * m,
+        key_lo=key_lo,
+        key_hi=key_hi,
+        val_lo=val_lo,
+        val_hi=val_hi,
+        val_ref=r.integers(0, l, (nr, m)),
+    )
+
+
+def _boxes(shape, n, span=400, width=30, seed=0):
+    r = np.random.default_rng(seed)
+    lo = r.integers(0, span, (n, len(shape)))
+    return QueryBox(shape, lo, lo + r.integers(0, width, (n, len(shape))))
+
+
+def _assert_boxes_equal(a, b):
+    assert a.shape == b.shape
+    assert a.lo.tobytes() == b.lo.tobytes()
+    assert a.hi.tobytes() == b.hi.tobytes()
+
+
+# --------------------------------------------------------------------------- #
+# Executor parity vs the per-request joins
+# --------------------------------------------------------------------------- #
+def test_executor_matches_per_request_joins_exactly():
+    """Every route/direction/merge combination, one packed run."""
+    reqs, oracle = [], []
+    for trial in range(10):
+        t = _random_table(int(rng.integers(1, 2000)))
+        inverse = trial % 2 == 1
+        shape = t.val_shape if inverse else t.key_shape
+        qs = [
+            _boxes(shape, int(rng.integers(0, 25)), seed=trial * 7 + j)
+            for j in range(int(rng.integers(0, 3)))
+        ]
+        for path in ("auto", "dense", "index", "batched"):
+            merge = (trial + len(reqs)) % 3 == 0
+            reqs.append(
+                JoinRequest(qs, t, inverse=inverse, merge=merge, path=path)
+            )
+            fn = theta_join_inverse_batch if inverse else theta_join_batch
+            oracle.append(fn(qs, t, merge=merge, path=path))
+    got = BatchedJoinExecutor().run(reqs)
+    assert len(got) == len(oracle)
+    for g_list, w_list in zip(got, oracle):
+        assert len(g_list) == len(w_list)
+        for g, w in zip(g_list, w_list):
+            _assert_boxes_equal(g, w)
+
+
+def test_executor_worker_count_is_bit_identical():
+    reqs = [
+        JoinRequest(
+            [_boxes((510,) * 2, 40, seed=k)],
+            _random_table(600, seed=k),
+            merge=False,
+            path="dense",
+        )
+        for k in range(9)
+    ]
+    want = BatchedJoinExecutor().run(reqs)
+    for workers in (2, 4, 9):
+        got = BatchedJoinExecutor().run(reqs, workers=workers)
+        for g_list, w_list in zip(got, want):
+            for g, w in zip(g_list, w_list):
+                _assert_boxes_equal(g, w)
+
+
+# --------------------------------------------------------------------------- #
+# Property test: batched prov_query == per-hop oracle on random DAGs
+# --------------------------------------------------------------------------- #
+@settings(max_examples=10, deadline=None)
+@given(
+    n_ops=st.integers(4, 9),
+    seed=st.integers(0, 10_000),
+    n_shards=st.sampled_from([1, 4]),
+)
+def test_batched_execution_equals_perhop_oracle(n_ops, seed, n_shards):
+    log = DSLog()
+    sharded = ShardedDSLog(n_shards=n_shards)
+    names = _build_random_dag([log, sharded], n_ops, seed)
+    r = np.random.default_rng(seed + 1)
+    cells = np.stack([r.integers(0, SIDE, 3), r.integers(0, SIDE, 3)], axis=1)
+    src, dst = names[0], names[-1]
+    for store in (log, sharded):
+        for s, t, q in [(src, dst, cells), (dst, src, cells[:1])]:
+            want = store.prov_query(s, t, q, batched=False)
+            for kw in (
+                dict(batched=True),
+                dict(batched=True, parallel=2),
+                dict(batched=True, parallel=4),
+            ):
+                got = store.prov_query(s, t, q, **kw)
+                _assert_boxes_equal(got, want)
+        # path form through the same engines
+        path = [src, names[1], names[2]]
+        want = store.prov_query(path, cells, batched=False)
+        got = store.prov_query(path, cells, batched=True)
+        _assert_boxes_equal(got, want)
+
+
+def test_batch_and_multi_target_forms_parity():
+    log = DSLog()
+    names = _build_random_dag([log], 7, seed=42)
+    r = np.random.default_rng(5)
+    cells = np.stack([r.integers(0, SIDE, 4), r.integers(0, SIDE, 4)], axis=1)
+    src, dst = names[0], names[-1]
+    want = log.prov_query_batch(src, dst, [cells, cells[:2]], batched=False)
+    got = log.prov_query_batch(src, dst, [cells, cells[:2]], batched=True)
+    for g, w in zip(got, want):
+        _assert_boxes_equal(g, w)
+    mids = [names[2], dst]
+    want_m = log.prov_query(src, mids, cells, batched=False)
+    got_m = log.prov_query(src, mids, cells, batched=True, parallel=2)
+    assert set(got_m) == set(want_m)
+    for k in want_m:
+        _assert_boxes_equal(got_m[k], want_m[k])
+
+
+# --------------------------------------------------------------------------- #
+# io_stats batching meters
+# --------------------------------------------------------------------------- #
+def test_io_stats_meter_batched_dispatches():
+    log = DSLog()
+    names = _build_random_dag([log], 6, seed=9)
+    cells = np.array([[1, 2], [5, 6]])
+    base = dict(log.io_stats)
+    log.prov_query(names[0], names[-1], cells, batched=True)
+    assert log.io_stats["kernel_launches"] > base["kernel_launches"]
+    assert log.io_stats["joins_packed"] > base["joins_packed"]
+    assert (
+        log.io_stats["batch_rows_padded"] >= log.io_stats["batch_rows"] > 0
+    )
+    # per-hop loop does not touch the batching meters
+    base = dict(log.io_stats)
+    log.prov_query(names[0], names[-1], cells, batched=False)
+    assert log.io_stats["kernel_launches"] == base["kernel_launches"]
+
+
+def test_sharded_io_stats_aggregate_batching_counters():
+    sharded = ShardedDSLog(n_shards=2)
+    names = _build_random_dag([sharded], 6, seed=9)
+    sharded.prov_query(names[0], names[-1], np.array([[1, 2]]), batched=True)
+    assert sharded.io_stats["kernel_launches"] > 0
+
+
+# --------------------------------------------------------------------------- #
+# Bugfix: int32 overflow routes to the numpy dense path
+# --------------------------------------------------------------------------- #
+def _huge_coord_table(n=40):
+    """Value bounds beyond 2**31: an int32 pack would silently wrap."""
+    big = np.int64(2) ** 33
+    r = np.random.default_rng(0)
+    key_lo = r.integers(0, 50, (n, 1))
+    key_hi = key_lo + r.integers(0, 3, (n, 1))
+    val_lo = key_lo * (big // 50)
+    val_hi = val_lo + 5
+    return CompressedTable(
+        key_shape=(100,),
+        val_shape=(int(big * 2),),
+        key_lo=key_lo,
+        key_hi=key_hi,
+        val_lo=val_lo,
+        val_hi=val_hi,
+        val_ref=np.full((n, 1), -1),
+    )
+
+
+def test_int64_coordinates_join_correctly_via_numpy_dense():
+    t = _huge_coord_table()
+    q = QueryBox((100,), np.array([[0]]), np.array([[60]]))
+    res = theta_join(q, t, merge=False, path="dense")
+    # oracle: every overlapping key row contributes its value interval
+    hits = (t.key_lo[:, 0] <= 60) & (t.key_hi[:, 0] >= 0)
+    assert res.n_rows == int(hits.sum())
+    assert res.lo.min() >= 0 and res.hi.max() >= 2**31  # no wraparound
+    # inverse direction probes the huge value bounds
+    qv = QueryBox(t.val_shape, t.val_lo[:1], t.val_hi[:1])
+    res_inv = theta_join_inverse_batch([qv], t, merge=False, path="dense")[0]
+    assert res_inv.n_rows >= 1
+
+
+def test_kernel_path_refuses_int64_and_twin_handles_it(monkeypatch):
+    from repro.core import query as qmod
+    from repro.kernels import ops
+
+    big = np.full((4, 2), 2**31 + 7, np.int64)
+    small = np.zeros((4, 2), np.int64)
+    # the packer raises loudly instead of wrapping
+    with pytest.raises(ValueError, match="int32"):
+        ops.range_join_pairs(big, big, big, big)
+    # _kernel_pairs routes away (returns None) even when a device is claimed
+    monkeypatch.setattr(ops, "default_interpret", lambda: False)
+    assert qmod._kernel_pairs(big, big, small, small + 10) is None
+
+
+def test_executor_skips_kernel_pack_for_overflowing_segment():
+    """With a forced non-interpret executor, int64 segments take the twin."""
+    t_small = _random_table(80, seed=1)
+    t_big = _huge_coord_table()
+    qv = QueryBox(t_big.val_shape, t_big.val_lo[:2] - 1, t_big.val_hi[:2] + 1)
+    reqs = [
+        JoinRequest([_boxes(t_small.key_shape, 10)], t_small, path="dense"),
+        JoinRequest([qv], t_big, inverse=True, path="dense"),
+    ]
+    want = [
+        theta_join_batch(reqs[0].queries, t_small, path="dense"),
+        theta_join_inverse_batch([qv], t_big, path="dense"),
+    ]
+    # interpret=True: everything through the twin (this container has no TPU;
+    # the kernel-eligibility partition itself is covered by fits_int32 tests)
+    got = BatchedJoinExecutor(interpret=True).run(reqs)
+    for g_list, w_list in zip(got, want):
+        for g, w in zip(g_list, w_list):
+            _assert_boxes_equal(g, w)
+
+
+# --------------------------------------------------------------------------- #
+# Bugfix: lane capacity is an explicit limit, visible in plan.describe()
+# --------------------------------------------------------------------------- #
+def test_high_dimensional_table_joins_via_numpy(monkeypatch):
+    """65 key attributes: 2*65 > 128 lanes — kernel refuses, numpy serves."""
+    from repro.kernels import ops
+
+    l = 65
+    n = 30
+    r = np.random.default_rng(3)
+    key_lo = r.integers(0, 4, (n, l))
+    t = CompressedTable(
+        key_shape=(8,) * l,
+        val_shape=(8,),
+        key_lo=key_lo,
+        key_hi=key_lo + 1,
+        val_lo=r.integers(0, 4, (n, 1)),
+        val_hi=r.integers(4, 8, (n, 1)),
+        val_ref=np.full((n, 1), -1),
+    )
+    q = QueryBox((8,) * l, np.zeros((2, l)), np.full((2, l), 7))
+    res = theta_join(q, t, merge=False, path="dense")
+    assert res.n_rows == 2 * n  # full overlap: every (row, box) pair
+    with pytest.raises(ValueError, match="lane capacity"):
+        ops.range_join_pairs(key_lo, key_lo + 1, key_lo, key_lo + 1)
+    # even with a device claimed, the dense route must fall back, not raise
+    monkeypatch.setattr(ops, "default_interpret", lambda: False)
+    from repro.core.query import _kernel_pairs
+
+    assert _kernel_pairs(q.lo, q.hi, t.key_lo, t.key_hi) is None
+    assert dense_backend(l) == "np:wide"
+
+
+def test_describe_shows_route_backend_notes():
+    log = DSLog(store_forward=True)
+    log.define_array("a", SHAPE)
+    log.define_array("b", SHAPE)
+    from repro.core.capture import identity_lineage
+
+    log.add_lineage("a", "b", identity_lineage(SHAPE))
+    plan = log.planner.plan("a", ["b"])
+    text = plan.describe()
+    assert "batched(" in text  # routing decision + backend note are visible
+    assert "np:" in text  # this container has no TPU
+    # the per-hop engine plans the same hops as plain dense
+    log.planner.batched = False
+    assert "dense" in log.planner.plan("a", ["b"]).describe()
+    log.planner.batched = True
+
+
+def test_sharded_describe_shows_notes():
+    sharded = ShardedDSLog(n_shards=2)
+    names = _build_random_dag([sharded], 5, seed=2)
+    text = sharded.planner.plan(names[0], [names[-1]]).describe()
+    assert "(" in text and "np:" in text

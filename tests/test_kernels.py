@@ -106,3 +106,73 @@ def test_range_join_empty_inputs():
         np.zeros((0, 2)), np.zeros((0, 2)), np.zeros((5, 2)), np.ones((5, 2))
     )
     assert qi.size == 0 and ri.size == 0
+
+
+@pytest.mark.parametrize("nq", [255, 256, 257])
+@pytest.mark.parametrize("nr", [255, 256, 257])
+def test_range_join_internal_padding_at_block_boundaries(nq, nr):
+    """Regression (ISSUE 5): the kernel pads internally — row counts that
+    are not block multiples must work and padded rows must never match."""
+    l = 2
+    q_lo = rng.integers(0, 40, (nq, l))
+    q_hi = q_lo + rng.integers(0, 5, (nq, l))
+    r_lo = rng.integers(0, 40, (nr, l))
+    r_hi = r_lo + rng.integers(0, 5, (nr, l))
+    qi, ri = range_join_pairs(q_lo, q_hi, r_lo, r_hi, block_q=256, block_r=256)
+    ov = np.ones((nq, nr), bool)
+    for j in range(l):
+        ov &= (q_lo[:, j : j + 1] <= r_hi[None, :, j]) & (
+            r_lo[None, :, j] <= q_hi[:, j : j + 1]
+        )
+    wq, wr = np.nonzero(ov)
+    np.testing.assert_array_equal(qi, wq)
+    np.testing.assert_array_equal(ri, wr)
+
+
+def test_range_join_mask_unpadded_rows_direct():
+    """range_join_mask itself accepts non-multiple row counts (the old
+    ``nq % block_q == 0`` assert forced callers to pre-pad)."""
+    q = np.zeros((255, 128), np.int32)
+    r = np.zeros((130, 128), np.int32)
+    q[:, :1] = rng.integers(0, 9, (255, 1))
+    q[:, 1:2] = q[:, :1] + 1
+    r[:, :1] = rng.integers(0, 9, (130, 1))
+    r[:, 1:2] = r[:, :1] + 1
+    mask = range_join_mask(
+        jnp.asarray(q), jnp.asarray(r), n_attrs=1, block_q=128, block_r=128,
+        interpret=True,
+    )
+    assert mask.shape == (255, 130)
+    want = (q[:, :1] <= r[None, :, 1]) & (r[None, :, 0] <= q[:, 1:2])
+    np.testing.assert_array_equal(np.asarray(mask).astype(bool), want)
+
+
+def test_range_join_mask_lane_capacity_raises():
+    q = np.zeros((8, 128), np.int32)
+    with pytest.raises(ValueError, match="lane capacity"):
+        range_join_mask(
+            jnp.asarray(q), jnp.asarray(q), n_attrs=65, interpret=True
+        )
+
+
+def test_segmented_pack_matches_per_segment_joins():
+    """One launch, many joins: segment-id lanes keep the masks separable,
+    mixed attribute widths ride the same pack."""
+    from repro.kernels.ops import segmented_range_join_pairs
+
+    segs = []
+    for l in (1, 3, 2, 1):
+        nq, nr = int(rng.integers(1, 50)), int(rng.integers(1, 70))
+        q_lo = rng.integers(0, 25, (nq, l))
+        q_hi = q_lo + rng.integers(0, 5, (nq, l))
+        r_lo = rng.integers(0, 25, (nr, l))
+        r_hi = r_lo + rng.integers(0, 5, (nr, l))
+        segs.append((q_lo, q_hi, r_lo, r_hi))
+    got, info = segmented_range_join_pairs(
+        segs, block_q=64, block_r=64, interpret=True
+    )
+    assert info["launches"] == 1 and info["rows_padded"] >= info["rows"] > 0
+    for (q_lo, q_hi, r_lo, r_hi), (qi, ri) in zip(segs, got):
+        wq, wr = range_join_pairs(q_lo, q_hi, r_lo, r_hi, block_q=64, block_r=64)
+        np.testing.assert_array_equal(qi, wq)
+        np.testing.assert_array_equal(ri, wr)
