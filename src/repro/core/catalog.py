@@ -40,12 +40,12 @@ from __future__ import annotations
 import hashlib
 import json
 import os
-import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from . import _locks
 from .commit import CommitPipeline, WriterLease
 from .graph import CycleError, LineageGraph
 from .index import IntervalIndex
@@ -123,22 +123,65 @@ def _atomic_write(path: str, payload: str) -> None:
     os.replace(tmp, path)
 
 
+def _write_blob(path: str, blob: bytes) -> None:
+    """Write a manifest-referenced blob durably (write + fsync).
+
+    The manifest only becomes visible through :func:`_atomic_write`'s
+    rename; every blob it references must already be on stable storage by
+    then, or a crash right after the rename could publish a manifest
+    pointing at torn blobs.  Module-level because ``ShardedDSLog`` borrows
+    the ``DSLog`` writer methods that call it.
+    """
+    with open(path, "wb") as f:
+        f.write(blob)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def is_catalog_blob(fn: str) -> bool:
+    """Is ``fn`` a blob the catalog owns (and may therefore vacuum)?
+
+    Shared by :func:`_vacuum_dir`'s sweep and ``repro.tools.fsck``'s
+    orphan-blob check so GC and verification agree on ownership.
+    """
+    return (fn.startswith("lineage_") and fn.endswith((".prvc", ".idx"))) or (
+        fn.startswith("sig_") and fn.endswith(".prvc")
+    )
+
+
+def manifest_referenced_files(lineage_recs, predictor_chunk) -> set[str]:
+    """The blob closure of a manifest: every file its records reference.
+
+    ``lineage_recs`` is an iterable of persisted lineage records (the
+    manifest's ``lineage`` list, or ``DSLog._persisted.values()`` — same
+    schema); ``predictor_chunk`` is the manifest's ``predictor`` chunk or
+    ``None``.  Single source of truth shared by :meth:`DSLog.compact` and
+    ``repro.tools.fsck``, so the vacuum and the orphan check can't drift.
+    """
+    referenced = {"catalog.json"}
+    for rec in lineage_recs:
+        for key in ("file", "idx", "fwd", "fwd_idx"):
+            if rec.get(key):
+                referenced.add(rec[key])
+    if predictor_chunk:
+        for rec in predictor_chunk.get("sigs", []):
+            referenced.update(rec.get("tables", {}).values())
+    return referenced
+
+
 def _vacuum_dir(root: str, referenced: set[str]) -> dict[str, int]:
     """Delete catalog-owned blob files under ``root`` not in ``referenced``.
 
     Only files matching the catalog's own naming patterns
-    (``lineage_*.prvc/.idx``, ``sig_*.prvc``) are candidates; anything else
-    in the directory is left alone.
+    (:func:`is_catalog_blob`) are candidates; anything else in the
+    directory is left alone.
     """
     removed = reclaimed = 0
     for fn in os.listdir(root):
         path = os.path.join(root, fn)
         if not os.path.isfile(path) or fn in referenced:
             continue
-        owned = (fn.startswith("lineage_") and fn.endswith((".prvc", ".idx"))) or (
-            fn.startswith("sig_") and fn.endswith(".prvc")
-        )
-        if not owned:
+        if not is_catalog_blob(fn):
             continue
         reclaimed += os.path.getsize(path)
         os.remove(path)
@@ -297,24 +340,32 @@ class DSLog:
         # since the last save/load — what a sharded root consults to decide
         # whether this shard's manifest needs rewriting at all
         self._meta_dirty = False
+        self._stats_lock = _locks.new_rlock("catalog._stats_lock")
         # measured per-hop selectivities: "lid:stored:side" -> [pairs, qrows]
-        self.hop_stats: dict[str, list[float]] = {}
+        self.hop_stats: dict[str, list[float]] = _locks.guard_mapping(
+            {}, self._stats_lock, "DSLog.hop_stats"
+        )
         # versioned-name counters for in-place ops: base name -> latest k
         self._versions: dict[str, int] = {}
-        self.io_stats = {
-            "tables_loaded": 0,
-            "tables_written": 0,
-            "manifests_written": 0,
-            "sig_tables_written": 0,
-            "bytes_written": 0,
-            # batched plan-step execution: packed dense dispatches (device
-            # kernel launches, or their CPU-twin equivalents), how many
-            # joins rode each, and pack occupancy (rows used vs padded)
-            "kernel_launches": 0,
-            "joins_packed": 0,
-            "batch_rows": 0,
-            "batch_rows_padded": 0,
-        }
+        self.io_stats = _locks.guard_mapping(
+            {
+                "tables_loaded": 0,
+                "tables_written": 0,
+                "manifests_written": 0,
+                "sig_tables_written": 0,
+                "bytes_written": 0,
+                # batched plan-step execution: packed dense dispatches
+                # (device kernel launches, or their CPU-twin equivalents),
+                # how many joins rode each, and pack occupancy (rows used
+                # vs padded)
+                "kernel_launches": 0,
+                "joins_packed": 0,
+                "batch_rows": 0,
+                "batch_rows_padded": 0,
+            },
+            self._stats_lock,
+            "DSLog.io_stats",
+        )
         # durability subsystem (attached by open()/load(); None = legacy
         # explicit-save store with no write-ahead log)
         self._wal: WriteAheadLog | None = None
@@ -323,13 +374,26 @@ class DSLog:
         self._wal_lsn = 0  # manifest checkpoint LSN: replay starts past it
         self._replaying = False
         self._closed = False
-        self._stats_lock = threading.RLock()
         if root:
             os.makedirs(root, exist_ok=True)
 
     def _bump(self, key: str, n: int = 1) -> None:
         with self._stats_lock:
             self.io_stats[key] = self.io_stats.get(key, 0) + n
+
+    def _drop_hop_stats(self, lineage_id: int) -> None:
+        """Forget measured selectivities for one entry, under the stats lock.
+
+        Deletes in place — never rebinds ``hop_stats`` — so concurrent
+        readers (and the race detector's guard wrapper) keep observing the
+        same mapping object.
+        """
+        with self._stats_lock:
+            stale = [
+                k for k in self.hop_stats if int(k.split(":", 1)[0]) == lineage_id
+            ]
+            for k in stale:
+                del self.hop_stats[k]
 
     @property
     def dirty(self) -> bool:
@@ -460,12 +524,7 @@ class DSLog:
             fwd.invalidate_index()
         self._dirty.add(lineage_id)
         self._meta_dirty = True
-        with self._stats_lock:
-            self.hop_stats = {
-                k: v
-                for k, v in self.hop_stats.items()
-                if int(k.split(":", 1)[0]) != lineage_id
-            }
+        self._drop_hop_stats(lineage_id)
         blobs = [bwd.serialize(compress=self.gzip)]
         meta = {"id": lineage_id, "fwd": fwd is not None}
         if fwd is not None:
@@ -739,11 +798,7 @@ class DSLog:
             raise KeyError(f"no lineage entry {lineage_id}")
         self._remove_entry(lineage_id)
         self._persisted.pop(lineage_id, None)
-        self.hop_stats = {
-            k: v
-            for k, v in self.hop_stats.items()
-            if int(k.split(":", 1)[0]) != lineage_id
-        }
+        self._drop_hop_stats(lineage_id)
         for op in self.ops:
             if lineage_id in op.lineage_ids:
                 op.lineage_ids.remove(lineage_id)
@@ -1128,11 +1183,9 @@ class DSLog:
             self._wal_lsn = self._wal.checkpoint()
 
     def _write_entry(self, e: LineageEntry) -> dict:
-        assert self.root is not None
         fn = f"lineage_{e.lineage_id}.prvc"
         blob = e.backward.serialize(compress=self.gzip)
-        with open(os.path.join(self.root, fn), "wb") as f:
-            f.write(blob)
+        _write_blob(os.path.join(self.root, fn), blob)
         self._bump("tables_written")
         self._bump("bytes_written", len(blob))
         rec = {
@@ -1151,8 +1204,7 @@ class DSLog:
         if e.forward is not None:
             fwd_fn = f"lineage_{e.lineage_id}_fwd.prvc"
             blob = e.forward.serialize(compress=self.gzip)
-            with open(os.path.join(self.root, fwd_fn), "wb") as f:
-                f.write(blob)
+            _write_blob(os.path.join(self.root, fwd_fn), blob)
             self._bump("tables_written")
             self._bump("bytes_written", len(blob))
             rec["fwd"] = fwd_fn
@@ -1169,8 +1221,7 @@ class DSLog:
         def save_table(key: str, label: str, tbl: CompressedTable) -> str:
             fn = _sig_blob_name(key, label)
             blob = tbl.serialize(compress=self.gzip)
-            with open(os.path.join(root, fn), "wb") as f:
-                f.write(blob)
+            _write_blob(os.path.join(root, fn), blob)
             self._bump("sig_tables_written")
             self._bump("bytes_written", len(blob))
             return fn
@@ -1187,8 +1238,7 @@ class DSLog:
             return None
         idx = cached if cached is not None else table.key_index()
         blob = idx.to_bytes()
-        with open(os.path.join(self.root, fn), "wb") as f:
-            f.write(blob)
+        _write_blob(os.path.join(self.root, fn), blob)
         self._bump("bytes_written", len(blob))
         return fn
 
@@ -1218,7 +1268,9 @@ class DSLog:
             return t
 
         def on_load() -> None:
-            self.io_stats["tables_loaded"] += 1
+            # fired from TableHandle.get under arbitrary threads (parallel
+            # plan execution) — must take the stats lock like every meter
+            self._bump("tables_loaded")
 
         return TableHandle(load, None if rows is None else int(rows), on_load)
 
@@ -1297,9 +1349,10 @@ class DSLog:
         log._versions = {
             k: int(v) for k, v in meta.get("versions", {}).items()
         }
-        log.hop_stats = {
-            k: [float(x) for x in v] for k, v in meta.get("hops", {}).items()
-        }
+        with log._stats_lock:
+            log.hop_stats.update(
+                {k: [float(x) for x in v] for k, v in meta.get("hops", {}).items()}
+            )
         log.hop_decay = float(meta.get("hop_decay", log.hop_decay))
         log._meta_dirty = False
         log._wal_lsn = int(meta.get("wal_lsn", 0))
@@ -1328,14 +1381,9 @@ class DSLog:
         for lid in list(self._persisted):
             if lid not in self.lineage:
                 del self._persisted[lid]
-        referenced = {"catalog.json"}
-        for rec in self._persisted.values():
-            for key in ("file", "idx", "fwd", "fwd_idx"):
-                if rec.get(key):
-                    referenced.add(rec[key])
-        if self._predictor_chunk:
-            for rec in self._predictor_chunk.get("sigs", []):
-                referenced.update(rec.get("tables", {}).values())
+        referenced = manifest_referenced_files(
+            self._persisted.values(), self._predictor_chunk
+        )
         return _vacuum_dir(self.root, referenced)
 
     # ------------------------------------------------------------------ #

@@ -37,6 +37,7 @@ import threading
 import time
 import uuid
 
+from . import _locks
 from .wal import WriteAheadLog
 
 __all__ = ["CommitPipeline", "WriterLease", "LeaseHeldError"]
@@ -195,11 +196,11 @@ class CommitPipeline:
         self._wals: list[WriteAheadLog] = []
         self._dirty: set[int] = set()  # indexes into _wals with pending bytes
         self._pending = 0
-        self._lock = threading.Lock()
+        self._lock = _locks.new_lock("commit._lock")
         # serializes whole flush passes: commit() must wait out a flush the
         # background thread already snapshotted (its fsync may still be in
         # flight after _dirty was cleared) before honoring the barrier
-        self._flush_mutex = threading.Lock()
+        self._flush_mutex = _locks.new_lock("commit._flush_mutex")
         self._wake = threading.Event()
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None

@@ -46,12 +46,12 @@ from __future__ import annotations
 import glob
 import json
 import os
-import threading
 import uuid
 import zlib
 from collections.abc import Mapping
 from dataclasses import dataclass, field
 
+from . import _locks
 from .catalog import (
     ArrayDef,
     DSLog,
@@ -61,6 +61,7 @@ from .catalog import (
     _json_safe,
     _OpRecord,
     _vacuum_dir,
+    manifest_referenced_files,
 )
 from .commit import CommitPipeline, LeaseHeldError, WriterLease
 from .graph import CycleError, LineageGraph
@@ -506,10 +507,20 @@ class ShardedDSLog:
         self._versions: dict[str, int] = {}
         self._array_shard: dict[str, int] = {}
         self._lid_shard: dict[int, int] = {}
-        self._shards: list[DSLog | None] = [None] * self.n_shards
+        self._stats_lock = _locks.new_rlock("shard._stats_lock")
+        # guards lazy shard loading: parallel plan execution may race two
+        # worker threads onto the same cold shard
+        self._shard_load_lock = _locks.new_lock("shard._shard_load_lock")
+        self._shards: list[DSLog | None] = _locks.guard_sequence(
+            [None] * self.n_shards, self._shard_load_lock, "ShardedDSLog._shards"
+        )
         self._predictor_chunk: dict | None = None
         self._meta_dirty = False
-        self._io: dict[str, int] = {"shards_loaded": 0, "boxes_exchanged": 0}
+        self._io: dict[str, int] = _locks.guard_mapping(
+            {"shards_loaded": 0, "boxes_exchanged": 0},
+            self._stats_lock,
+            "ShardedDSLog._io",
+        )
         # durability subsystem (attached by open(); see DSLog for the
         # single-store equivalent).  _exclusive=False is writer mode: this
         # process appends to shard WALs under per-shard leases and never
@@ -523,10 +534,6 @@ class ShardedDSLog:
         self._wal_lsn = 0
         self._replaying = False
         self._closed = False
-        self._stats_lock = threading.RLock()
-        # guards lazy shard loading: parallel plan execution may race two
-        # worker threads onto the same cold shard
-        self._shard_load_lock = threading.Lock()
         if root:
             os.makedirs(root, exist_ok=True)
 
@@ -775,11 +782,7 @@ class ShardedDSLog:
         self._remove_entry(lineage_id)
         sh = self.shard(shard)
         sh._persisted.pop(lineage_id, None)
-        sh.hop_stats = {
-            k: v
-            for k, v in sh.hop_stats.items()
-            if int(k.split(":", 1)[0]) != lineage_id
-        }
+        sh._drop_hop_stats(lineage_id)
         for op in self.ops:
             if lineage_id in op.lineage_ids:
                 op.lineage_ids.remove(lineage_id)
@@ -1243,10 +1246,8 @@ class ShardedDSLog:
             # the facade save() already synced dirty shards
             for key, val in self.shard(k).compact(save=False).items():
                 stats[key] += val
-        referenced = {"catalog.json"}
-        if self._predictor_chunk:
-            for rec in self._predictor_chunk.get("sigs", []):
-                referenced.update(rec.get("tables", {}).values())
+        # the root dir owns no lineage blobs, only predictor sig tables
+        referenced = manifest_referenced_files((), self._predictor_chunk)
         for key, val in _vacuum_dir(self.root, referenced).items():
             stats[key] += val
         return stats

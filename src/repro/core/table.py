@@ -32,13 +32,14 @@ from __future__ import annotations
 
 import io
 import json
-import threading
 import zlib
 from dataclasses import dataclass, field, replace
 
 import numpy as np
 
 from typing import Callable
+
+from . import _locks
 
 from .index import IntervalIndex, interval_stats
 from .relation import LineageRelation
@@ -423,7 +424,7 @@ class TableHandle:
         self._loader = loader
         self._table: CompressedTable | None = None
         self._on_load = on_load
-        self._lock = threading.Lock()
+        self._lock = _locks.new_lock("table._lock")
         self.n_rows = n_rows
 
     @property

@@ -47,9 +47,10 @@ from __future__ import annotations
 import json
 import os
 import struct
-import threading
 import zlib
 from typing import Iterator
+
+from . import _locks
 
 try:  # POSIX advisory locks for shared-mode appends
     import fcntl
@@ -116,13 +117,17 @@ class WriteAheadLog:
     def __init__(self, path: str, shared: bool = False):
         self.path = path
         self.shared = bool(shared)
-        self._lock = threading.Lock()
+        self._lock = _locks.new_lock("wal._lock")
         self._pending: list[bytes] = []  # shared mode: unwritten records
         self._f = None
         self._end = _HEADER_SIZE  # exclusive mode: current file offset
         self._shared_good = _HEADER_SIZE  # shared mode: verified boundary
         self.base_lsn = 0
-        self.stats = {"records": 0, "flushes": 0, "syncs": 0, "bytes": 0}
+        self.stats = _locks.guard_mapping(
+            {"records": 0, "flushes": 0, "syncs": 0, "bytes": 0},
+            self._lock,
+            "WriteAheadLog.stats",
+        )
         self._open()
 
     # ------------------------------------------------------------------ #

@@ -79,6 +79,7 @@ def run_boundaries(
     n = lo.shape[0]
     n_keys = len(group_cols)
     assert n_keys + 2 <= LANES, "too many group columns for one tile"
+    _require_int32(*group_cols, lo, hi)
     packed = np.zeros((n, LANES), np.int32)
     for c, col in enumerate(group_cols):
         packed[:, c] = col.astype(np.int32)
@@ -106,6 +107,7 @@ def _pack_boxes(lo: np.ndarray, hi: np.ndarray, n_attrs: int) -> np.ndarray:
     overlaps and so never filters a pair.
     """
     n, l = lo.shape
+    _require_int32(lo, hi)  # last line of defense at the cast site
     p = np.zeros((n, LANES), np.int32)
     p[:, :l] = lo.astype(np.int32)
     p[:, n_attrs : n_attrs + l] = hi.astype(np.int32)

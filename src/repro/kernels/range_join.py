@@ -65,7 +65,7 @@ def _kernel(q_ref, r_ref, out_ref, *, n_attrs: int):
         r_lo = r[:, j][None, :]
         r_hi = r[:, n_attrs + j][None, :]
         ok &= (q_lo <= r_hi) & (r_lo <= q_hi)
-    out_ref[...] = ok.astype(jnp.int32)
+    out_ref[...] = ok.astype(jnp.int32)  # dslint: ignore[int32-cast] bool mask
 
 
 def _pad_empty(packed: jax.Array, n: int, mult: int, n_attrs: int) -> jax.Array:
@@ -74,7 +74,8 @@ def _pad_empty(packed: jax.Array, n: int, mult: int, n_attrs: int) -> jax.Array:
     if pad == 0:
         return packed
     lane = jnp.arange(LANES)
-    row = jnp.where(lane < n_attrs, 1, 0).astype(jnp.int32)  # hi lanes stay 0
+    # dslint: ignore[int32-cast] constant 0/1 row, hi lanes stay 0
+    row = jnp.where(lane < n_attrs, 1, 0).astype(jnp.int32)
     return jnp.concatenate([packed, jnp.tile(row, (pad, 1))], axis=0)
 
 

@@ -22,7 +22,7 @@ def run_boundaries_ref(packed: jnp.ndarray, n_keys: int) -> jnp.ndarray:
     flags = jnp.concatenate(
         [jnp.ones((1,), jnp.bool_), key_change | not_adjacent]
     )
-    return flags.astype(jnp.int32)
+    return flags.astype(jnp.int32)  # dslint: ignore[int32-cast] bool flags
 
 
 def range_join_mask_ref(
@@ -38,4 +38,4 @@ def range_join_mask_ref(
         & (r_lo[None, :, :] <= q_hi[:, None, :]),
         axis=-1,
     )
-    return ok.astype(jnp.int32)
+    return ok.astype(jnp.int32)  # dslint: ignore[int32-cast] bool mask

@@ -47,6 +47,7 @@ def _kernel(packed_ref, prev_ref, out_ref, *, n_keys: int):
     prev_hi = prev_rows[:, n_keys + 1]
     not_adjacent = lo > prev_hi + 1
 
+    # dslint: ignore[int32-cast] bool flags
     out_ref[...] = (key_change | not_adjacent).astype(jnp.int32)[:, None]
 
 

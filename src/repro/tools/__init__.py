@@ -1,0 +1,20 @@
+"""Correctness-analysis tooling for the DSLog store (ISSUE 6).
+
+Three layers, each usable on its own:
+
+* :mod:`repro.tools.dslint` — AST lint pass enforcing project invariants the
+  type system can't (context-managed locks, the declared lock order, atomic
+  manifest writes, fsynced blob writes, no bare ``except:`` / mutable default
+  args / unguarded int32 casts in kernel packers).
+  Run as ``python -m repro.tools.dslint src/``.
+* :mod:`repro.tools.racecheck` — opt-in dynamic lock-order / race detector.
+  Set ``DSLOG_RACE_DETECT=1`` (the ``race_detector`` pytest fixture does) and
+  ``repro.core._locks`` hands out instrumented locks that record the
+  per-thread acquisition graph plus unguarded mutations of registered shared
+  state (``io_stats``, ``hop_stats``, shard caches).
+* :mod:`repro.tools.fsck` — deep, non-mutating on-disk verifier.
+  Run as ``python -m repro.tools.fsck <store>``.
+
+The declared lock-order table shared by the static and dynamic layers lives
+in :mod:`repro.tools.lockorder`.
+"""

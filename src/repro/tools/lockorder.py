@@ -1,0 +1,59 @@
+"""The declared lock-order table for ``repro.core``.
+
+Both analysis layers consume this module: ``dslint`` checks syntactically
+nested ``with`` acquisitions against it, and ``racecheck`` checks the actual
+per-thread acquisition order at runtime.  A thread may only acquire a lock
+whose rank is *strictly greater* than every lock it already holds (reentrant
+re-acquisition of the same RLock object is exempt).
+
+Rank order (outermost → innermost):
+
+1.  ``shard._shard_load_lock`` — serialises lazy shard materialisation on a
+    ``ShardedDSLog``; taken before any per-shard state is touched.
+2.  ``table._lock`` — per-``TableHandle`` single-fire load latch; the loader
+    may bump store I/O meters, so it sits above the stats locks.
+3.  ``commit._flush_mutex`` — the durability barrier: held across "write
+    dirty state, then flush the WAL", so it must be *outside* ``wal._lock``.
+    This is the one place the code deviates from the naive
+    catalog → shard → wal → commit reading of the subsystem layering: the
+    commit pipeline is the WAL's *caller* during a flush, never the other
+    way round, so commit locks rank above (outside) the WAL lock.
+4.  ``commit._lock`` — protects the pipeline's dirty/LSN bookkeeping; nested
+    inside ``_flush_mutex`` by ``CommitPipeline._flush_dirty``.
+5.  ``wal._lock`` — serialises appends/flushes on one ``WriteAheadLog``.
+6.  ``shard._stats_lock`` — ``ShardedDSLog`` I/O + hop-stats meters (leaf).
+7.  ``catalog._stats_lock`` — ``DSLog`` I/O + hop-stats meters (leaf).
+
+Lock names are ``"<module stem>.<attribute>"``; every lock constructed via
+``repro.core._locks`` carries one.
+"""
+
+from __future__ import annotations
+
+LOCK_ORDER: dict[str, int] = {
+    "shard._shard_load_lock": 10,
+    "table._lock": 20,
+    "commit._flush_mutex": 30,
+    "commit._lock": 40,
+    "wal._lock": 50,
+    "shard._stats_lock": 60,
+    "catalog._stats_lock": 70,
+}
+
+#: (module stem, attribute name) → declared lock name, for the static pass.
+#: ``self.log._stats_lock`` inside ``shard.py`` resolves through the module
+#: stem, so facade code touching its own stats lock maps correctly.
+STATIC_LOCKS: dict[tuple[str, str], str] = {
+    ("shard", "_shard_load_lock"): "shard._shard_load_lock",
+    ("shard", "_stats_lock"): "shard._stats_lock",
+    ("catalog", "_stats_lock"): "catalog._stats_lock",
+    ("table", "_lock"): "table._lock",
+    ("wal", "_lock"): "wal._lock",
+    ("commit", "_lock"): "commit._lock",
+    ("commit", "_flush_mutex"): "commit._flush_mutex",
+}
+
+
+def rank(name: str) -> int | None:
+    """Rank of a declared lock name; ``None`` for locks outside the table."""
+    return LOCK_ORDER.get(name)

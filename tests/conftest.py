@@ -10,6 +10,8 @@ counts and no shrinking).
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.dirname(__file__))
 
 try:
@@ -18,3 +20,23 @@ except ImportError:
     import _propshim
 
     _propshim.install()
+
+
+@pytest.fixture
+def race_detector(monkeypatch):
+    """Run the test under the dynamic lock-order / race detector.
+
+    Sets ``DSLOG_RACE_DETECT=1`` so every lock ``repro.core._locks`` mints
+    during the test is instrumented (``repro.tools.racecheck``), then
+    asserts at teardown that no lock-order violation, acquisition-graph
+    cycle, or unguarded shared-state mutation was recorded.  Modules opt in
+    with an autouse wrapper fixture.
+    """
+    from repro.tools import racecheck
+
+    monkeypatch.setenv("DSLOG_RACE_DETECT", "1")
+    racecheck.reset()
+    yield racecheck
+    findings = racecheck.findings()
+    racecheck.reset()
+    assert not findings, "race-detector findings:\n" + "\n".join(findings)

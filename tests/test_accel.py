@@ -29,6 +29,12 @@ from test_shard import SHAPE, SIDE, _build_random_dag
 rng = np.random.default_rng(11)
 
 
+@pytest.fixture(autouse=True)
+def _race_detect(race_detector):
+    """Covers the parallel∈{2,4} plan-execution cases below."""
+    yield
+
+
 def _random_table(nr, l=2, m=2, span=500, seed=None):
     r = np.random.default_rng(seed if seed is not None else rng.integers(1 << 30))
     key_lo = r.integers(0, span, (nr, l))

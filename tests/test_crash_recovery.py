@@ -38,6 +38,12 @@ from repro.core.wal import WriteAheadLog
 SHAPE = (8, 8)
 _HEADER = 15  # WAL magic + base_lsn
 
+
+@pytest.fixture(autouse=True)
+def _race_detect(race_detector):
+    """Whole module runs under the dynamic lock-order / race detector."""
+    yield
+
 _OPS = [
     lambda rng: identity_lineage(SHAPE),
     lambda rng: flip_lineage(SHAPE, int(rng.integers(0, 2))),

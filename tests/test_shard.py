@@ -33,6 +33,12 @@ from repro.core.shard import (
 SIDE = 8
 SHAPE = (SIDE, SIDE)
 
+
+@pytest.fixture(autouse=True)
+def _race_detect(race_detector):
+    """Whole module runs under the dynamic lock-order / race detector."""
+    yield
+
 # shape-preserving single-input ops for the random-DAG property test
 _OPS = [
     lambda rng: identity_lineage(SHAPE),

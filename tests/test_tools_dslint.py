@@ -1,0 +1,392 @@
+"""dslint rules: fixture-backed positive/negative pairs, pragmas, CLI.
+
+Each rule gets (at least) one fixture module that must trigger it and one
+that must not.  Fixtures are written into a fake ``repro/...`` tree under
+``tmp_path`` so the path-scoped rules see the scopes they key on.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.tools import dslint
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _lint(tmp_path, relpath: str, source: str):
+    path = tmp_path / relpath
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(source)
+    return dslint.lint_file(str(path))
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# --------------------------------------------------------------------------- #
+# lock-context
+# --------------------------------------------------------------------------- #
+def test_lock_context_flags_bare_acquire(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/wal.py",
+        "def f(self):\n"
+        "    self._lock.acquire()\n"
+        "    try:\n"
+        "        pass\n"
+        "    finally:\n"
+        "        self._lock.release()\n",
+    )
+    assert _rules(findings) == {"lock-context"}
+    assert len(findings) == 2  # both the acquire and the release
+
+
+def test_lock_context_allows_with(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/wal.py",
+        "def f(self):\n    with self._lock:\n        pass\n",
+    )
+    assert "lock-context" not in _rules(findings)
+
+
+def test_lock_context_ignores_non_lock_acquire(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/commit.py",
+        "def f(self, root):\n    return WriterLease.acquire(root)\n",
+    )
+    assert "lock-context" not in _rules(findings)
+
+
+# --------------------------------------------------------------------------- #
+# lock-order
+# --------------------------------------------------------------------------- #
+def test_lock_order_flags_inverted_nesting(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/commit.py",
+        "def f(self):\n"
+        "    with self._lock:\n"          # commit._lock, rank 40
+        "        with self._flush_mutex:\n"  # rank 30 -> violation
+        "            pass\n",
+    )
+    assert "lock-order" in _rules(findings)
+
+
+def test_lock_order_allows_declared_nesting(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/commit.py",
+        "def f(self):\n"
+        "    with self._flush_mutex:\n"
+        "        with self._lock:\n"
+        "            pass\n",
+    )
+    assert not findings
+
+
+def test_lock_order_flags_undeclared_lock(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/somewhere.py",
+        "def f(self):\n    with self._secret_lock:\n        pass\n",
+    )
+    assert "lock-order" in _rules(findings)
+    assert "not in the declared lock-order table" in findings[0].message
+
+
+def test_lock_order_resets_at_function_boundary(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/commit.py",
+        "def f(self):\n"
+        "    with self._lock:\n"
+        "        def g():\n"
+        "            with self._flush_mutex:\n"
+        "                pass\n",
+    )
+    assert "lock-order" not in _rules(findings)
+
+
+# --------------------------------------------------------------------------- #
+# lock-new
+# --------------------------------------------------------------------------- #
+def test_lock_new_flags_direct_construction(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/wal.py",
+        "import threading\n\n"
+        "def f(self):\n    self._lock = threading.Lock()\n",
+    )
+    assert "lock-new" in _rules(findings)
+
+
+def test_lock_new_allows_factory_and_locks_module(tmp_path):
+    clean = _lint(
+        tmp_path,
+        "repro/core/wal.py",
+        "from . import _locks\n\n"
+        "def f(self):\n    self._lock = _locks.new_lock('wal._lock')\n",
+    )
+    assert "lock-new" not in _rules(clean)
+    exempt = _lint(
+        tmp_path,
+        "repro/core/_locks.py",
+        "import threading\n\ndef new_lock(name):\n    return threading.Lock()\n",
+    )
+    assert "lock-new" not in _rules(exempt)
+
+
+# --------------------------------------------------------------------------- #
+# atomic-manifest
+# --------------------------------------------------------------------------- #
+def test_atomic_manifest_flags_text_write(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/catalog.py",
+        "def save(self, path, payload):\n"
+        "    with open(path, 'w') as f:\n"
+        "        f.write(payload)\n",
+    )
+    assert "atomic-manifest" in _rules(findings)
+
+
+def test_atomic_manifest_allows_atomic_write_and_reads(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/catalog.py",
+        "import os\n\n"
+        "def _atomic_write(path, payload):\n"
+        "    with open(path + '.tmp', 'w') as f:\n"
+        "        f.write(payload)\n"
+        "        f.flush()\n"
+        "        os.fsync(f.fileno())\n"
+        "    os.replace(path + '.tmp', path)\n\n"
+        "def load(path):\n"
+        "    with open(path) as f:\n"
+        "        return f.read()\n",
+    )
+    assert "atomic-manifest" not in _rules(findings)
+
+
+# --------------------------------------------------------------------------- #
+# fsync-blob
+# --------------------------------------------------------------------------- #
+def test_fsync_blob_flags_unfsynced_binary_write(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/catalog.py",
+        "def _write_entry(self, path, blob):\n"
+        "    with open(path, 'wb') as f:\n"
+        "        f.write(blob)\n",
+    )
+    assert "fsync-blob" in _rules(findings)
+
+
+def test_fsync_blob_allows_fsynced_write(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/catalog.py",
+        "import os\n\n"
+        "def _write_blob(self, path, blob):\n"
+        "    with open(path, 'wb') as f:\n"
+        "        f.write(blob)\n"
+        "        f.flush()\n"
+        "        os.fsync(f.fileno())\n",
+    )
+    assert "fsync-blob" not in _rules(findings)
+
+
+def test_fsync_blob_out_of_scope_module_unchecked(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/wal.py",
+        "def dump(path, blob):\n"
+        "    with open(path, 'wb') as f:\n"
+        "        f.write(blob)\n",
+    )
+    assert "fsync-blob" not in _rules(findings)
+
+
+# --------------------------------------------------------------------------- #
+# bare-except / mutable-default
+# --------------------------------------------------------------------------- #
+def test_bare_except_flagged(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/util.py",
+        "def f():\n    try:\n        pass\n    except:\n        pass\n",
+    )
+    assert "bare-except" in _rules(findings)
+
+
+def test_typed_except_allowed(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/util.py",
+        "def f():\n    try:\n        pass\n    except ValueError:\n        pass\n",
+    )
+    assert "bare-except" not in _rules(findings)
+
+
+def test_mutable_default_flagged(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/kernels/util.py",
+        "def f(xs=[]):\n    return xs\n\n"
+        "def g(*, m={}):\n    return m\n\n"
+        "def h(s=set()):\n    return s\n",
+    )
+    assert sum(1 for f in findings if f.rule == "mutable-default") == 3
+
+
+def test_none_default_allowed(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/kernels/util.py",
+        "def f(xs=None, n=3, name='x'):\n    return xs\n",
+    )
+    assert "mutable-default" not in _rules(findings)
+
+
+# --------------------------------------------------------------------------- #
+# int32-cast
+# --------------------------------------------------------------------------- #
+def test_int32_cast_flagged_without_guard(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/kernels/pack.py",
+        "import numpy as np\n\n"
+        "def pack(lo):\n    return lo.astype(np.int32)\n",
+    )
+    assert "int32-cast" in _rules(findings)
+
+
+def test_int32_cast_allowed_with_guard(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/kernels/pack.py",
+        "import numpy as np\n\n"
+        "def pack(lo):\n"
+        "    _require_int32(lo)\n"
+        "    return lo.astype(np.int32)\n",
+    )
+    assert "int32-cast" not in _rules(findings)
+
+
+def test_int32_cast_out_of_scope_unchecked(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/catalog.py",
+        "import numpy as np\n\n"
+        "def f(x):\n    return x.astype(np.int32)\n",
+    )
+    assert "int32-cast" not in _rules(findings)
+
+
+# --------------------------------------------------------------------------- #
+# pragmas, plugins, driver
+# --------------------------------------------------------------------------- #
+def test_pragma_suppresses_named_rule(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/util.py",
+        "def f():\n"
+        "    try:\n"
+        "        pass\n"
+        "    except:  # dslint: ignore[bare-except]\n"
+        "        pass\n",
+    )
+    assert "bare-except" not in _rules(findings)
+
+
+def test_pragma_on_previous_line_suppresses(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/kernels/pack.py",
+        "import numpy as np\n\n"
+        "def pack(lo):\n"
+        "    # dslint: ignore[int32-cast]\n"
+        "    return lo.astype(np.int32)\n",
+    )
+    assert "int32-cast" not in _rules(findings)
+
+
+def test_pragma_does_not_suppress_other_rules(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/util.py",
+        "def f():\n"
+        "    try:\n"
+        "        pass\n"
+        "    except:  # dslint: ignore[mutable-default]\n"
+        "        pass\n",
+    )
+    assert "bare-except" in _rules(findings)
+
+
+def test_blanket_pragma_suppresses_all(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/util.py",
+        "def f():\n"
+        "    try:\n"
+        "        pass\n"
+        "    except:  # dslint: ignore\n"
+        "        pass\n",
+    )
+    assert not findings
+
+
+def test_rules_are_pluggable(tmp_path):
+    class NoTodoRule:
+        name = "no-todo"
+
+        def applies(self, scope):
+            return True
+
+        def check(self, ctx):
+            for i, line in enumerate(ctx.source.splitlines(), start=1):
+                if "TODO" in line:
+                    yield dslint.Finding(ctx.path, i, self.name, "TODO found")
+
+    dslint.register(NoTodoRule())
+    try:
+        findings = _lint(tmp_path, "repro/core/x.py", "# TODO: later\n")
+        assert "no-todo" in _rules(findings)
+    finally:
+        dslint.RULES.pop()
+
+
+def test_repo_tree_is_clean():
+    """The merged tree lints clean — the CI gate in test form."""
+    findings = dslint.lint_paths([SRC])
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_cli_exit_codes(tmp_path):
+    bad = tmp_path / "repro" / "core" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("def f():\n    try:\n        pass\n    except:\n        pass\n")
+    env = dict(os.environ, PYTHONPATH=os.path.abspath(SRC))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.tools.dslint", str(tmp_path)],
+        capture_output=True,
+        text=True,
+        env=env,
+    )
+    assert r.returncode == 1
+    assert "bare-except" in r.stdout
+    bad.write_text("def f():\n    pass\n")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.tools.dslint", str(tmp_path)],
+        capture_output=True,
+        text=True,
+        env=env,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr

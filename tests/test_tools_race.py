@@ -1,0 +1,189 @@
+"""racecheck: instrumented locks, rank checks, cycles, guarded state.
+
+These tests drive the detector's primitives directly (with the env var set
+via monkeypatch) — the end-to-end wiring is exercised by the autouse
+fixtures in test_wal / test_crash_recovery / test_accel / test_shard.
+"""
+
+import threading
+
+import pytest
+
+from repro.tools import racecheck
+from repro.tools.racecheck import GuardedDict, GuardedList, InstrumentedLock
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry(monkeypatch):
+    monkeypatch.setenv("DSLOG_RACE_DETECT", "1")
+    racecheck.reset()
+    yield
+    racecheck.reset()
+
+
+# --------------------------------------------------------------------------- #
+# lock ordering
+# --------------------------------------------------------------------------- #
+def test_declared_order_is_clean():
+    outer = InstrumentedLock("commit._flush_mutex")
+    inner = InstrumentedLock("wal._lock")
+    with outer:
+        with inner:
+            pass
+    assert racecheck.findings() == []
+
+
+def test_rank_violation_detected():
+    wal = InstrumentedLock("wal._lock")          # rank 50
+    commit = InstrumentedLock("commit._lock")    # rank 40
+    with wal:
+        with commit:  # inner rank below outer: declared order violated
+            pass
+    findings = racecheck.findings()
+    assert any("lock-order" in f and "commit._lock" in f for f in findings)
+
+
+def test_same_rank_different_instance_is_violation():
+    a = InstrumentedLock("table._lock")
+    b = InstrumentedLock("table._lock")
+    with a:
+        with b:
+            pass
+    assert any("lock-order" in f for f in racecheck.findings())
+
+
+def test_rlock_reentry_is_not_a_violation():
+    lock = InstrumentedLock("catalog._stats_lock", reentrant=True)
+    with lock:
+        with lock:
+            pass
+    assert racecheck.findings() == []
+
+
+def test_cross_thread_cycle_detected():
+    """Inverted acquisition orders on different threads form a graph cycle.
+
+    The threads run one after the other — the detector's value is exactly
+    that it flags the *potential* deadlock without needing the unlucky
+    interleaving that would actually wedge both threads.
+    """
+    a = InstrumentedLock("t.A")  # unranked: only the cycle check sees these
+    b = InstrumentedLock("t.B")
+
+    def one():
+        with a:
+            with b:
+                pass
+
+    def two():
+        with b:
+            with a:
+                pass
+
+    t1 = threading.Thread(target=one)
+    t1.start()
+    t1.join()
+    t2 = threading.Thread(target=two)
+    t2.start()
+    t2.join()
+    assert any("lock-cycle" in f for f in racecheck.findings())
+
+
+def test_edges_recorded_per_acquisition():
+    outer = InstrumentedLock("commit._flush_mutex")
+    inner = InstrumentedLock("wal._lock")
+    with outer:
+        with inner:
+            pass
+    assert ("commit._flush_mutex", "wal._lock") in racecheck.edges()
+
+
+# --------------------------------------------------------------------------- #
+# guarded shared state
+# --------------------------------------------------------------------------- #
+def test_guarded_dict_flags_unguarded_mutation():
+    guard = InstrumentedLock("catalog._stats_lock", reentrant=True)
+    stats = GuardedDict({"n": 0}, guard, "DSLog.io_stats")
+    stats["n"] = 1  # no lock held
+    assert any("unguarded-mutation" in f for f in racecheck.findings())
+
+
+def test_guarded_dict_clean_under_lock():
+    guard = InstrumentedLock("catalog._stats_lock", reentrant=True)
+    stats = GuardedDict({"n": 0}, guard, "DSLog.io_stats")
+    with guard:
+        stats["n"] = 1
+        stats.update(m=2)
+        stats.setdefault("k", [])
+        del stats["m"]
+    assert racecheck.findings() == []
+    assert stats == {"n": 1, "k": []}
+
+
+def test_guarded_dict_reads_unchecked():
+    guard = InstrumentedLock("catalog._stats_lock", reentrant=True)
+    stats = GuardedDict({"n": 3}, guard, "DSLog.io_stats")
+    assert stats["n"] == 3
+    assert stats.get("missing") is None
+    assert list(stats.items()) == [("n", 3)]
+    assert racecheck.findings() == []
+
+
+def test_guarded_list_flags_unguarded_mutation():
+    guard = InstrumentedLock("shard._shard_load_lock")
+    shards = GuardedList([None, None], guard, "ShardedDSLog._shards")
+    shards[0] = object()
+    assert any("unguarded-mutation" in f for f in racecheck.findings())
+    racecheck.reset()
+    with guard:
+        shards[1] = object()
+    assert racecheck.findings() == []
+
+
+def test_detection_stops_when_env_cleared(monkeypatch):
+    guard = InstrumentedLock("catalog._stats_lock", reentrant=True)
+    stats = GuardedDict({}, guard, "DSLog.io_stats")
+    monkeypatch.delenv("DSLOG_RACE_DETECT")
+    stats["n"] = 1  # detector off: recording suspended
+    assert racecheck.findings() == []
+
+
+# --------------------------------------------------------------------------- #
+# _locks factory wiring
+# --------------------------------------------------------------------------- #
+def test_locks_factory_returns_plain_locks_when_disabled(monkeypatch):
+    monkeypatch.delenv("DSLOG_RACE_DETECT")
+    from repro.core import _locks
+
+    assert not isinstance(_locks.new_lock("wal._lock"), InstrumentedLock)
+    assert isinstance(_locks.guard_mapping({"a": 1}, None, "x"), dict)
+    assert not isinstance(_locks.guard_mapping({"a": 1}, None, "x"), GuardedDict)
+
+
+def test_locks_factory_returns_instrumented_when_enabled():
+    from repro.core import _locks
+
+    lock = _locks.new_lock("wal._lock")
+    assert isinstance(lock, InstrumentedLock) and not lock.reentrant
+    rlock = _locks.new_rlock("catalog._stats_lock")
+    assert isinstance(rlock, InstrumentedLock) and rlock.reentrant
+    stats = _locks.guard_mapping({"a": 1}, rlock, "x")
+    assert isinstance(stats, GuardedDict)
+    seq = _locks.guard_sequence([None], lock, "y")
+    assert isinstance(seq, GuardedList)
+
+
+def test_store_end_to_end_clean_under_detector(tmp_path):
+    """A real store exercising WAL + commit + stats stays finding-free."""
+    import numpy as np
+
+    from repro.core.capture import identity_lineage, roll_lineage
+    from repro.core.catalog import DSLog
+
+    log = DSLog.open(str(tmp_path / "s"))
+    log.add_lineage("a", "b", identity_lineage((8, 8)))
+    log.add_lineage("b", "c", roll_lineage((8, 8), 2, 0))
+    log.prov_query("a", "c", np.array([[1, 2]]))
+    log.save()
+    log.close()
+    assert racecheck.findings() == []

@@ -18,6 +18,12 @@ from repro.core.commit import CommitPipeline, LeaseHeldError, WriterLease
 from repro.core.wal import WriteAheadLog
 
 
+@pytest.fixture(autouse=True)
+def _race_detect(race_detector):
+    """Whole module runs under the dynamic lock-order / race detector."""
+    yield
+
+
 # --------------------------------------------------------------------------- #
 # Record format and torn-tail truncation
 # --------------------------------------------------------------------------- #
