@@ -930,3 +930,134 @@ def run_accel_ablation(
             flush=True,
         )
     return [rec]
+
+
+def _build_view_chain(shape, hops: int, seed: int = 0):
+    """One hot linear route ``a0 → a1 → … → aH`` of random bijections.
+
+    Composing the whole route stays one bijection (≈ one row per cell), so
+    a materialized view collapses ``hops`` θ-joins into one — the workload
+    the answer cache and view shortcut are built for.
+    """
+    rng = np.random.default_rng(seed)
+    logs = []
+    rels = [_permutation_lineage(shape, rng) for _ in range(hops)]
+    for _ in range(2):
+        log = DSLog()
+        log.define_array("a0", shape)
+        for h, rel in enumerate(rels):
+            log.define_array(f"a{h + 1}", shape)
+            log.add_lineage(f"a{h}", f"a{h + 1}", rel)
+        logs.append(log)
+    return logs
+
+
+def run_views_ablation(
+    shape=(48, 48),
+    hops: int = 8,
+    n_cells: int = 64,
+    repeats: int = 9,
+    smoke: bool = False,
+    verbose: bool = True,
+) -> list[dict]:
+    """Materialized views + answer cache vs the plain planner (ISSUE 7).
+
+    A hot route of ``hops`` bijection tables, queried backward with varying
+    cells.  Measures, as medians over ``repeats`` runs:
+
+    * ``cold_s``  — plain planner (views disabled): full multi-hop plan,
+      one θ-join per hop, every query,
+    * ``warm_s``  — heat-admitted materialized view: two-node plan over the
+      composed route table, one θ-join (fresh cells each run, so the
+      answer cache never fires),
+    * ``cache_s`` — identical repeated query served from the cell-level
+      answer cache, no planning at all,
+
+    then mutates an entry mid-route (``mark_dirty``), checks the view and
+    its answers die precisely, and lets the next hot streak re-materialize.
+    Every timed answer is asserted bit-identical against the cold store.
+    """
+    if smoke:
+        shape, hops, n_cells, repeats = (32, 32), 10, 48, 7
+    warm_log, cold_log = _build_view_chain(shape, hops)
+    cold_log.views.enabled = False
+    src, dst = f"a{hops}", "a0"
+    rng = np.random.default_rng(11)
+    n = int(np.prod(shape))
+
+    def fresh_cells():
+        flat = rng.choice(n, size=n_cells, replace=False)
+        return np.stack(np.unravel_index(flat, shape), axis=1)
+
+    def identical(a, b, ctx):
+        assert a.shape == b.shape, ctx
+        assert a.lo.tobytes() == b.lo.tobytes(), ctx
+        assert a.hi.tobytes() == b.hi.tobytes(), ctx
+
+    # warm-up: varying cells miss the answer cache, build route heat, and
+    # admit the composed view; every answer checked against the cold store
+    for i in range(6):
+        cells = fresh_cells()
+        identical(warm_log.prov_query(src, dst, cells),
+                  cold_log.prov_query(src, dst, cells), f"warmup {i}")
+    assert warm_log.io_stats["views_materialized"] == 1, "no view admitted"
+
+    queries = [fresh_cells() for _ in range(repeats)]
+    cold_ts, warm_ts = [], []
+    for i, cells in enumerate(queries):
+        t0 = time.perf_counter()
+        want = cold_log.prov_query(src, dst, cells)
+        cold_ts.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        got = warm_log.prov_query(src, dst, cells)
+        warm_ts.append(time.perf_counter() - t0)
+        identical(got, want, f"timed {i}")
+    cold_s = sorted(cold_ts)[len(cold_ts) // 2]
+    warm_s = sorted(warm_ts)[len(warm_ts) // 2]
+
+    # hot-route repeats: the identical query comes straight from the cache
+    repeat_cells = queries[-1]
+    base_hits = warm_log.io_stats["cache_hits"]
+    cache_ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        got = warm_log.prov_query(src, dst, repeat_cells)
+        cache_ts.append(time.perf_counter() - t0)
+    cache_s = sorted(cache_ts)[len(cache_ts) // 2]
+    assert warm_log.io_stats["cache_hits"] - base_hits == repeats
+    identical(got, cold_log.prov_query(src, dst, repeat_cells), "cached")
+
+    # mid-run mutation: precise invalidation, then re-materialization
+    lid = warm_log.by_pair[(f"a{hops // 2}", f"a{hops // 2 + 1}")][0]
+    warm_log.mark_dirty(lid)
+    cold_log.mark_dirty(lid)
+    assert warm_log.io_stats["views_invalidated"] == 1
+    for i in range(6):
+        cells = fresh_cells()
+        identical(warm_log.prov_query(src, dst, cells),
+                  cold_log.prov_query(src, dst, cells), f"post-dirty {i}")
+    assert warm_log.io_stats["views_materialized"] == 2, "no re-admission"
+
+    rec = {
+        "shape": shape,
+        "hops": hops,
+        "n_cells": n_cells,
+        "cold_s": cold_s,
+        "warm_s": warm_s,
+        "cache_s": cache_s,
+        "view_speedup": cold_s / warm_s,
+        "cache_speedup": cold_s / cache_s,
+        "views_materialized": warm_log.io_stats["views_materialized"],
+        "views_invalidated": warm_log.io_stats["views_invalidated"],
+        "cache_hits": warm_log.io_stats["cache_hits"],
+    }
+    if verbose:
+        print(
+            f"  views_ablation {hops} hops "
+            f"cold={cold_s * 1e3:7.2f}ms warm={warm_s * 1e3:7.2f}ms "
+            f"cache={cache_s * 1e3:7.2f}ms "
+            f"view={rec['view_speedup']:5.1f}x "
+            f"cache={rec['cache_speedup']:5.1f}x",
+            flush=True,
+        )
+    return [rec]

@@ -156,6 +156,34 @@ def bench_accel(quick: bool) -> None:
             )
 
 
+def bench_views(quick: bool) -> None:
+    from .fig89_query import run_views_ablation
+
+    print("# Materialized views + answer cache — hot-route repeats, cold vs "
+          "warm, mid-run mutation", flush=True)
+    rows = run_views_ablation(smoke=_SMOKE)
+    for r in rows:
+        tag = f"views/h{r['hops']}/q{r['n_cells']}"
+        _emit(f"{tag}/cold", r["cold_s"] * 1e6, "")
+        _emit(
+            f"{tag}/warm", r["warm_s"] * 1e6,
+            f"view_speedup_x={r['view_speedup']:.1f};"
+            f"materialized={r['views_materialized']};"
+            f"invalidated={r['views_invalidated']}",
+        )
+        _emit(
+            f"{tag}/cached", r["cache_s"] * 1e6,
+            f"cache_speedup_x={r['cache_speedup']:.1f};"
+            f"hits={r['cache_hits']}",
+        )
+        # CI gate: a heat-admitted view must beat the plain planner by a
+        # wide margin (bit-identity is asserted inside the ablation)
+        assert r["view_speedup"] >= 3.0, (
+            f"materialized view too slow vs cold planner: "
+            f"{r['view_speedup']:.2f}x (need >= 3x)"
+        )
+
+
 def bench_dag(quick: bool) -> None:
     from .fig89_query import run_dag_ablation
 
@@ -228,6 +256,7 @@ BENCHES = {
     "fig89": bench_fig89,
     "index": bench_index,
     "dag": bench_dag,
+    "views": bench_views,
     "shard": bench_shard,
     "wal": bench_wal,
     "accel": bench_accel,

@@ -60,6 +60,7 @@ from .reuse import (
     sig_key_gen,
 )
 from .table import CompressedTable, TableHandle
+from .views import ViewManager
 from .wal import WAL_FILENAME, WalRecord, WriteAheadLog
 
 __all__ = ["DSLog", "ArrayDef", "LineageEntry"]
@@ -144,19 +145,24 @@ def is_catalog_blob(fn: str) -> bool:
     Shared by :func:`_vacuum_dir`'s sweep and ``repro.tools.fsck``'s
     orphan-blob check so GC and verification agree on ownership.
     """
-    return (fn.startswith("lineage_") and fn.endswith((".prvc", ".idx"))) or (
-        fn.startswith("sig_") and fn.endswith(".prvc")
+    return (
+        (fn.startswith("lineage_") and fn.endswith((".prvc", ".idx")))
+        or (fn.startswith("sig_") and fn.endswith(".prvc"))
+        or (fn.startswith("view_") and fn.endswith(".prvc"))
     )
 
 
-def manifest_referenced_files(lineage_recs, predictor_chunk) -> set[str]:
+def manifest_referenced_files(
+    lineage_recs, predictor_chunk, views_chunk=None
+) -> set[str]:
     """The blob closure of a manifest: every file its records reference.
 
     ``lineage_recs`` is an iterable of persisted lineage records (the
     manifest's ``lineage`` list, or ``DSLog._persisted.values()`` — same
-    schema); ``predictor_chunk`` is the manifest's ``predictor`` chunk or
-    ``None``.  Single source of truth shared by :meth:`DSLog.compact` and
-    ``repro.tools.fsck``, so the vacuum and the orphan check can't drift.
+    schema); ``predictor_chunk``/``views_chunk`` are the manifest's
+    ``predictor``/``views`` chunks or ``None``.  Single source of truth
+    shared by :meth:`DSLog.compact` and ``repro.tools.fsck``, so the
+    vacuum and the orphan check can't drift.
     """
     referenced = {"catalog.json"}
     for rec in lineage_recs:
@@ -166,6 +172,11 @@ def manifest_referenced_files(lineage_recs, predictor_chunk) -> set[str]:
     if predictor_chunk:
         for rec in predictor_chunk.get("sigs", []):
             referenced.update(rec.get("tables", {}).values())
+    if views_chunk:
+        for rec in views_chunk.get("views", []):
+            for key in ("file", "fwd"):
+                if rec.get(key):
+                    referenced.add(rec[key])
     return referenced
 
 
@@ -329,6 +340,7 @@ class DSLog:
         self.ops: list[_OpRecord] = []
         self.predictor = ReusePredictor(m=reuse_m)
         self.planner = QueryPlanner(self)
+        self.views = ViewManager(self)
         self._next_id = 0
         # persistence bookkeeping: which entries need (re)writing, the
         # manifest records of already-persisted entries, and lazy-I/O
@@ -362,6 +374,13 @@ class DSLog:
                 "joins_packed": 0,
                 "batch_rows": 0,
                 "batch_rows_padded": 0,
+                # materialized views + answer cache (repro/core/views.py)
+                "view_hits": 0,
+                "view_misses": 0,
+                "cache_hits": 0,
+                "cache_misses": 0,
+                "views_materialized": 0,
+                "views_invalidated": 0,
             },
             self._stats_lock,
             "DSLog.io_stats",
@@ -397,9 +416,13 @@ class DSLog:
 
     @property
     def dirty(self) -> bool:
-        """Anything (entries, predictor, or manifest metadata) unsaved?"""
+        """Anything (entries, predictor, views, or manifest metadata)
+        unsaved?"""
         return (
-            bool(self._dirty) or self.predictor.dirty or self._meta_dirty
+            bool(self._dirty)
+            or self.predictor.dirty
+            or self._meta_dirty
+            or self.views.dirty
         )
 
     # ------------------------------------------------------------------ #
@@ -525,6 +548,7 @@ class DSLog:
         self._dirty.add(lineage_id)
         self._meta_dirty = True
         self._drop_hop_stats(lineage_id)
+        self.views.on_mutation(lineage_id)
         blobs = [bwd.serialize(compress=self.gzip)]
         meta = {"id": lineage_id, "fwd": fwd is not None}
         if fwd is not None:
@@ -671,6 +695,10 @@ class DSLog:
                         e._fwd = CompressedTable.deserialize(bytes(rec.blobs[1]))
                     self._dirty.add(lid)
                     self._meta_dirty = True
+                    # replay fires the same precise invalidation the live
+                    # mark_dirty call did — views/answers over this entry's
+                    # route must not survive recovery
+                    self.views.on_mutation(lid)
             # unknown record types are skipped: forward compatibility
         finally:
             self._replaying = False
@@ -771,6 +799,7 @@ class DSLog:
         self.by_pair.setdefault((src, dst), []).append(entry.lineage_id)
         self._dirty.add(entry.lineage_id)
         self._meta_dirty = True
+        self.views.on_new_edge(src, dst)
         if self._wal is not None and not self._replaying:
             meta, blobs = self._entry_wal_record(entry)
             self._wal_append_entry("entry", meta, blobs)
@@ -799,6 +828,7 @@ class DSLog:
         self._remove_entry(lineage_id)
         self._persisted.pop(lineage_id, None)
         self._drop_hop_stats(lineage_id)
+        self.views.on_mutation(lineage_id)
         for op in self.ops:
             if lineage_id in op.lineage_ids:
                 op.lineage_ids.remove(lineage_id)
@@ -825,6 +855,10 @@ class DSLog:
         sample cap, so the feedback tracks workload shifts instead of
         averaging over all history.  Thread-safe (parallel execution calls
         this from worker threads)."""
+        if lineage_id < 0:  # view hop: the ViewManager keeps its own EMA
+            return self.views.record_hop(
+                lineage_id, stored, frontier_on, pairs, qrows
+            )
         with self._stats_lock:
             st = self.hop_stats.setdefault(
                 self._hop_key(lineage_id, stored, frontier_on), [0.0, 0.0]
@@ -841,6 +875,8 @@ class DSLog:
         self, lineage_id: int, stored: str, frontier_on: str
     ) -> float | None:
         """Measured pairs-per-query-box for one hop, or None if never run."""
+        if lineage_id < 0:
+            return self.views.hop_measurement(lineage_id, stored, frontier_on)
         st = self.hop_stats.get(self._hop_key(lineage_id, stored, frontier_on))
         if not st or st[1] <= 0:
             return None
@@ -1062,10 +1098,27 @@ class DSLog:
         if not queries:
             return {t: [] for t in targets} if multi else []
         boxes = self._as_boxes(src, queries)
-        plan = self.planner.plan(src, targets, frontier=boxes, batched=batched)
+        # answer cache first, planner second: an exact repeat (same source,
+        # targets, and canonicalized cell boxes) never plans at all
+        ckey = self.views.cache_key(src, targets, boxes, merge)
+        if ckey is not None:
+            hit = self.views.cache_get(ckey)
+            if hit is not None:
+                return hit if multi else hit[dst]
+            self.views.note_route(src, targets)
+        # plans are cell-independent: a hot route replans only after an
+        # invalidation, admission, or demotion changes the shortcut race
+        plan = self.views.plan_get(src, targets, batched)
+        if plan is None:
+            plan = self.planner.plan(
+                src, targets, frontier=boxes, batched=batched
+            )
+            self.views.plan_put(src, targets, batched, plan)
         out = self.planner.execute(
             plan, boxes, merge=merge, parallel=parallel, batched=batched
         )
+        if ckey is not None:
+            self.views.cache_put(ckey, out, src, targets, plan)
         return out if multi else out[dst]
 
     def _as_boxes(
@@ -1168,6 +1221,11 @@ class DSLog:
         if self._predictor_chunk is None or self.predictor.dirty:
             self._predictor_chunk = self._write_predictor()
         meta["predictor"] = self._predictor_chunk
+        meta["views"] = self.views.manifest_chunk(self._write_view_blob)
+        _atomic_write(
+            os.path.join(self.root, "answers.json"),
+            json.dumps(self.views.cache_chunk()),
+        )
 
         payload = json.dumps(meta)
         _atomic_write(os.path.join(self.root, "catalog.json"), payload)
@@ -1213,6 +1271,17 @@ class DSLog:
                 e.forward, f"lineage_{e.lineage_id}_fwd.idx"
             )
         return rec
+
+    def _write_view_blob(self, fn: str, table: CompressedTable) -> None:
+        blob = table.serialize(compress=self.gzip)
+        _write_blob(os.path.join(self.root, fn), blob)
+        self._bump("tables_written")
+        self._bump("bytes_written", len(blob))
+
+    def _view_lsns(self) -> dict[str, int]:
+        """End LSN of every WAL a view's route could be invalidated
+        through — for a single store, just its own log."""
+        return {"": self._wal.end_lsn if self._wal is not None else 0}
 
     def _write_predictor(self) -> dict:
         assert self.root is not None
@@ -1356,6 +1425,20 @@ class DSLog:
         log.hop_decay = float(meta.get("hop_decay", log.hop_decay))
         log._meta_dirty = False
         log._wal_lsn = int(meta.get("wal_lsn", 0))
+        # views + cached answers restore BEFORE WAL replay: replayed
+        # entry/drop/dirty records then fire the same precise invalidation
+        # they did live, so nothing stale survives recovery
+        log.views.load_chunk(
+            meta.get("views"),
+            lambda fn, rows: log._make_handle(fn, None, rows),
+        )
+        answers = os.path.join(root, "answers.json")
+        if os.path.exists(answers):
+            try:
+                with open(answers) as f:
+                    log.views.load_cache_chunk(json.load(f))
+            except (ValueError, KeyError):
+                pass  # torn/stale sidecar: start with a cold cache
         if os.path.exists(os.path.join(root, WAL_FILENAME)):
             log._attach_wal()
         return log
@@ -1384,6 +1467,7 @@ class DSLog:
         referenced = manifest_referenced_files(
             self._persisted.values(), self._predictor_chunk
         )
+        referenced |= self.views.blob_files()
         return _vacuum_dir(self.root, referenced)
 
     # ------------------------------------------------------------------ #

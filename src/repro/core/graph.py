@@ -42,6 +42,12 @@ class LineageGraph:
         # dst -> src -> [lineage ids]
         self.bwd: dict[str, dict[str, list[int]]] = {}
         self._nodes: set[str] = set()
+        # (src, dst) -> pseudo lineage id of a materialized view covering
+        # the whole route.  An overlay, not part of the dataflow DAG: it
+        # never participates in reachability, path enumeration, or cycle
+        # checks — the planner consults it separately when costing a
+        # single-source/single-target query.
+        self.shortcuts: dict[tuple[str, str], int] = {}
 
     # ------------------------------------------------------------------ #
     # construction
@@ -85,6 +91,20 @@ class LineageGraph:
                 del adj[a][b]
                 if not adj[a]:
                     del adj[a]
+
+    def add_shortcut(self, src: str, dst: str, pseudo_id: int) -> None:
+        """Overlay a materialized-view shortcut on the ``src → dst`` route.
+
+        ``pseudo_id`` is the view's negative pseudo lineage id (see
+        ``repro.core.views``).  At most one shortcut per route.
+        """
+        self.shortcuts[(src, dst)] = pseudo_id
+
+    def remove_shortcut(self, src: str, dst: str) -> None:
+        self.shortcuts.pop((src, dst), None)
+
+    def shortcut_id(self, src: str, dst: str) -> int | None:
+        return self.shortcuts.get((src, dst))
 
     @staticmethod
     def from_pairs(by_pair: dict[tuple[str, str], list[int]]) -> "LineageGraph":

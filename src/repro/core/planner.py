@@ -48,6 +48,7 @@ from .query import (
     BatchedJoinExecutor,
     JoinRequest,
     QueryBox,
+    canonical_boxes,
     dense_backend,
     merge_boxes,
     theta_join_batch,
@@ -58,6 +59,13 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
     from .catalog import DSLog, LineageEntry
 
 __all__ = ["HopChoice", "EdgeStep", "QueryPlan", "QueryPlanner"]
+
+
+def _fmt_lid(lineage_id: int) -> str:
+    """EXPLAIN label for a hop id: negative ids are materialized views."""
+    if lineage_id < 0:
+        return f"view#{-lineage_id - 1}"
+    return f"#{lineage_id}"
 
 # Cost-model constants (unitless "per candidate pair" work).
 _INVERSE_OVERHEAD = 2.0  # inverse join does strictly more per-pair work
@@ -132,7 +140,7 @@ class QueryPlan:
         for key in self.order:
             for step in self.steps.get(key, []):
                 opts = ", ".join(
-                    f"#{c.lineage_id}:{c.stored}/"
+                    f"{_fmt_lid(c.lineage_id)}:{c.stored}/"
                     f"{'nat' if c.frontier_on == 'key' else 'inv'}/"
                     f"{c.describe_route()}"
                     for c in step.choices
@@ -162,6 +170,13 @@ class QueryPlanner:
         if self._executor is None:
             self._executor = BatchedJoinExecutor(stats=self.log._bump)
         return self._executor
+
+    def _entry(self, lineage_id: int) -> "LineageEntry":
+        """Resolve a hop id to its entry; negative ids are view shortcuts
+        (``repro.core.views``), served by the store's :class:`ViewManager`."""
+        if lineage_id < 0:
+            return self.log.views.entry_for(lineage_id)
+        return self.log.lineage[lineage_id]
 
     # ------------------------------------------------------------------ #
     # planning
@@ -251,7 +266,56 @@ class QueryPlanner:
                 est_boxes[key] = est_boxes.get(key, 0.0) + max(
                     1.0, step.est_pairs * _MERGE_SHRINK
                 )
+        # Materialized-view shortcut: when a composed view covers the whole
+        # route, cost a one-hop plan over it and race it against the base
+        # plan — the view wins exactly when the cost model says it should.
+        if len(src_set) == 1 and len(dst_set) == 1:
+            vplan = self._view_plan(
+                next(iter(src_set)), next(iter(dst_set)), frontier, nq0, batched
+            )
+            if vplan is not None and vplan.est_cost < plan.est_cost:
+                self.log._bump("view_hits")
+                return vplan
+            self.log._bump("view_misses")
         return plan
+
+    def _view_plan(
+        self,
+        src: str,
+        dst: str,
+        frontier: Sequence[QueryBox] | None,
+        nq0: float,
+        batched: bool,
+    ) -> QueryPlan | None:
+        """One-hop plan over a materialized view covering ``src -> dst``
+        (either orientation), or None when no live view matches."""
+        views = getattr(self.log, "views", None)
+        if views is None:
+            return None
+        pid = views.shortcut_for(src, dst)
+        if pid is None:
+            return None
+        g = self.log.graph
+        direction = (
+            "forward" if g.shortcut_id(src, dst) == pid else "backward"
+        )
+        vplan = QueryPlan(
+            direction=direction,
+            starts=(src,),
+            target_keys={dst: dst},
+            order=[src, dst],
+            node_array={src: src, dst: dst},
+        )
+        step = self._build_step(
+            src, dst, [pid], traverse=direction, nq=nq0,
+            frontier=frontier, batched=batched,
+        )
+        vplan.steps[dst] = [step]
+        vplan.est_cost = sum(c.est_cost for c in step.choices)
+        vplan.est_boxes.update(
+            {src: nq0, dst: max(1.0, step.est_pairs * _MERGE_SHRINK)}
+        )
+        return vplan
 
     def plan_path(
         self,
@@ -333,7 +397,7 @@ class QueryPlanner:
         frontier src→dst (frontier matches the *forward* table's keys or the
         backward table's values), "backward" the reverse.
         """
-        entry = self.log.lineage[lineage_id]
+        entry = self._entry(lineage_id)
         options: list[HopChoice] = []
         if traverse == "backward":
             options.append(
@@ -585,9 +649,20 @@ class QueryPlanner:
                 )
         if collect == "all":
             return {plan.node_array[k]: v for k, v in frontier.items()}
-        return {
+        out = {
             name: frontier[key] for name, key in plan.target_keys.items()
         }
+        if merge:
+            # Final normal form: merge_boxes fixpoints depend on the route
+            # taken (per-hop chain vs composed view, sharded vs not), so
+            # target answers are re-cut into the canonical decomposition —
+            # equal cell sets become equal bytes, whatever plan produced
+            # them.
+            out = {
+                name: [canonical_boxes(q) for q in boxes]
+                for name, boxes in out.items()
+            }
+        return out
 
     # ------------------------------------------------------------------ #
     # node execution: gather join requests, run them, assemble frontiers
@@ -611,7 +686,7 @@ class QueryPlanner:
     ) -> list[JoinRequest]:
         reqs = []
         for _step, choice, qs in gathered:
-            entry = self.log.lineage[choice.lineage_id]
+            entry = self._entry(choice.lineage_id)
             table = (
                 entry.backward if choice.stored == "backward" else entry.forward
             )
@@ -839,7 +914,7 @@ class QueryPlanner:
         self, choice: HopChoice, qs: list[QueryBox]
     ) -> list[QueryBox]:
         """The per-hop join loop: one choice, one ``theta_join_batch``."""
-        entry = self.log.lineage[choice.lineage_id]
+        entry = self._entry(choice.lineage_id)
         table = entry.backward if choice.stored == "backward" else entry.forward
         if choice.frontier_on == "key":
             return theta_join_batch(qs, table, merge=False, path=choice.route)

@@ -65,6 +65,7 @@ __all__ = [
     "theta_join_inverse_batch",
     "query_path",
     "merge_boxes",
+    "canonical_boxes",
     "dense_backend",
     "INDEX_MIN_ROWS",
     "DENSE_FRACTION",
@@ -909,6 +910,86 @@ def merge_boxes(q: QueryBox) -> QueryBox:
                 lo, hi = lo[sel].copy(), hi[sel].copy()
                 lo[:, d], hi[:, d] = mlo, mhi
                 changed = True
+    return QueryBox(q.shape, lo, hi)
+
+
+def canonical_boxes(q: QueryBox) -> QueryBox:
+    """Canonical decomposition: a function of the *cell set* alone.
+
+    ``merge_boxes`` reaches a fixpoint but the fixpoint depends on the
+    input decomposition, so two plans covering the same cells (per-hop
+    chain vs a composed view, unsharded vs sharded) can return different —
+    equally valid — box lists.  This computes the axis-ordered slab
+    decomposition instead: cut axis 0 wherever the canonical
+    (d-1)-dimensional cross-section changes, recurse, then merge adjacent
+    slabs with identical cross-sections.  Boundaries survive only where
+    the cross-section actually changes, which is intrinsic to the cell
+    set, so every decomposition of the same cells maps to identical
+    bytes.  Used as the final normal form on merged query answers.
+    """
+    if q.lo.shape[0] <= 1:
+        return q
+    nd = len(q.shape)
+    if nd == 0:
+        return QueryBox(q.shape, q.lo[:1], q.hi[:1])
+
+    def merge_1d(lo: np.ndarray, hi: np.ndarray):
+        order = np.argsort(lo[:, 0], kind="stable")
+        l, h = lo[order, 0], hi[order, 0]
+        out_l, out_h = [], []
+        cl, ch = l[0], h[0]
+        for i in range(1, l.size):
+            if l[i] <= ch + 1:
+                ch = max(ch, h[i])
+            else:
+                out_l.append(cl)
+                out_h.append(ch)
+                cl, ch = l[i], h[i]
+        out_l.append(cl)
+        out_h.append(ch)
+        return (
+            np.asarray(out_l, np.int64)[:, None],
+            np.asarray(out_h, np.int64)[:, None],
+        )
+
+    def rec(lo: np.ndarray, hi: np.ndarray):
+        if lo.shape[1] == 1:
+            return merge_1d(lo, hi)
+        cuts = np.unique(np.concatenate([lo[:, 0], hi[:, 0] + 1]))
+        memo: dict[tuple, tuple] = {}
+        slabs = []  # (start, end_exclusive, cross-section key, sub lo/hi)
+        for a, b in zip(cuts[:-1], cuts[1:]):
+            active = np.nonzero((lo[:, 0] <= a) & (hi[:, 0] >= a))[0]
+            if active.size == 0:
+                slabs.append((a, b, None, None, None))
+                continue
+            mk = tuple(active.tolist())
+            if mk not in memo:
+                sl, sh = rec(lo[active, 1:], hi[active, 1:])
+                memo[mk] = (sl.tobytes() + b"|" + sh.tobytes(), sl, sh)
+            slabs.append((a, b) + memo[mk])
+        out_lo, out_hi = [], []
+        i = 0
+        while i < len(slabs):
+            a, b, key, sl, sh = slabs[i]
+            if key is None:  # gap: no cells in this slab
+                i += 1
+                continue
+            j = i + 1
+            while j < len(slabs) and slabs[j][2] == key:
+                b = slabs[j][1]
+                j += 1
+            m = sl.shape[0]
+            out_lo.append(
+                np.concatenate([np.full((m, 1), a, np.int64), sl], axis=1)
+            )
+            out_hi.append(
+                np.concatenate([np.full((m, 1), b - 1, np.int64), sh], axis=1)
+            )
+            i = j
+        return np.concatenate(out_lo), np.concatenate(out_hi)
+
+    lo, hi = rec(np.asarray(q.lo, np.int64), np.asarray(q.hi, np.int64))
     return QueryBox(q.shape, lo, hi)
 
 

@@ -57,6 +57,7 @@ from .catalog import (
     DSLog,
     _apply_open_overrides,
     _atomic_write,
+    _write_blob,
     _DEFAULT_HOP_DECAY,
     _json_safe,
     _OpRecord,
@@ -65,10 +66,11 @@ from .catalog import (
 )
 from .commit import CommitPipeline, LeaseHeldError, WriterLease
 from .graph import CycleError, LineageGraph
-from .planner import _MERGE_SHRINK, EdgeStep, QueryPlan, QueryPlanner
+from .planner import _MERGE_SHRINK, _fmt_lid, EdgeStep, QueryPlan, QueryPlanner
 from .query import QueryBox, merge_boxes
 from .reuse import ReusePredictor
-from .table import CompressedTable
+from .table import CompressedTable, TableHandle
+from .views import ViewManager
 from .wal import WAL_FILENAME, WriteAheadLog
 
 __all__ = [
@@ -318,7 +320,7 @@ class ShardedQueryPlan(QueryPlan):
         for key in self.order:
             for step in self.steps.get(key, []):
                 opts = ", ".join(
-                    f"#{c.lineage_id}:{c.stored}/"
+                    f"{_fmt_lid(c.lineage_id)}:{c.stored}/"
                     f"{'nat' if c.frontier_on == 'key' else 'inv'}/"
                     f"{c.describe_route()}"
                     for c in step.choices
@@ -376,11 +378,14 @@ class ShardedQueryPlanner(QueryPlanner):
         for key, step_list in plan.steps.items():
             for step in step_list:
                 # entries between one array pair share a dst, hence a shard
-                owner = (
-                    log.owner_shard(step.choices[0].lineage_id)
-                    if step.choices
-                    else plan.node_shard[key]
-                )
+                if step.choices and step.choices[0].lineage_id < 0:
+                    # whole-route view: lives on the root facade; run it on
+                    # the frontier node's shard so no exchange is charged
+                    owner = plan.node_shard[step.u]
+                elif step.choices:
+                    owner = log.owner_shard(step.choices[0].lineage_id)
+                else:
+                    owner = plan.node_shard[key]
                 plan.step_shard[(step.u, step.v)] = owner
                 if plan.node_shard[step.u] != owner:
                     nb = max(1.0, plan.est_boxes.get(step.u, 1.0))
@@ -499,6 +504,9 @@ class ShardedDSLog:
         self.ops: list[_OpRecord] = []
         self.predictor = ReusePredictor(m=reuse_m)
         self.planner = ShardedQueryPlanner(self)
+        # whole-route views + answer cache live on the root facade (routes
+        # cross shard boundaries); shard-level managers stay empty
+        self.views = ViewManager(self)
         self.lineage = _ShardedLineageView(self)
         self._next_id = 0
         # per-shard id streams: lineage_id = shard + n_shards * counter, so
@@ -655,6 +663,14 @@ class ShardedDSLog:
             self.by_pair.setdefault((e.src, e.dst), []).append(lid)
             self._lid_shard[lid] = shard
             self._meta_dirty = True
+            # a recovered entry is new topology as far as the root knows:
+            # views/answers spanning this edge's route are stale
+            self.views.on_new_edge(e.src, e.dst)
+        # dirty/mutation records replayed inside the shard's own log fired
+        # that shard's (inert) ViewManager — mirror the precise
+        # invalidation here, where the cross-shard views actually live
+        for lid in sorted(sh._dirty):
+            self.views.on_mutation(lid)
 
     def _ensure_shard_lease(self, shard: int) -> None:
         """Writer mode: take the shard's writer lease before the first
@@ -695,6 +711,12 @@ class ShardedDSLog:
             "joins_packed": 0,
             "batch_rows": 0,
             "batch_rows_padded": 0,
+            "view_hits": 0,
+            "view_misses": 0,
+            "cache_hits": 0,
+            "cache_misses": 0,
+            "views_materialized": 0,
+            "views_invalidated": 0,
         }
         total.update(self._io)
         for sh in self._shards:
@@ -709,6 +731,7 @@ class ShardedDSLog:
         return (
             self._meta_dirty
             or self.predictor.dirty
+            or self.views.dirty
             or any(sh is not None and sh.dirty for sh in self._shards)
         )
 
@@ -758,6 +781,7 @@ class ShardedDSLog:
         self.by_pair.setdefault((src, dst), []).append(lineage_id)
         self._lid_shard[lineage_id] = dst_shard
         self._meta_dirty = True
+        self.views.on_new_edge(src, dst)
         return entry
 
     def _remove_entry(self, lineage_id: int) -> None:
@@ -783,6 +807,7 @@ class ShardedDSLog:
         sh = self.shard(shard)
         sh._persisted.pop(lineage_id, None)
         sh._drop_hop_stats(lineage_id)
+        self.views.on_mutation(lineage_id)
         for op in self.ops:
             if lineage_id in op.lineage_ids:
                 op.lineage_ids.remove(lineage_id)
@@ -798,6 +823,9 @@ class ShardedDSLog:
         if not self._exclusive:
             self._ensure_shard_lease(shard)
         self.shard(shard).mark_dirty(lineage_id)
+        # the record lands in the shard WAL, but whole-route views and
+        # cached answers live on the root — invalidate across the boundary
+        self.views.on_mutation(lineage_id)
 
     # ------------------------------------------------------------------ #
     # Planner cost-model feedback routes to the owning shard
@@ -810,6 +838,10 @@ class ShardedDSLog:
         pairs: int,
         qrows: int,
     ) -> None:
+        if lineage_id < 0:  # view hop: owned by the root's ViewManager
+            return self.views.record_hop(
+                lineage_id, stored, frontier_on, pairs, qrows
+            )
         self.shard(self.owner_shard(lineage_id)).record_hop(
             lineage_id, stored, frontier_on, pairs, qrows
         )
@@ -817,6 +849,8 @@ class ShardedDSLog:
     def hop_measurement(
         self, lineage_id: int, stored: str, frontier_on: str
     ) -> float | None:
+        if lineage_id < 0:
+            return self.views.hop_measurement(lineage_id, stored, frontier_on)
         return self.shard(self.owner_shard(lineage_id)).hop_measurement(
             lineage_id, stored, frontier_on
         )
@@ -1043,6 +1077,7 @@ class ShardedDSLog:
         if not (
             self._meta_dirty
             or self.predictor.dirty
+            or self.views.dirty
             or self._predictor_chunk is None
             or (self._wal is not None and self._wal.has_records)
             or not os.path.exists(manifest)
@@ -1090,6 +1125,13 @@ class ShardedDSLog:
         if self._wal is not None:
             self.commit()
             meta["wal_lsn"] = self._wal.end_lsn
+        # whole-route views live on the root: their routes cross shard
+        # boundaries, so only the facade sees every invalidation source
+        meta["views"] = self.views.manifest_chunk(self._write_view_blob)
+        _atomic_write(
+            os.path.join(self.root, "answers.json"),
+            json.dumps(self.views.cache_chunk()),
+        )
         payload = json.dumps(meta)
         _atomic_write(manifest, payload)
         self._bump("manifests_written")
@@ -1109,6 +1151,46 @@ class ShardedDSLog:
         for sh in shards:
             if sh._wal is not None:
                 sh._wal_lsn = sh._wal.checkpoint()
+
+    # borrowed writer: view blobs land in the root dir next to sig tables
+    _write_view_blob = DSLog._write_view_blob
+
+    def _view_lsns(self) -> dict[str, int]:
+        """End LSN of every WAL that could invalidate a view: the root log
+        plus each shard's — a view's route may span any subset of shards,
+        so all logs count.  Unloaded shards are probed by file (cheap frame
+        scan) rather than forcing a manifest load.  An in-memory store has
+        no WALs: every horizon is 0."""
+        if self.root is None:
+            return {"root": 0, **{f"shard_{k:02d}": 0 for k in range(self.n_shards)}}
+        lsns = {"root": self._wal.end_lsn if self._wal is not None else 0}
+        for k in range(self.n_shards):
+            sh = self._shards[k]
+            if sh is not None and sh._wal is not None:
+                end = sh._wal.end_lsn
+            else:
+                sub = self._shard_dir(k)
+                end = (
+                    WriteAheadLog.file_end_lsn(os.path.join(sub, WAL_FILENAME))
+                    if sub is not None
+                    else 0
+                )
+            lsns[f"shard_{k:02d}"] = end
+        return lsns
+
+    def _make_view_handle(self, fn: str, rows) -> TableHandle:
+        assert self.root is not None
+        root = self.root
+
+        def load() -> CompressedTable:
+            with open(os.path.join(root, fn), "rb") as f:
+                return CompressedTable.deserialize(f.read())
+
+        return TableHandle(
+            load,
+            None if rows is None else int(rows),
+            lambda: self._bump("tables_loaded"),
+        )
 
     @staticmethod
     def load(
@@ -1180,6 +1262,17 @@ class ShardedDSLog:
             log._predictor_chunk = chunk
         log._meta_dirty = False
         log._wal_lsn = int(meta.get("wal_lsn", 0))
+        # views + cached answers restore BEFORE WAL replay (root tail and
+        # shard tails alike): replayed entry/drop/dirty records then fire
+        # the same precise invalidation they did live
+        log.views.load_chunk(meta.get("views"), log._make_view_handle)
+        answers = os.path.join(root, "answers.json")
+        if os.path.exists(answers):
+            try:
+                with open(answers) as f:
+                    log.views.load_cache_chunk(json.load(f))
+            except (ValueError, KeyError):
+                pass  # torn/stale sidecar: start with a cold cache
         log._recover_wals()
         if eager:
             for k in range(log.n_shards):
@@ -1247,7 +1340,9 @@ class ShardedDSLog:
             for key, val in self.shard(k).compact(save=False).items():
                 stats[key] += val
         # the root dir owns no lineage blobs, only predictor sig tables
+        # and materialized-view blobs
         referenced = manifest_referenced_files((), self._predictor_chunk)
+        referenced |= self.views.blob_files()
         for key, val in _vacuum_dir(self.root, referenced).items():
             stats[key] += val
         return stats

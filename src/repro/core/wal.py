@@ -209,6 +209,37 @@ class WriteAheadLog:
         except OSError:
             return False
 
+    @staticmethod
+    def file_end_lsn(path: str) -> int:
+        """End LSN of a log file on disk without opening it as a live log.
+
+        Read-only frame scan up to the last intact record boundary (a torn
+        tail contributes nothing — recovery would discard it too).  Returns
+        ``0`` for a missing or non-WAL file.  Used by stale-view checks
+        that need a shard's LSN horizon without loading the shard.
+        """
+        try:
+            with open(path, "rb") as f:
+                if f.read(len(_MAGIC)) != _MAGIC:
+                    return 0
+                raw = f.read(8)
+                if len(raw) < 8:
+                    return 0
+                (base,) = struct.unpack("<Q", raw)
+                good = _HEADER_SIZE
+                while True:
+                    hdr = f.read(_REC_HEADER.size)
+                    if len(hdr) < _REC_HEADER.size:
+                        break
+                    plen, crc = _REC_HEADER.unpack(hdr)
+                    payload = f.read(plen)
+                    if len(payload) < plen or zlib.crc32(payload) != crc:
+                        break
+                    good += _REC_HEADER.size + plen
+                return base + (good - _HEADER_SIZE)
+        except OSError:
+            return 0
+
     @property
     def has_records(self) -> bool:
         if self._pending:

@@ -26,6 +26,15 @@ raw bytes (WAL scanning reimplemented read-only here rather than through
   legitimate after a crash between shard save and root save).
 * **interval invariants** — each blob's ``lo ≤ hi`` per attribute,
   ``val_ref`` within the key arity, row counts equal to the manifest's.
+* **materialized views** — every view blob decodes, every lineage id on a
+  view's route still exists, and no WAL holds an invalidation the view
+  predates: a ``dirty``/``drop`` record for an id on the route, or an
+  ``entry`` record landing inside the route (an endpoint upstream of the
+  view's source and one downstream of its target), with an LSN past the
+  view's recorded horizon for that log, makes the view **stale** (error —
+  its rows no longer describe the store).  The answer-cache sidecar
+  (``answers.json``) must parse; a torn sidecar is a warning (reopen
+  starts cold).
 * **lease / writer-slot liveness** — stale ``writer.lock`` files and
   writer-presence slots left by dead processes (warning).
 
@@ -74,6 +83,7 @@ class Report:
             "wal_records": 0,
             "entries": 0,
             "shards": 0,
+            "views": 0,
         }
 
     def add(self, severity: str, category: str, path: str, detail: str) -> None:
@@ -257,6 +267,173 @@ def _check_blob(
 
 
 # --------------------------------------------------------------------------
+# materialized-view checks
+# --------------------------------------------------------------------------
+
+
+def _scan_wal_payloads(path: str) -> list[tuple[str, dict, int]]:
+    """Decoded ``(type, meta, end_lsn)`` for every intact record (read-only;
+    integrity findings are ``_check_wal``'s job — here a bad frame just ends
+    the scan, exactly as recovery would)."""
+    out: list[tuple[str, dict, int]] = []
+    try:
+        with open(path, "rb") as f:
+            data = f.read()
+    except OSError:
+        return out
+    if len(data) < _HEADER_SIZE or data[: len(_MAGIC)] != _MAGIC:
+        return out
+    (base_lsn,) = struct.unpack_from("<Q", data, len(_MAGIC))
+    off = _HEADER_SIZE
+    while len(data) - off >= _REC_HEADER.size:
+        length, crc = _REC_HEADER.unpack_from(data, off)
+        body_at = off + _REC_HEADER.size
+        if len(data) - body_at < length:
+            break
+        payload = data[body_at : body_at + length]
+        if zlib.crc32(payload) != crc:
+            break
+        try:
+            (jlen,) = struct.unpack_from("<I", payload, 0)
+            head = json.loads(payload[4 : 4 + jlen])
+            rtype = head.pop("t")
+            head.pop("nb", None)
+        except (struct.error, ValueError):
+            break
+        off = body_at + length
+        out.append((rtype, head, base_lsn + (off - _HEADER_SIZE)))
+    return out
+
+
+def _reach(adj: dict[str, set[str]], start: str) -> set[str]:
+    seen = {start}
+    frontier = [start]
+    while frontier:
+        for nxt in adj.get(frontier.pop(), ()):
+            if nxt not in seen:
+                seen.add(nxt)
+                frontier.append(nxt)
+    return seen
+
+
+def _check_views(
+    report: Report,
+    directory: str,
+    views_chunk: dict | None,
+    known_lids: set[int],
+    known_arrays: set[str],
+    base_edges: list[tuple[int, str, str]],
+    wal_paths: dict[str, str],
+) -> None:
+    """Blob closure, route closure, and WAL-precise staleness for every
+    persisted view.  ``base_edges`` is the manifest's ``(lid, src, dst)``
+    list; ``wal_paths`` maps each key of a view's ``lsns`` horizon dict to
+    its log file."""
+    rel_manifest = os.path.relpath(
+        os.path.join(directory, "catalog.json"), report.root
+    )
+    recs = list(views_chunk.get("views", [])) if views_chunk else []
+    sidecar = os.path.join(directory, "answers.json")
+    if os.path.exists(sidecar):
+        rel = os.path.relpath(sidecar, report.root)
+        try:
+            with open(sidecar) as f:
+                chunk = json.load(f)
+            for ent in chunk.get("answers", []):
+                ent["key"], ent["boxes"]  # shape probe
+        except (OSError, ValueError, KeyError, TypeError) as exc:
+            report.add(
+                "warn",
+                "answer-cache",
+                rel,
+                f"torn answer-cache sidecar ({exc}); reopen starts cold",
+            )
+    if not recs:
+        return
+
+    for rec in recs:
+        report.checked["views"] += 1
+        vid = rec.get("id")
+        _check_blob(report, directory, rec["file"], rec.get("rows"))
+        if rec.get("fwd"):
+            _check_blob(report, directory, rec["fwd"], rec.get("fwd_rows"))
+        for lid in rec.get("lids", []):
+            if int(lid) not in known_lids:
+                report.add(
+                    "error",
+                    "view-stale",
+                    rel_manifest,
+                    f"view {vid} composes lineage id {lid}, which the "
+                    "manifest no longer holds",
+                )
+        for name in rec.get("arrays", []):
+            if name not in known_arrays:
+                report.add(
+                    "error",
+                    "view-stale",
+                    rel_manifest,
+                    f"view {vid} spans array {name!r}, which the manifest "
+                    "no longer declares",
+                )
+
+    # WAL-precise staleness: replay each log's tail against the views,
+    # firing the same rules the live invalidation hooks apply.
+    for key, wal_path in sorted(wal_paths.items()):
+        records = _scan_wal_payloads(wal_path)
+        if not records:
+            continue
+        rel_wal = os.path.relpath(wal_path, report.root)
+        fwd: dict[str, set[str]] = {}
+        bwd: dict[str, set[str]] = {}
+        by_lid: dict[int, tuple[str, str]] = {}
+        for lid, src, dst in base_edges:
+            fwd.setdefault(src, set()).add(dst)
+            bwd.setdefault(dst, set()).add(src)
+            by_lid[lid] = (src, dst)
+        for rtype, m, lsn in records:
+            horizon = lambda rec: int(rec.get("lsns", {}).get(key, 0))
+            if rtype == "entry":
+                src, dst = m["src"], m["dst"]
+                fwd.setdefault(src, set()).add(dst)
+                bwd.setdefault(dst, set()).add(src)
+                by_lid[int(m["id"])] = (src, dst)
+                up = _reach(bwd, src)
+                down = _reach(fwd, dst)
+                for rec in recs:
+                    if (
+                        lsn > horizon(rec)
+                        and rec["src"] in up
+                        and rec["dst"] in down
+                    ):
+                        report.add(
+                            "error",
+                            "view-stale",
+                            rel_wal,
+                            f"entry {m['id']} ({src}->{dst}, LSN {lsn}) lands "
+                            f"on view {rec.get('id')}'s route past its "
+                            f"horizon {horizon(rec)}",
+                        )
+            elif rtype in ("dirty", "drop"):
+                lid = int(m["id"])
+                if rtype == "drop" and lid in by_lid:
+                    src, dst = by_lid.pop(lid)
+                    fwd.get(src, set()).discard(dst)
+                    bwd.get(dst, set()).discard(src)
+                for rec in recs:
+                    if lsn > horizon(rec) and lid in [
+                        int(x) for x in rec.get("lids", [])
+                    ]:
+                        report.add(
+                            "error",
+                            "view-stale",
+                            rel_wal,
+                            f"{rtype} record for entry {lid} (LSN {lsn}) "
+                            f"invalidates view {rec.get('id')} past its "
+                            f"horizon {horizon(rec)}",
+                        )
+
+
+# --------------------------------------------------------------------------
 # lease / writer-slot checks
 # --------------------------------------------------------------------------
 
@@ -415,8 +592,19 @@ def _check_store_dir(report: Report, directory: str) -> dict | None:
             rel_manifest,
             [(rec["src"], rec["dst"]) for rec in lineage_recs],
         )
+        _check_views(
+            report,
+            directory,
+            meta.get("views"),
+            {int(rec["id"]) for rec in lineage_recs},
+            set(meta.get("arrays", {})),
+            [(int(r["id"]), r["src"], r["dst"]) for r in lineage_recs],
+            {"": wal_path} if os.path.exists(wal_path) else {},
+        )
         # orphan sweep with the exact closure compact() vacuums against
-        referenced = manifest_referenced_files(lineage_recs, predictor_chunk)
+        referenced = manifest_referenced_files(
+            lineage_recs, predictor_chunk, meta.get("views")
+        )
         for fn in sorted(os.listdir(directory)):
             if not os.path.isfile(os.path.join(directory, fn)):
                 continue
@@ -554,7 +742,25 @@ def _check_sharded_root(report: Report, root: str, meta: dict) -> None:
         for sig in predictor_chunk.get("sigs", []):
             for fn in sig.get("tables", {}).values():
                 _check_blob(report, root, fn, None)
-    referenced = manifest_referenced_files((), predictor_chunk)
+    # whole-route views live on the root; any log (root or shard) can
+    # hold the record that staled one
+    view_wals = {}
+    if os.path.exists(wal_path):
+        view_wals["root"] = wal_path
+    for k in range(n_shards):
+        sub_wal = os.path.join(root, f"shard_{k:02d}", WAL_FILENAME)
+        if os.path.exists(sub_wal):
+            view_wals[f"shard_{k:02d}"] = sub_wal
+    _check_views(
+        report,
+        root,
+        meta.get("views"),
+        {int(lid) for _, _, lid, _ in edges},
+        set(arrays),
+        [(int(lid), src, dst) for src, dst, lid, _ in edges],
+        view_wals,
+    )
+    referenced = manifest_referenced_files((), predictor_chunk, meta.get("views"))
     for fn in sorted(os.listdir(root)):
         if not os.path.isfile(os.path.join(root, fn)):
             continue
@@ -620,6 +826,7 @@ def main(argv: list[str] | None = None) -> int:
         print(
             f"fsck: {state}: {report.checked['entries']} entries, "
             f"{report.checked['blobs']} blobs, "
+            f"{report.checked['views']} views, "
             f"{report.checked['wal_records']} wal records, "
             f"{report.checked['shards']} shards checked; "
             f"{len(report.errors)} error(s), {len(report.warnings)} warning(s)"

@@ -10,19 +10,24 @@ Rank order (outermost → innermost):
 
 1.  ``shard._shard_load_lock`` — serialises lazy shard materialisation on a
     ``ShardedDSLog``; taken before any per-shard state is touched.
-2.  ``table._lock`` — per-``TableHandle`` single-fire load latch; the loader
+2.  ``views._lock`` — ``ViewManager`` state (materialized views, route
+    heat, the answer cache).  Invalidation hooks fire while a shard is
+    being absorbed (load lock held), so it nests inside the load lock; view
+    composition and blob loads happen *outside* it, so it stays above
+    ``table._lock``.
+3.  ``table._lock`` — per-``TableHandle`` single-fire load latch; the loader
     may bump store I/O meters, so it sits above the stats locks.
-3.  ``commit._flush_mutex`` — the durability barrier: held across "write
+4.  ``commit._flush_mutex`` — the durability barrier: held across "write
     dirty state, then flush the WAL", so it must be *outside* ``wal._lock``.
     This is the one place the code deviates from the naive
     catalog → shard → wal → commit reading of the subsystem layering: the
     commit pipeline is the WAL's *caller* during a flush, never the other
     way round, so commit locks rank above (outside) the WAL lock.
-4.  ``commit._lock`` — protects the pipeline's dirty/LSN bookkeeping; nested
+5.  ``commit._lock`` — protects the pipeline's dirty/LSN bookkeeping; nested
     inside ``_flush_mutex`` by ``CommitPipeline._flush_dirty``.
-5.  ``wal._lock`` — serialises appends/flushes on one ``WriteAheadLog``.
-6.  ``shard._stats_lock`` — ``ShardedDSLog`` I/O + hop-stats meters (leaf).
-7.  ``catalog._stats_lock`` — ``DSLog`` I/O + hop-stats meters (leaf).
+6.  ``wal._lock`` — serialises appends/flushes on one ``WriteAheadLog``.
+7.  ``shard._stats_lock`` — ``ShardedDSLog`` I/O + hop-stats meters (leaf).
+8.  ``catalog._stats_lock`` — ``DSLog`` I/O + hop-stats meters (leaf).
 
 Lock names are ``"<module stem>.<attribute>"``; every lock constructed via
 ``repro.core._locks`` carries one.
@@ -32,6 +37,7 @@ from __future__ import annotations
 
 LOCK_ORDER: dict[str, int] = {
     "shard._shard_load_lock": 10,
+    "views._lock": 15,
     "table._lock": 20,
     "commit._flush_mutex": 30,
     "commit._lock": 40,
@@ -45,6 +51,7 @@ LOCK_ORDER: dict[str, int] = {
 #: stem, so facade code touching its own stats lock maps correctly.
 STATIC_LOCKS: dict[tuple[str, str], str] = {
     ("shard", "_shard_load_lock"): "shard._shard_load_lock",
+    ("views", "_lock"): "views._lock",
     ("shard", "_stats_lock"): "shard._stats_lock",
     ("catalog", "_stats_lock"): "catalog._stats_lock",
     ("table", "_lock"): "table._lock",
