@@ -849,6 +849,27 @@ def _build_accel_dag(shape, branches: int, hops: int, seed: int = 0):
     return log
 
 
+def _ragged_frontier(k: int, row_lo: int, row_hi: int, n_attrs: int,
+                     seed: int = 0):
+    """``k`` independent interval-overlap joins with ragged row counts.
+
+    The segment shapes a multi-branch plan wave hands the batched
+    executor: every segment a different (nq, nr), boxes overlapping
+    sparsely so the pair lists are non-trivial on both layouts.
+    """
+    rng = np.random.default_rng(seed)
+    segs = []
+    for _ in range(k):
+        nq = int(rng.integers(row_lo, row_hi))
+        nr = int(rng.integers(row_lo, row_hi))
+        q_lo = rng.integers(0, 512, size=(nq, n_attrs)).astype(np.int64)
+        r_lo = rng.integers(0, 512, size=(nr, n_attrs)).astype(np.int64)
+        q_hi = q_lo + rng.integers(1, 48, size=(nq, n_attrs))
+        r_hi = r_lo + rng.integers(1, 48, size=(nr, n_attrs))
+        segs.append((q_lo, q_hi, r_lo, r_hi))
+    return segs
+
+
 def run_accel_ablation(
     shape=(32, 31),
     branches: int = 20,
@@ -858,7 +879,7 @@ def run_accel_ablation(
     smoke: bool = False,
     verbose: bool = True,
 ) -> list[dict]:
-    """Batched frontier execution vs the per-hop join loop (ISSUE 5).
+    """Batched frontier execution vs the per-hop join loop (ISSUE 5 + 8).
 
     The DAG's hops are small dense joins (permutation tables under the
     index threshold) — the regime where dispatching one tiny mask
@@ -873,11 +894,21 @@ def run_accel_ablation(
       twin's numpy inner loops release the GIL, so they overlap on CPU),
 
     asserts all three produce bit-identical results, and reports the
-    io_stats batching meters.
+    io_stats batching meters (including the block-diagonal tile meters).
+
+    A second record (``kind="layout"``, ISSUE 8) measures the kernel
+    launch layouts head-to-head on a large ragged frontier: one masked
+    cross-product launch vs the block-diagonal tile schedule, same
+    segments, pair lists asserted bit-identical to each other and to a
+    per-segment dense oracle.
     """
     if smoke:
         shape, branches, hops, n_cells, repeats = (24, 22), 10, 2, 192, 5
     log = _build_accel_dag(shape, branches, hops)
+    # this ablation measures the join *engines* — disable the view/answer
+    # cache layer, which would otherwise serve every repeat after the first
+    # warmup query and time nothing but cache lookups
+    log.views.enabled = False
     rng = np.random.default_rng(7)
     n = int(np.prod(shape))
     flat = rng.choice(n, size=n_cells, replace=False)
@@ -907,6 +938,7 @@ def run_accel_ablation(
 
     total_hops = branches * (hops + 1)
     rec = {
+        "kind": "exec",
         "shape": shape,
         "branches": branches,
         "hops": total_hops,
@@ -918,6 +950,8 @@ def run_accel_ablation(
         "parallel_speedup": batched_s / parallel_s,
         "launches_per_query": launches / queries_run,
         "joins_per_launch": packed / max(launches, 1),
+        "batch_tiles_visited": log.io_stats["batch_tiles_visited"],
+        "batch_tiles_skipped": log.io_stats["batch_tiles_skipped"],
     }
     if verbose:
         print(
@@ -929,7 +963,71 @@ def run_accel_ablation(
             f"joins/launch={rec['joins_per_launch']:4.1f}",
             flush=True,
         )
-    return [rec]
+    return [rec, _run_layout_ablation(smoke=smoke, verbose=verbose)]
+
+
+def _run_layout_ablation(smoke: bool = False, verbose: bool = True) -> dict:
+    """Masked cross-product launch vs the block-diagonal tile schedule.
+
+    One large ragged frontier (≥16 segments), both launch layouts forced
+    through :func:`repro.kernels.ops.segmented_range_join_pairs` under the
+    interpreter, pair lists asserted bit-identical to each other and to a
+    per-segment ``range_join_pairs`` oracle.  The interpreter charges every
+    scheduled tile, so the time ratio tracks the tile ratio — the same
+    quantity that sets real-accelerator cost, reported alongside as
+    ``tiles_visited`` / ``tiles_skipped``.
+    """
+    from repro.kernels.ops import range_join_pairs, segmented_range_join_pairs
+
+    k, row_lo, row_hi, repeats = (16, 64, 160, 3) if smoke else (24, 96, 224, 5)
+    block_q = block_r = 128
+    segs = _ragged_frontier(k, row_lo, row_hi, n_attrs=2, seed=11)
+
+    def run(layout):
+        pairs, info = segmented_range_join_pairs(
+            segs, block_q=block_q, block_r=block_r, interpret=True,
+            layout=layout,
+        )
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            pairs, info = segmented_range_join_pairs(
+                segs, block_q=block_q, block_r=block_r, interpret=True,
+                layout=layout,
+            )
+            ts.append(time.perf_counter() - t0)
+        return sorted(ts)[len(ts) // 2], pairs, info
+
+    dense_s, dense_pairs, dense_info = run("dense")
+    diag_s, diag_pairs, diag_info = run("blockdiag")
+    for s, (q_lo, q_hi, r_lo, r_hi) in enumerate(segs):
+        want = range_join_pairs(q_lo, q_hi, r_lo, r_hi, interpret=True)
+        for label, got in (("dense", dense_pairs[s]), ("blockdiag", diag_pairs[s])):
+            assert np.array_equal(got[0], want[0]) and np.array_equal(
+                got[1], want[1]
+            ), f"{label} layout pairs differ from per-segment oracle (seg {s})"
+    rec = {
+        "kind": "layout",
+        "segments": k,
+        "rows": int(dense_info["rows"]),
+        "geometry": f"{block_q}x{block_r}",
+        "dense_s": dense_s,
+        "blockdiag_s": diag_s,
+        "blockdiag_speedup": dense_s / diag_s,
+        "tiles_visited": int(diag_info["tiles_visited"]),
+        "tiles_skipped": int(diag_info["tiles_skipped"]),
+        "cross_tiles": int(dense_info["tiles_visited"]),
+    }
+    if verbose:
+        print(
+            f"  layout_ablation k={k} rows={rec['rows']} "
+            f"dense={dense_s * 1e3:7.1f}ms blockdiag={diag_s * 1e3:7.1f}ms "
+            f"speedup={rec['blockdiag_speedup']:4.2f}x "
+            f"tiles={rec['tiles_visited']}/{rec['cross_tiles']} "
+            f"(skipped {rec['tiles_skipped']})",
+            flush=True,
+        )
+    return rec
 
 
 def _build_view_chain(shape, hops: int, seed: int = 0):

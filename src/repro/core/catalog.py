@@ -45,6 +45,8 @@ from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from repro.kernels.autotune import GeometryTuner  # jax-free geometry table
+
 from . import _locks
 from .commit import CommitPipeline, WriterLease
 from .graph import CycleError, LineageGraph
@@ -341,6 +343,9 @@ class DSLog:
         self.predictor = ReusePredictor(m=reuse_m)
         self.planner = QueryPlanner(self)
         self.views = ViewManager(self)
+        # measured launch geometries for the batched join engines, persisted
+        # as an autotune.json sidecar and consulted by planner.executor
+        self.autotune = GeometryTuner()
         self._next_id = 0
         # persistence bookkeeping: which entries need (re)writing, the
         # manifest records of already-persisted entries, and lazy-I/O
@@ -374,6 +379,11 @@ class DSLog:
                 "joins_packed": 0,
                 "batch_rows": 0,
                 "batch_rows_padded": 0,
+                # tile schedule of those dispatches: tiles actually
+                # evaluated vs the cross-product tiles the block-diagonal
+                # layout skipped (kernels/range_join.py)
+                "batch_tiles_visited": 0,
+                "batch_tiles_skipped": 0,
                 # materialized views + answer cache (repro/core/views.py)
                 "view_hits": 0,
                 "view_misses": 0,
@@ -1226,6 +1236,11 @@ class DSLog:
             os.path.join(self.root, "answers.json"),
             json.dumps(self.views.cache_chunk()),
         )
+        _atomic_write(
+            os.path.join(self.root, "autotune.json"),
+            json.dumps(self.autotune.to_manifest()),
+        )
+        self.autotune.dirty = False
 
         payload = json.dumps(meta)
         _atomic_write(os.path.join(self.root, "catalog.json"), payload)
@@ -1439,6 +1454,13 @@ class DSLog:
                     log.views.load_cache_chunk(json.load(f))
             except (ValueError, KeyError):
                 pass  # torn/stale sidecar: start with a cold cache
+        autotune = os.path.join(root, "autotune.json")
+        if os.path.exists(autotune):
+            try:
+                with open(autotune) as f:
+                    log.autotune.load_manifest(json.load(f))
+            except ValueError:
+                pass  # torn sidecar: start with a cold geometry table
         if os.path.exists(os.path.join(root, WAL_FILENAME)):
             log._attach_wal()
         return log

@@ -75,7 +75,10 @@ _MERGE_SHRINK = 0.5  # expected box-count shrink from merge_boxes
 # measured per-pair advantage of the packed batched-dense engine over the
 # per-hop blocked loop (contiguous int32 columns + one dispatch per
 # frontier); makes "batched" competitive where "dense" would lose to the
-# index by less than ~2x
+# index by less than ~2x.  This is the *prior* at perfect tile occupancy —
+# the effective discount scales by the executor's measured tile waste
+# (scheduled tile cells / useful pair cells), so frontiers whose shape pads
+# badly stop looking artificially cheap to the batched route.
 _BATCHED_PAIR_DISCOUNT = 0.5
 
 
@@ -166,10 +169,29 @@ class QueryPlanner:
 
     @property
     def executor(self) -> BatchedJoinExecutor:
-        """The (lazily created) batched join engine, metering io_stats."""
+        """The (lazily created) batched join engine, metering io_stats.
+
+        Launch geometry comes from the store's persisted autotune table
+        (``log.autotune``), so a reopened store starts on its measured
+        winners instead of re-tuning.
+        """
         if self._executor is None:
-            self._executor = BatchedJoinExecutor(stats=self.log._bump)
+            self._executor = BatchedJoinExecutor(
+                stats=self.log._bump,
+                tuner=getattr(self.log, "autotune", None),
+            )
         return self._executor
+
+    def _batched_discount(self) -> float:
+        """Per-pair cost multiplier for the batched-dense route.
+
+        The flat prior sharpened by the executor's measured tile occupancy:
+        before any dispatch this is exactly ``_BATCHED_PAIR_DISCOUNT``;
+        once frontiers run, padding-heavy shapes raise it toward (and past)
+        parity with the per-hop dense cost, capped at 1.0 so measurement
+        never makes batched look *worse* than the engine it replaces wholesale.
+        """
+        return min(1.0, _BATCHED_PAIR_DISCOUNT * self.executor.measured_waste)
 
     def _entry(self, lineage_id: int) -> "LineageEntry":
         """Resolve a hop id to its entry; negative ids are view shortcuts
@@ -445,7 +467,7 @@ class QueryPlanner:
         est_pairs = self._estimate_pairs(
             table, nr, frontier_on, nq, frontier, measured
         )
-        dense_cost = nq * nr * (_BATCHED_PAIR_DISCOUNT if batched else 1.0)
+        dense_cost = nq * nr * (self._batched_discount() if batched else 1.0)
         # route: small tables and unselective frontiers go dense
         if nr < INDEX_MIN_ROWS or est_pairs > DENSE_FRACTION * nq * nr:
             route = "batched" if batched else "dense"
@@ -502,7 +524,12 @@ class QueryPlanner:
             int32_ok = table.int32_safe(
                 "key" if frontier_on == "key" else "value"
             )
-        return dense_backend(n_attrs, int32_ok, segmented=segmented)
+        note = dense_backend(n_attrs, int32_ok, segmented=segmented)
+        if segmented:
+            # batched hops also show the launch geometry the executor will
+            # use, e.g. "batched(tpu:64x256)" / "batched(np:cpu:4m)"
+            note = f"{note}:{self.executor.geometry_label(note)}"
+        return note
 
     def _estimate_pairs(
         self,

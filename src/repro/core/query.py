@@ -50,6 +50,14 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.kernels.autotune import (  # jax-free: geometry table + buckets
+    CANDIDATE_TWIN_CELLS,
+    DEFAULT_GEOMETRY,
+    DEFAULT_TWIN_CELLS,
+    GeometryTuner,
+    shape_bucket,
+)
+
 from .index import IntervalIndex, ragged_ranges
 from .intervals import coalesce_1d, lexsort_rows
 from .provrc import _group_ids
@@ -615,12 +623,20 @@ class JoinRequest:
     path: str = "auto"
 
 
+# autotuning thresholds: frontiers below these run the default geometry —
+# measuring candidates costs extra dispatches, which only amortize when the
+# workload itself is big enough to show a geometry's effect
+_TUNE_MIN_ROWS = 2048  # kernel path: packed q+r rows across the frontier
+_TWIN_TUNE_MIN_CELLS = 1 << 22  # twin: mask cells of the largest segment
+
+
 def _twin_pairs(
     q_lo: np.ndarray,
     q_hi: np.ndarray,
     rl: np.ndarray,
     rh: np.ndarray,
     scratch: dict | None = None,
+    block_cells: int = DEFAULT_TWIN_CELLS[0],
 ) -> tuple[np.ndarray, np.ndarray]:
     """Blocked dense overlap pairs over packed table columns.
 
@@ -650,7 +666,9 @@ def _twin_pairs(
         qdt = np.int64
     qlt = np.ascontiguousarray(q_lo.T, dtype=qdt)  # [l, nq]
     qht = np.ascontiguousarray(q_hi.T, dtype=qdt)
-    block = max(1, int(4_000_000 // max(nr, 1)))
+    # block_cells is the twin's launch geometry (mask cells per row block);
+    # the executor's GeometryTuner picks it per frontier-shape bucket
+    block = max(1, int(block_cells // max(nr, 1)))
     rows = min(block, nq)
     if scratch is None:
         scratch = {}
@@ -709,15 +727,66 @@ class BatchedJoinExecutor:
     Segments the kernel cannot express faithfully (lane capacity, int32
     overflow — see the ``np:*`` notes in ``plan.describe()``) route to the
     twin automatically.  Results are bit-identical to the serial per-hop
-    loop; ``stats`` (an ``io_stats`` bump callable) meters launches and
-    batch occupancy.
+    loop; ``stats`` (an ``io_stats`` bump callable) meters launches, batch
+    occupancy, and the tile schedule (``batch_tiles_visited`` vs the
+    cross-product tiles the block-diagonal layout ``batch_tiles_skipped``).
+
+    Launch geometry comes from a :class:`~repro.kernels.autotune.
+    GeometryTuner` (``tuner``; the store's persisted table when the planner
+    creates the executor): on the first big frontier of a new (backend,
+    shape-bucket) combination the candidates are measured in place and the
+    winner cached — ``(block_q, block_r)`` tiles for the kernel path, the
+    mask-block cell budget for the twin.  ``engine`` pins the dense engine
+    for tests/benchmarks: ``"kernel"`` forces the segmented Pallas path
+    (interpreted when no TPU is attached), ``"twin"`` the numpy path,
+    ``None`` picks by backend as before.
     """
 
-    def __init__(self, stats=None, interpret: bool | None = None):
+    def __init__(
+        self,
+        stats=None,
+        interpret: bool | None = None,
+        tuner: "GeometryTuner | None" = None,
+        engine: str | None = None,
+    ):
+        if engine not in (None, "kernel", "twin"):
+            raise ValueError(f"unknown dense engine {engine!r}")
         self._stats = stats if stats is not None else (lambda key, n=1: None)
         self._interpret = interpret
+        self._tuner = tuner if tuner is not None else GeometryTuner()
+        self._engine = engine
         self._pool = None  # lazy worker pool for twin-segment fan-out
         self._pool_width = 0
+        # measured tile occupancy: EMA of (scheduled tile cells / useful
+        # pair cells) over dense dispatches — the planner's batched-route
+        # discount scales by this instead of assuming perfect packing
+        self._tile_waste = 1.0
+        # most recent launch geometry per engine family, for plan notes
+        self._last_geometry: dict[str, tuple[int, ...]] = {}
+
+    @property
+    def measured_waste(self) -> float:
+        """EMA of scheduled-tile cells over useful pair cells (≥ 1)."""
+        return self._tile_waste
+
+    def _observe_occupancy(self, tile_cells: float, useful_cells: float) -> None:
+        if useful_cells <= 0:
+            return
+        waste = max(1.0, tile_cells / useful_cells)
+        self._tile_waste = 0.8 * self._tile_waste + 0.2 * waste
+
+    def geometry_label(self, backend: str) -> str:
+        """Launch-geometry annotation for ``plan.describe()`` hop notes.
+
+        ``256x256``-style tile shapes for the kernel path (``backend ==
+        "tpu"``), the twin's mask-block budget (``4m`` cells) otherwise —
+        the most recently used geometry, or the default before any dispatch.
+        """
+        if backend == "tpu":
+            bq, br = self._last_geometry.get("kernel", DEFAULT_GEOMETRY)
+            return f"{bq}x{br}"
+        (cells,) = self._last_geometry.get("np", DEFAULT_TWIN_CELLS)
+        return f"{cells >> 20}m" if cells >= 1 << 20 else f"{cells >> 10}k"
 
     def _workers(self, width: int):
         """A reusable thread pool for splitting twin segments (CPU mode)."""
@@ -786,14 +855,21 @@ class BatchedJoinExecutor:
             if self._interpret is not None
             else (default_interpret() if default_interpret else True)
         )
-        if not interpret and LANES is not None:
+        use_kernel = self._engine == "kernel" or (
+            self._engine is None and not interpret
+        )
+        if use_kernel and LANES is not None:
             # eligibility is per segment: one over-wide or int64 join must
             # not demote the rest of the frontier off the kernel path (and
-            # over-wide segments never inflate the shared pack width)
+            # over-wide segments never inflate the shared pack width).  The
+            # lane slack keeps the dense-layout fallback — which spends one
+            # spare lane on the segment id when packing several segments —
+            # expressible for any eligible subset.
+            lane_slack = 1 if len(items) > 1 else 0
             kernel_idx = [
                 k
                 for k, it in enumerate(items)
-                if 2 * (it[3].shape[1] + 1) <= LANES
+                if 2 * (it[3].shape[1] + lane_slack) <= LANES
                 and fits_int32(it[2], it[3], it[5], it[6])
             ]
 
@@ -811,21 +887,100 @@ class BatchedJoinExecutor:
                 (items[k][2], items[k][3], items[k][5], items[k][6])
                 for k in kernel_idx
             ]
-            seg_pairs, info = segmented_range_join_pairs(
-                segs, interpret=interpret
-            )
+            shapes = [(s[0].shape[0], s[2].shape[0], s[0].shape[1]) for s in segs]
+            backend = "tpu" if not interpret else "interpret"
+            bucket = shape_bucket(shapes)
+            geom = self._tuner.lookup(backend, bucket)
+            result = None
+            if geom is None:
+                if sum(nq + nr for nq, nr, _ in shapes) >= _TUNE_MIN_ROWS:
+                    # first big frontier of this shape: measure the
+                    # candidates on it (the winner's run is kept, so the
+                    # tuning dispatch does the real work) and persist the
+                    # geometry via the store's autotune table
+                    geom, result = self._tuner.pick(
+                        backend,
+                        bucket,
+                        runner=lambda g: segmented_range_join_pairs(
+                            segs, block_q=g[0], block_r=g[1],
+                            interpret=interpret,
+                        ),
+                    )
+                else:
+                    geom = DEFAULT_GEOMETRY
+            if result is None:
+                result = segmented_range_join_pairs(
+                    segs, block_q=geom[0], block_r=geom[1], interpret=interpret
+                )
+            seg_pairs, info = result
             for k, (ui, ri) in zip(kernel_idx, seg_pairs):
                 finalize(k, ui, ri)
+            self._last_geometry["kernel"] = tuple(geom)
             self._stats("kernel_launches", info["launches"])
             self._stats("joins_packed", len(kernel_idx))
             self._stats("batch_rows", info["rows"])
             self._stats("batch_rows_padded", info["rows_padded"])
+            self._stats("batch_tiles_visited", info["tiles_visited"])
+            self._stats("batch_tiles_skipped", info["tiles_skipped"])
+            self._observe_occupancy(
+                float(info["tiles_visited"]) * geom[0] * geom[1],
+                float(sum(nq * nr for nq, nr, _ in shapes)),
+            )
         done = set(kernel_idx)
         rest = [k for k in range(len(items)) if k not in done]
         if not rest:
             return
         rows = sum(items[k][2].shape[0] + items[k][5].shape[0] for k in rest)
         pairs: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+
+        # The twin evaluates each segment independently — exactly the
+        # block-diagonal schedule — so meter its tile bill (in units of the
+        # default kernel geometry, for comparability) against the
+        # cross-product launch it avoids.
+        bq, br = DEFAULT_GEOMETRY
+        seg_qb = [-(-items[k][2].shape[0] // bq) for k in rest]
+        seg_rb = [-(-items[k][5].shape[0] // br) for k in rest]
+        visited = sum(q * r for q, r in zip(seg_qb, seg_rb))
+        skipped = max(0, sum(seg_qb) * sum(seg_rb) - visited)
+
+        # twin launch geometry (mask cells per row block): cached per
+        # frontier-shape bucket; an unseen bucket with a big enough lead
+        # segment measures the candidates on that segment and keeps the
+        # winner's pairs
+        block_cells = DEFAULT_TWIN_CELLS[0]
+        twin_shapes = [
+            (items[k][2].shape[0], items[k][5].shape[0], items[k][2].shape[1])
+            for k in rest
+        ]
+        twin_bucket = shape_bucket(twin_shapes)
+        twin_geom = self._tuner.lookup("np", twin_bucket)
+        if twin_geom is None:
+            k_big = max(
+                rest, key=lambda k: items[k][2].shape[0] * items[k][5].shape[0]
+            )
+            big_cells = items[k_big][2].shape[0] * items[k_big][5].shape[0]
+            if big_cells >= _TWIN_TUNE_MIN_CELLS:
+                _i, req, u_lo, u_hi, _inv, _r_lo, _r_hi = items[k_big]
+                rl_b, rh_b = req.table.dense_join_cols(
+                    "value" if req.inverse else "key"
+                )
+                twin_geom, res = self._tuner.pick(
+                    "np",
+                    twin_bucket,
+                    runner=lambda g: _twin_pairs(
+                        u_lo, u_hi, rl_b, rh_b, None, block_cells=g[0]
+                    ),
+                    candidates=CANDIDATE_TWIN_CELLS,
+                    default=DEFAULT_TWIN_CELLS,
+                    warmup=False,  # pure numpy: nothing to compile
+                )
+                if res is not None:
+                    pairs[k_big] = res
+            else:
+                twin_geom = DEFAULT_TWIN_CELLS
+        block_cells = twin_geom[0]
+        self._last_geometry["np"] = tuple(twin_geom)
+        todo = [k for k in rest if k not in pairs]
 
         def eval_segments(chunk: list[int]) -> None:
             scratch: dict = {}  # mask buffers shared within the chunk
@@ -834,12 +989,14 @@ class BatchedJoinExecutor:
                 rl, rh = req.table.dense_join_cols(
                     "value" if req.inverse else "key"
                 )
-                pairs[k] = _twin_pairs(u_lo, u_hi, rl, rh, scratch)
+                pairs[k] = _twin_pairs(
+                    u_lo, u_hi, rl, rh, scratch, block_cells=block_cells
+                )
 
         # clamp fan-out to real cores: the chunks only overlap while they
         # hold no GIL, and oversubscribing 2 cores with 4 GIL-trading
         # threads costs more in hand-offs than it buys
-        width = min(workers or 1, len(rest), os.cpu_count() or 1)
+        width = min(workers or 1, len(todo), os.cpu_count() or 1)
         if width > 1:
             # fan only the *mask evaluations* out — the twin's blocked
             # passes are almost pure released-GIL numpy, so they overlap on
@@ -852,7 +1009,7 @@ class BatchedJoinExecutor:
             chunks: list[list[int]] = [[] for _ in range(width)]
             loads = [0] * width
             for k in sorted(
-                rest,
+                todo,
                 key=lambda k: -items[k][2].shape[0] * items[k][5].shape[0],
             ):
                 w = loads.index(min(loads))
@@ -866,7 +1023,7 @@ class BatchedJoinExecutor:
             for f in futs:
                 f.result()
         else:
-            eval_segments(rest)
+            eval_segments(todo)
         for k in rest:
             finalize(k, *pairs[k])
         # the twin is one fused dispatch per frontier: count it like a
@@ -875,6 +1032,11 @@ class BatchedJoinExecutor:
         self._stats("joins_packed", len(rest))
         self._stats("batch_rows", rows)
         self._stats("batch_rows_padded", rows)
+        self._stats("batch_tiles_visited", visited)
+        self._stats("batch_tiles_skipped", skipped)
+        # per-segment evaluation has no tile padding: cells-exact occupancy
+        useful = float(sum(nq * nr for nq, nr, _ in twin_shapes))
+        self._observe_occupancy(useful, useful)
 
 
 # --------------------------------------------------------------------------- #

@@ -51,6 +51,8 @@ import zlib
 from collections.abc import Mapping
 from dataclasses import dataclass, field
 
+from repro.kernels.autotune import GeometryTuner
+
 from . import _locks
 from .catalog import (
     ArrayDef,
@@ -507,6 +509,9 @@ class ShardedDSLog:
         # whole-route views + answer cache live on the root facade (routes
         # cross shard boundaries); shard-level managers stay empty
         self.views = ViewManager(self)
+        # facade-level geometry table: the cross-shard planner's executor
+        # packs frontiers spanning shards, so tuning lives on the root
+        self.autotune = GeometryTuner()
         self.lineage = _ShardedLineageView(self)
         self._next_id = 0
         # per-shard id streams: lineage_id = shard + n_shards * counter, so
@@ -711,6 +716,8 @@ class ShardedDSLog:
             "joins_packed": 0,
             "batch_rows": 0,
             "batch_rows_padded": 0,
+            "batch_tiles_visited": 0,
+            "batch_tiles_skipped": 0,
             "view_hits": 0,
             "view_misses": 0,
             "cache_hits": 0,
@@ -1132,6 +1139,11 @@ class ShardedDSLog:
             os.path.join(self.root, "answers.json"),
             json.dumps(self.views.cache_chunk()),
         )
+        _atomic_write(
+            os.path.join(self.root, "autotune.json"),
+            json.dumps(self.autotune.to_manifest()),
+        )
+        self.autotune.dirty = False
         payload = json.dumps(meta)
         _atomic_write(manifest, payload)
         self._bump("manifests_written")
@@ -1273,6 +1285,13 @@ class ShardedDSLog:
                     log.views.load_cache_chunk(json.load(f))
             except (ValueError, KeyError):
                 pass  # torn/stale sidecar: start with a cold cache
+        autotune = os.path.join(root, "autotune.json")
+        if os.path.exists(autotune):
+            try:
+                with open(autotune) as f:
+                    log.autotune.load_manifest(json.load(f))
+            except ValueError:
+                pass  # torn sidecar: start with a cold geometry table
         log._recover_wals()
         if eager:
             for k in range(log.n_shards):

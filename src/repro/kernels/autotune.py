@@ -1,0 +1,195 @@
+"""Launch-geometry autotuner for the batched dense-join engines.
+
+The segmented kernels take a ``(block_q, block_r)`` launch geometry and the
+blocked-numpy twin a mask-block budget (cells per row block); the best
+values depend on the backend (TPU Pallas vs interpret vs numpy) and on the
+*shape* of the frontier being joined (many tiny segments want small tiles,
+few big segments want big ones).  :class:`GeometryTuner` measures candidate
+geometries the first time a (backend, frontier-shape bucket) combination is
+seen — Triton-style: each candidate runs the real workload once after a
+warmup, the winner's result is kept so the measuring dispatch does the real
+work — and caches the winner in a small table that the catalog persists as
+an ``autotune.json`` sidecar next to the manifest.
+
+Deliberately **jax-free**: backends are opaque strings, workloads run
+through caller-supplied runners, so ``repro.core`` imports this without
+touching the kernel stack.  Entries are keyed by backend, which is what
+invalidates the cache when a store moves machines — a table tuned under
+``interpret`` simply never answers a ``tpu`` lookup.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, Iterable, Sequence
+
+__all__ = [
+    "GeometryTuner",
+    "shape_bucket",
+    "DEFAULT_GEOMETRY",
+    "CANDIDATE_GEOMETRIES",
+    "DEFAULT_TWIN_CELLS",
+    "CANDIDATE_TWIN_CELLS",
+]
+
+# kernel-launch geometry: (block_q, block_r) tile shapes.  Second-minor dim
+# multiples of 8 and lane dim multiples of 128 keep every candidate legal
+# for TPU tiling.
+DEFAULT_GEOMETRY = (256, 256)
+CANDIDATE_GEOMETRIES = (
+    (64, 128),
+    (128, 128),
+    (128, 256),
+    (256, 128),
+    (256, 256),
+    (512, 256),
+)
+
+# numpy-twin geometry: mask cells evaluated per row block (the twin's only
+# launch knob — trades scratch-buffer locality against ufunc call overhead)
+DEFAULT_TWIN_CELLS = (4_194_304,)
+CANDIDATE_TWIN_CELLS = ((1_048_576,), (4_194_304,), (16_777_216,))
+
+_TABLE_VERSION = 1
+
+
+def _log2_bucket(n: int) -> int:
+    """Coarse pow-2 bucket of a count (0 stays 0)."""
+    return 0 if n <= 0 else int(math.log2(n)) + 1
+
+
+def shape_bucket(shapes: "Sequence[tuple[int, int, int]]") -> str:
+    """Bucket key for a frontier's segment shapes.
+
+    ``shapes`` is ``[(n_query_rows, n_table_rows, n_attrs), ...]``.  Buckets
+    are deliberately coarse — pow-2 segment count, pow-2 *median* row counts,
+    exact max width — so a handful of tuning runs covers a workload's whole
+    steady state without ever re-measuring near-identical frontiers.
+    """
+    if not shapes:
+        return "empty"
+    k = _log2_bucket(len(shapes))
+    med_q = _log2_bucket(int(sorted(s[0] for s in shapes)[len(shapes) // 2]))
+    med_r = _log2_bucket(int(sorted(s[1] for s in shapes)[len(shapes) // 2]))
+    width = max(s[2] for s in shapes)
+    return f"k{k}q{med_q}r{med_r}w{width}"
+
+
+class GeometryTuner:
+    """Per-(backend, shape-bucket) launch-geometry table with measurement.
+
+    ``pick`` is the one-stop API: cached winner when known, otherwise (if a
+    ``runner`` is supplied) measure every candidate on the real workload and
+    cache the winner.  Geometries are opaque int tuples — ``(block_q,
+    block_r)`` for the kernels, ``(block_cells,)`` for the numpy twin — so
+    one table serves both engines.
+    """
+
+    def __init__(self) -> None:
+        self._table: dict[str, dict] = {}
+        self.dirty = False
+
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _key(backend: str, bucket: str) -> str:
+        return f"{backend}|{bucket}"
+
+    def __len__(self) -> int:
+        return len(self._table)
+
+    def lookup(self, backend: str, bucket: str) -> "tuple[int, ...] | None":
+        """The cached winning geometry, or None when this (backend, bucket)
+        has never been measured — including after a backend change: entries
+        are keyed by backend, so a table tuned elsewhere never answers."""
+        rec = self._table.get(self._key(backend, bucket))
+        if rec is None or rec.get("backend") != backend:
+            return None
+        try:
+            return tuple(int(x) for x in rec["geometry"])
+        except (KeyError, TypeError, ValueError):
+            return None
+
+    def pick(
+        self,
+        backend: str,
+        bucket: str,
+        runner: "Callable[[tuple[int, ...]], object] | None" = None,
+        candidates: "Iterable[tuple[int, ...]]" = CANDIDATE_GEOMETRIES,
+        default: "tuple[int, ...]" = DEFAULT_GEOMETRY,
+        warmup: bool = True,
+    ) -> "tuple[tuple[int, ...], object | None]":
+        """Winning geometry for (backend, bucket), measuring on a miss.
+
+        Returns ``(geometry, result)``: ``result`` is the winner's workload
+        output when this call measured (so the tuning dispatch does the real
+        work — no wasted evaluation), else ``None`` (cache hit, or no
+        ``runner`` to measure with → ``default``).  ``warmup=True`` runs
+        each candidate once untimed first so trace/compile cost never picks
+        the winner (pointless for pure-numpy runners — pass ``False``).
+        """
+        cached = self.lookup(backend, bucket)
+        if cached is not None:
+            return cached, None
+        if runner is None:
+            return tuple(default), None
+        best: "tuple[int, ...] | None" = None
+        best_s = math.inf
+        best_result: object = None
+        measured: dict[str, float] = {}
+        for geom in candidates:
+            geom = tuple(int(x) for x in geom)
+            if warmup:
+                runner(geom)
+            t0 = time.perf_counter()
+            result = runner(geom)
+            dt = time.perf_counter() - t0
+            measured["x".join(str(x) for x in geom)] = round(dt * 1e6, 1)
+            if dt < best_s:
+                best, best_s, best_result = geom, dt, result
+        assert best is not None, "no candidate geometries supplied"
+        self._table[self._key(backend, bucket)] = {
+            "backend": backend,
+            "bucket": bucket,
+            "geometry": list(best),
+            "us": round(best_s * 1e6, 1),
+            "measured": measured,
+        }
+        self.dirty = True
+        return best, best_result
+
+    # ------------------------------------------------------------------ #
+    # persistence (catalog sidecar)
+    # ------------------------------------------------------------------ #
+    def to_manifest(self) -> dict:
+        return {"version": _TABLE_VERSION, "entries": dict(self._table)}
+
+    def load_manifest(self, chunk: "dict | None") -> None:
+        """Restore a persisted table, dropping anything malformed.
+
+        Tolerant by design (the sidecar may be torn or from a future
+        version): a bad chunk loads as a cold table, and entries whose
+        recorded backend disagrees with their key are discarded — they
+        could only mislead a lookup.
+        """
+        self._table.clear()
+        self.dirty = False
+        if not isinstance(chunk, dict):
+            return
+        entries = chunk.get("entries")
+        if not isinstance(entries, dict):
+            return
+        for key, rec in entries.items():
+            if not isinstance(rec, dict) or not isinstance(key, str):
+                continue
+            backend = rec.get("backend")
+            if not isinstance(backend, str) or not key.startswith(backend + "|"):
+                continue
+            geom = rec.get("geometry")
+            if not (
+                isinstance(geom, list)
+                and geom
+                and all(isinstance(x, int) and x > 0 for x in geom)
+            ):
+                continue
+            self._table[key] = rec

@@ -17,7 +17,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .range_join import LANES, check_lane_capacity, range_join_mask
+from .range_join import (
+    LANES,
+    check_lane_capacity,
+    range_join_mask,
+    range_join_tile_masks,
+)
 from .run_boundary import run_boundaries_packed
 
 __all__ = [
@@ -52,16 +57,6 @@ def _require_int32(*arrays: np.ndarray) -> None:
         )
 
 
-def _pad_rows(a: np.ndarray, mult: int, fill: int) -> np.ndarray:
-    n = a.shape[0]
-    pad = (-n) % mult
-    if pad == 0:
-        return a
-    return np.concatenate(
-        [a, np.full((pad,) + a.shape[1:], fill, a.dtype)], axis=0
-    )
-
-
 def run_boundaries(
     group_cols: list[np.ndarray],
     lo: np.ndarray,
@@ -85,17 +80,15 @@ def run_boundaries(
         packed[:, c] = col.astype(np.int32)
     packed[:, n_keys] = lo.astype(np.int32)
     packed[:, n_keys + 1] = hi.astype(np.int32)
-    # pad rows with a copy of the last row → padded flags are 0 (no runs)
-    padded = _pad_rows(packed, block_rows, 0)
-    if padded.shape[0] != n and n > 0:
-        padded[n:] = padded[n - 1]
+    # the kernel pads rows to the block grid internally (copies of the last
+    # row never start a run) and slices the flags back to n
     flags = run_boundaries_packed(
-        jnp.asarray(padded),
+        jnp.asarray(packed),
         n_keys=n_keys,
         block_rows=block_rows,
         interpret=interpret,
     )
-    return np.asarray(flags[:n]).astype(bool)
+    return np.asarray(flags).astype(bool)
 
 
 def _pack_boxes(lo: np.ndarray, hi: np.ndarray, n_attrs: int) -> np.ndarray:
@@ -151,41 +144,199 @@ def range_join_pairs(
     return qi.astype(np.int64), ri.astype(np.int64)
 
 
+def _pad_packed_rows(p: np.ndarray, mult: int, n_attrs: int) -> np.ndarray:
+    """Pad packed rows to a multiple of ``mult`` with empty boxes.
+
+    The numpy twin of ``range_join._pad_empty``: padded rows carry
+    ``lo = 1, hi = 0`` on every attribute lane, so they never overlap a
+    padded row; real rows with coordinates spanning ``[≤0, ≥1]`` *can* still
+    graze one, which is why tile extraction bounds-checks pairs against the
+    segment's real row counts.
+    """
+    n = p.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return p
+    row = np.zeros(LANES, np.int32)
+    row[:n_attrs] = 1
+    return np.concatenate([p, np.tile(row, (pad, 1))], axis=0)
+
+
+def _blockdiag_pairs(
+    segments: "list[tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]]",
+    n_attrs: int,
+    block_q: int,
+    block_r: int,
+    interpret: bool,
+) -> tuple[list[tuple[np.ndarray, np.ndarray]], int, int]:
+    """Per-segment pairs via the tile-scheduled (block-diagonal) kernel.
+
+    Each segment is packed and padded to block multiples *independently*
+    (tiles never straddle segments, so no segment-id lane is spent), the
+    diagonal tile schedule is enumerated on the host, and pair extraction
+    runs on the ``[T, block_q, block_r]`` tile stack — host transfer scales
+    with the diagonal, not the cross product.  Returns the per-segment
+    pair lists plus (padded rows, tiles visited).
+    """
+    n_segs = len(segments)
+    q_parts = [
+        _pad_packed_rows(_pack_boxes(s[0], s[1], n_attrs), block_q, n_attrs)
+        for s in segments
+    ]
+    r_parts = [
+        _pad_packed_rows(_pack_boxes(s[2], s[3], n_attrs), block_r, n_attrs)
+        for s in segments
+    ]
+    nqb = np.array([p.shape[0] // block_q for p in q_parts], np.int64)
+    nrb = np.array([p.shape[0] // block_r for p in r_parts], np.int64)
+    q_blk_off = np.concatenate([[0], np.cumsum(nqb)])
+    r_blk_off = np.concatenate([[0], np.cumsum(nrb)])
+    tile_start = np.concatenate([[0], np.cumsum(nqb * nrb)])
+    n_tiles = int(tile_start[-1])
+    empty = (np.zeros(0, np.int64), np.zeros(0, np.int64))
+    if n_tiles == 0:
+        return [empty for _ in segments], 0, 0
+    # the diagonal schedule: segment-major, q-block outer / r-block inner
+    tile_q = np.concatenate(
+        [q_blk_off[s] + np.repeat(np.arange(nqb[s]), nrb[s]) for s in range(n_segs)]
+    )
+    tile_r = np.concatenate(
+        [r_blk_off[s] + np.tile(np.arange(nrb[s]), int(nqb[s])) for s in range(n_segs)]
+    )
+    masks = range_join_tile_masks(
+        jnp.asarray(np.concatenate(q_parts, axis=0)),
+        jnp.asarray(np.concatenate(r_parts, axis=0)),
+        # dslint: ignore[int32-cast] block indices, bounded by row count/block
+        jnp.asarray(tile_q.astype(np.int32)),
+        # dslint: ignore[int32-cast] block indices, bounded by row count/block
+        jnp.asarray(tile_r.astype(np.int32)),
+        n_attrs=n_attrs,
+        block_q=block_q,
+        block_r=block_r,
+        interpret=interpret,
+    )
+    flat = np.flatnonzero(np.asarray(masks))
+    t, rem = np.divmod(flat, block_q * block_r)
+    lq, lr = np.divmod(rem, block_r)
+    qi_pad = tile_q[t] * block_q + lq  # global padded-row coordinates
+    ri_pad = tile_r[t] * block_r + lr
+    # tiles are segment-grouped and flatnonzero is tile-major, so one cut
+    # per segment recovers the per-join slices
+    cuts = np.searchsorted(t, tile_start[1:-1])
+    out = []
+    for s, (qs, rs) in enumerate(
+        zip(np.split(qi_pad, cuts), np.split(ri_pad, cuts))
+    ):
+        qi = qs - q_blk_off[s] * block_q
+        ri = rs - r_blk_off[s] * block_r
+        keep = (qi < segments[s][0].shape[0]) & (ri < segments[s][2].shape[0])
+        if not keep.all():
+            qi, ri = qi[keep], ri[keep]
+        if nrb[s] > 1:
+            # tiles run r-block inner, so segments spanning several r blocks
+            # need a row-major resort to match the dense oracle's pair order
+            order = np.lexsort((ri, qi))
+            qi, ri = qi[order], ri[order]
+        out.append(
+            (qi.astype(np.int64, copy=False), ri.astype(np.int64, copy=False))
+        )
+    rows_padded = int(
+        sum(p.shape[0] for p in q_parts) + sum(p.shape[0] for p in r_parts)
+    )
+    return out, rows_padded, n_tiles
+
+
 def segmented_range_join_pairs(
     segments: "list[tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]]",
     block_q: int = 256,
     block_r: int = 256,
     interpret: bool | None = None,
+    layout: str = "auto",
 ) -> tuple[list[tuple[np.ndarray, np.ndarray]], dict]:
     """Many independent range joins in **one** kernel launch.
 
-    ``segments`` is a list of ``(q_lo, q_hi, r_lo, r_hi)`` joins.  All
-    segments are packed into a single ``[NQ, 128] × [NR, 128]`` invocation:
-    attribute widths are padded to the widest segment (spare attributes
-    carry ``lo = hi = 0`` on both sides, never filtering), and one extra
-    spare-lane attribute holds the *segment id* with ``lo = hi = segment``
-    so rows only match within their own join.  Returns the per-segment
-    ``(qi, ri)`` pair lists (row-major order, identical to a per-segment
-    dense evaluation) plus occupancy info for ``io_stats``.
+    ``segments`` is a list of ``(q_lo, q_hi, r_lo, r_hi)`` joins; attribute
+    widths are padded to the widest segment (spare attributes carry
+    ``lo = hi = 0`` on both sides, never filtering).  Two launch layouts:
+
+    * ``"dense"`` — one masked ``[NQ, 128] × [NR, 128]`` cross-product
+      launch; with more than one segment, a spare-lane attribute holds the
+      *segment id* with ``lo = hi = segment`` so rows only match within
+      their own join (a single segment skips the lane).  The correctness
+      oracle, and the cheaper plan for single-segment or tiny frontiers
+      where per-segment padding would cost more than the cross product.
+    * ``"blockdiag"`` — the tile-scheduled kernel
+      (:func:`repro.kernels.range_join.range_join_tile_masks`): only the
+      ~K diagonal tiles of a K-segment frontier are visited, and the host
+      reads back the tile stack instead of the full cross-product mask.
+
+    ``layout="auto"`` charges both schedules in tiles and picks the
+    cheaper.  Returns the per-segment ``(qi, ri)`` pair lists (row-major
+    order, bit-identical between layouts and to a per-segment dense
+    evaluation) plus occupancy info for ``io_stats``: ``tiles_visited`` is
+    the executed schedule, ``tiles_skipped`` the cross-product tiles the
+    block-diagonal schedule avoided.
     """
     if interpret is None:
         interpret = default_interpret()
+    geometry = (block_q, block_r)
     if not segments:
-        return [], {"rows": 0, "rows_padded": 0, "launches": 0}
+        return [], {
+            "rows": 0, "rows_padded": 0, "launches": 0, "layout": "dense",
+            "geometry": geometry, "tiles_visited": 0, "tiles_skipped": 0,
+        }
+    if layout not in ("auto", "dense", "blockdiag"):
+        raise ValueError(f"unknown launch layout {layout!r}")
     l_max = max(s[0].shape[1] for s in segments)
-    n_attrs = l_max + 1  # + segment-id lane pair
-    check_lane_capacity(l_max, segmented=True)
     for q_lo, q_hi, r_lo, r_hi in segments:
         _require_int32(q_lo, q_hi, r_lo, r_hi)
+    nq_tot = sum(s[0].shape[0] for s in segments)
+    nr_tot = sum(s[2].shape[0] for s in segments)
+    rows = int(nq_tot + nr_tot)
+    # tile bills for both schedules over the same segments: the masked
+    # cross product pays the full grid, the diagonal pays per-segment
+    # ceil-padded blocks — auto takes the cheaper, and the difference is
+    # what io_stats reports as skipped
+    cross_tiles = -(-nq_tot // block_q) * -(-nr_tot // block_r)
+    diag_tiles = sum(
+        -(-s[0].shape[0] // block_q) * -(-s[2].shape[0] // block_r)
+        for s in segments
+    )
+    if layout == "auto":
+        layout = (
+            "blockdiag"
+            if len(segments) > 1 and diag_tiles < cross_tiles
+            else "dense"
+        )
+    if layout == "blockdiag":
+        check_lane_capacity(l_max)  # no segment lane: tiles never cross segments
+        out, rows_padded, visited = _blockdiag_pairs(
+            segments, l_max, block_q, block_r, interpret
+        )
+        return out, {
+            "rows": rows,
+            "rows_padded": rows_padded,
+            "launches": 1,
+            "layout": "blockdiag",
+            "geometry": geometry,
+            "tiles_visited": visited,
+            "tiles_skipped": max(0, int(cross_tiles - visited)),
+        }
+
+    # masked dense cross-product launch
+    segmented = len(segments) > 1
+    n_attrs = l_max + (1 if segmented else 0)  # + segment-id lane pair
+    check_lane_capacity(l_max, segmented=segmented)
 
     def pack_side(arrs: list[tuple[np.ndarray, np.ndarray]]) -> np.ndarray:
-        rows = []
+        parts = []
         for seg, (lo, hi) in enumerate(arrs):
             p = _pack_boxes(lo, hi, n_attrs)
-            p[:, l_max] = seg  # segment id: lo = hi = seg
-            p[:, n_attrs + l_max] = seg
-            rows.append(p)
-        return np.concatenate(rows, axis=0)
+            if segmented:
+                p[:, l_max] = seg  # segment id: lo = hi = seg
+                p[:, n_attrs + l_max] = seg
+            parts.append(p)
+        return np.concatenate(parts, axis=0)
 
     qp = pack_side([(s[0], s[1]) for s in segments])
     rp = pack_side([(s[2], s[3]) for s in segments])
@@ -213,8 +364,15 @@ def segmented_range_join_pairs(
                 (rs - r_off[seg]).astype(np.int64),
             )
         )
-    rows = int(qp.shape[0] + rp.shape[0])
     rows_padded = int(
         -(-qp.shape[0] // block_q) * block_q + -(-rp.shape[0] // block_r) * block_r
     )
-    return out, {"rows": rows, "rows_padded": rows_padded, "launches": 1}
+    return out, {
+        "rows": rows,
+        "rows_padded": rows_padded,
+        "launches": 1,
+        "layout": "dense",
+        "geometry": geometry,
+        "tiles_visited": int(cross_tiles),
+        "tiles_skipped": 0,
+    }

@@ -18,11 +18,21 @@ operands internally with *empty* boxes (``lo = 1, hi = 0`` — they overlap
 nothing) and slices the padding back off the mask, so callers hand in
 natural row counts.
 
-Batched (multi-join) invocations pack a *segment id* into a spare lane as
-one more interval attribute with ``lo = hi = segment``: two rows overlap on
-that attribute iff they belong to the same segment, so one kernel launch
-evaluates many independent joins with their masks kept separable — see
-``repro.kernels.ops.segmented_range_join_pairs``.
+Batched (multi-join) invocations come in two launch layouts (see
+``repro.kernels.ops.segmented_range_join_pairs``):
+
+* **masked dense** — all segments packed into one ``[NQ, 128] × [NR, 128]``
+  cross-product launch with a *segment id* in a spare lane as one more
+  interval attribute (``lo = hi = segment``): two rows overlap on that
+  attribute iff they belong to the same segment, so the masks stay
+  separable.  Simple and the correctness oracle, but a K-segment frontier
+  evaluates K² tile blocks for K blocks of useful work.
+* **block-diagonal** (:func:`range_join_tile_masks`) — a scalar-prefetch
+  grid over an explicit per-tile ``(q_block, r_block)`` schedule.  The host
+  enumerates only the tiles on the segment diagonal; the kernel's
+  ``BlockSpec`` index maps read the prefetched tile offsets, so off-diagonal
+  tiles are never visited and the output (``[T, block_q, block_r]``) scales
+  with the diagonal, not the cross product.
 """
 
 from __future__ import annotations
@@ -32,6 +42,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 LANES = 128
 
@@ -116,3 +127,77 @@ def range_join_mask(
         interpret=interpret,
     )(qp, rp)
     return mask[:nq, :nr]
+
+
+def _tile_kernel(tq_ref, tr_ref, q_ref, r_ref, out_ref, *, n_attrs: int):
+    """One scheduled tile: the overlap conjunction for its (q, r) blocks.
+
+    ``tq_ref``/``tr_ref`` are the prefetched tile schedules — consumed by
+    the BlockSpec index maps, not the body, which sees exactly the operand
+    blocks the schedule selected.
+    """
+    q = q_ref[...]  # [block_q, LANES]
+    r = r_ref[...]  # [block_r, LANES]
+    ok = jnp.ones((q.shape[0], r.shape[0]), dtype=jnp.bool_)
+    for j in range(n_attrs):  # static unroll over attributes
+        q_lo = q[:, j][:, None]
+        q_hi = q[:, n_attrs + j][:, None]
+        r_lo = r[:, j][None, :]
+        r_hi = r[:, n_attrs + j][None, :]
+        ok &= (q_lo <= r_hi) & (r_lo <= q_hi)
+    out_ref[0] = ok.astype(jnp.int32)  # dslint: ignore[int32-cast] bool mask
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_attrs", "block_q", "block_r", "interpret")
+)
+def range_join_tile_masks(
+    q_packed: jax.Array,
+    r_packed: jax.Array,
+    tile_q: jax.Array,
+    tile_r: jax.Array,
+    *,
+    n_attrs: int,
+    block_q: int = 256,
+    block_r: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Overlap masks for an explicit tile schedule (block-diagonal launch).
+
+    ``tile_q``/``tile_r`` are int32 ``[T]`` *block indices* into the packed
+    operands (rows must already be multiples of the block sizes — the
+    segmented packer pads each segment independently, which is what keeps a
+    tile from straddling two segments).  Tile ``t`` evaluates q rows
+    ``[tile_q[t]*block_q, ...)`` against r rows ``[tile_r[t]*block_r, ...)``
+    and lands in ``out[t]``; tiles not in the schedule are never computed,
+    so a K-segment frontier costs its diagonal (~K tiles), not the K² cross
+    product.  The schedule rides scalar prefetch: it is available to the
+    ``BlockSpec`` index maps before the body runs, so this is one launch,
+    not T.
+    """
+    check_lane_capacity(n_attrs)
+    nq, lanes = q_packed.shape
+    nr, lanes_r = r_packed.shape
+    if lanes != LANES or lanes_r != LANES:
+        raise ValueError(f"operands must be packed to {LANES} lanes")
+    if nq % block_q or nr % block_r:
+        raise ValueError(
+            "tile-scheduled operands must be pre-padded to block multiples "
+            f"(got {nq} q rows / {nr} r rows for {block_q}x{block_r} tiles)"
+        )
+    n_tiles = tile_q.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((block_q, LANES), lambda t, tq, tr: (tq[t], 0)),
+            pl.BlockSpec((block_r, LANES), lambda t, tq, tr: (tr[t], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, block_r), lambda t, tq, tr: (t, 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_tile_kernel, n_attrs=n_attrs),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_tiles, block_q, block_r), jnp.int32),
+        interpret=interpret,
+    )(tile_q, tile_r, q_packed, r_packed)

@@ -59,15 +59,23 @@ def run_boundaries_packed(
     block_rows: int = 1024,
     interpret: bool = True,
 ) -> jax.Array:
-    """Boundary flags for a padded ``[N, 128]`` int32 sorted table.
+    """Boundary flags for a packed ``[N, 128]`` int32 sorted table.
 
-    ``N`` must be a multiple of ``block_rows``; row 0 is always a boundary
-    (callers pad with a sentinel row whose keys differ from every real row).
+    Any row count: rows are padded internally to the block grid with copies
+    of the last row (identical rows never start a run, so padded flags are
+    0) and the returned flags are sliced back to ``N``.  Row 0 is always a
+    boundary — tile 0's previous-row sentinel differs from every real row.
     """
     n, lanes = packed.shape
     assert lanes == LANES, f"pack columns to {LANES} lanes"
-    assert n % block_rows == 0, "pad rows to a multiple of block_rows"
-    num_tiles = n // block_rows
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32)
+    pad = (-n) % block_rows
+    if pad:
+        packed = jnp.concatenate(
+            [packed, jnp.tile(packed[-1:], (pad, 1))], axis=0
+        )
+    num_tiles = (n + pad) // block_rows
 
     # Last row of the previous tile for each tile; tile 0 gets a sentinel
     # row that can never equal a real row (forces a boundary at row 0).
@@ -83,7 +91,7 @@ def run_boundaries_packed(
             pl.BlockSpec((1, LANES), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((n + pad, 1), jnp.int32),
         interpret=interpret,
     )(packed, prev)
-    return flags[:, 0]
+    return flags[:n, 0]

@@ -144,6 +144,47 @@ def test_batched_execution_equals_perhop_oracle(n_ops, seed, n_shards):
         _assert_boxes_equal(got, want)
 
 
+def _force_kernel_engine(store):
+    """Pin the store's batched executor to the segmented Pallas kernel path
+    (interpreted here — no TPU), replacing the planner's lazy default."""
+    store.planner._executor = BatchedJoinExecutor(
+        stats=store._bump,
+        tuner=getattr(store, "autotune", None),
+        engine="kernel",
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    n_ops=st.integers(4, 8),
+    seed=st.integers(0, 10_000),
+    n_shards=st.sampled_from([1, 4]),
+)
+def test_kernel_engine_blockdiag_equals_perhop_oracle(n_ops, seed, n_shards):
+    """ISSUE 8 tentpole, end to end: ``engine="kernel"`` forces every dense
+    segment through ``segmented_range_join_pairs`` (block-diagonal schedule
+    when the frontier warrants it) — bit-identical to the per-hop loop on
+    random DAGs, DSLog and ShardedDSLog, serial and parallel, under the
+    autouse race detector."""
+    log = DSLog()
+    sharded = ShardedDSLog(n_shards=n_shards)
+    names = _build_random_dag([log, sharded], n_ops, seed)
+    r = np.random.default_rng(seed + 1)
+    cells = np.stack([r.integers(0, SIDE, 3), r.integers(0, SIDE, 3)], axis=1)
+    src, dst = names[0], names[-1]
+    for store in (log, sharded):
+        store.views.enabled = False  # answer cache would serve the repeats
+        want = store.prov_query(src, dst, cells, batched=False)
+        _force_kernel_engine(store)
+        for kw in (
+            dict(batched=True),
+            dict(batched=True, parallel=2),
+            dict(batched=True, parallel=4),
+        ):
+            _assert_boxes_equal(store.prov_query(src, dst, cells, **kw), want)
+        assert store.io_stats["batch_tiles_visited"] > 0
+
+
 def test_batch_and_multi_target_forms_parity():
     log = DSLog()
     names = _build_random_dag([log], 7, seed=42)
@@ -176,6 +217,9 @@ def test_io_stats_meter_batched_dispatches():
     assert (
         log.io_stats["batch_rows_padded"] >= log.io_stats["batch_rows"] > 0
     )
+    # tile meters (ISSUE 8): every dense dispatch charges its schedule
+    assert log.io_stats["batch_tiles_visited"] > 0
+    assert log.io_stats["batch_tiles_skipped"] >= 0
     # per-hop loop does not touch the batching meters
     base = dict(log.io_stats)
     log.prov_query(names[0], names[-1], cells, batched=False)
@@ -187,6 +231,9 @@ def test_sharded_io_stats_aggregate_batching_counters():
     names = _build_random_dag([sharded], 6, seed=9)
     sharded.prov_query(names[0], names[-1], np.array([[1, 2]]), batched=True)
     assert sharded.io_stats["kernel_launches"] > 0
+    # the facade aggregates the tile meters across root + shards
+    assert sharded.io_stats["batch_tiles_visited"] > 0
+    assert "batch_tiles_skipped" in sharded.io_stats
 
 
 # --------------------------------------------------------------------------- #
@@ -315,3 +362,96 @@ def test_sharded_describe_shows_notes():
     names = _build_random_dag([sharded], 5, seed=2)
     text = sharded.planner.plan(names[0], [names[-1]]).describe()
     assert "(" in text and "np:" in text
+
+
+# --------------------------------------------------------------------------- #
+# ISSUE 8: autotuned launch geometry — persistence, invalidation, notes
+# --------------------------------------------------------------------------- #
+def test_autotune_table_persists_across_save_load(tmp_path):
+    """A tuned (backend, bucket) winner survives the catalog round-trip via
+    the ``autotune.json`` sidecar, on both the single store and the sharded
+    facade."""
+    d1, d2 = str(tmp_path / "single"), str(tmp_path / "sharded")
+    log = DSLog(root=d1)
+    log.define_array("a", SHAPE)
+    geom, _ = log.autotune.pick(
+        "interpret", "k3q5r5w2",
+        runner=lambda g: g, candidates=((128, 128), (256, 256)), warmup=False,
+    )
+    assert log.autotune.dirty
+    log.save()
+    assert not log.autotune.dirty
+    log2 = DSLog.load(d1)
+    assert log2.autotune.lookup("interpret", "k3q5r5w2") == geom
+
+    sharded = ShardedDSLog(n_shards=2, root=d2)
+    names = _build_random_dag([sharded], 4, seed=1)
+    sharded.autotune.pick(
+        "np", "k2q4r4w2",
+        runner=lambda g: g, candidates=((1 << 20,), (1 << 22,)), warmup=False,
+    )
+    sharded.save()
+    re = ShardedDSLog.load(d2)
+    assert re.autotune.lookup("np", "k2q4r4w2") is not None
+    # queries still answer identically on the reopened store
+    cells = np.array([[1, 1], [2, 3]])
+    _assert_boxes_equal(
+        re.prov_query(names[0], names[-1], cells, batched=True),
+        sharded.prov_query(names[0], names[-1], cells, batched=False),
+    )
+
+
+def test_autotune_cache_invalidated_by_backend_change():
+    """Entries are backend-keyed: a table tuned under one backend never
+    answers another (the store-moved-machines case), and a manifest whose
+    entries disagree with their keys loads cold."""
+    from repro.kernels.autotune import GeometryTuner
+
+    t = GeometryTuner()
+    t.pick("interpret", "k1q2r2w1",
+           runner=lambda g: g, candidates=((64, 128),), warmup=False)
+    assert t.lookup("interpret", "k1q2r2w1") == (64, 128)
+    assert t.lookup("tpu", "k1q2r2w1") is None  # backend changed -> re-tune
+    manifest = t.to_manifest()
+    # simulate a table written on another backend: key says tpu, rec says
+    # interpret — the loader must drop it rather than mislead a lookup
+    manifest["entries"] = {
+        "tpu|k1q2r2w1": dict(manifest["entries"]["interpret|k1q2r2w1"])
+    }
+    t2 = GeometryTuner()
+    t2.load_manifest(manifest)
+    assert t2.lookup("tpu", "k1q2r2w1") is None
+    assert len(t2) == 0
+    t2.load_manifest({"version": 1, "entries": "garbage"})  # torn -> cold
+    assert len(t2) == 0
+
+
+def test_describe_note_renders_launch_geometry():
+    """ISSUE 8 satellite: the hop note names the engine's launch geometry —
+    ``batched(np:cpu:4m)`` on this box (twin, 4M-cell mask blocks)."""
+    log = DSLog(store_forward=True)
+    log.define_array("a", SHAPE)
+    log.define_array("b", SHAPE)
+    from repro.core.capture import identity_lineage
+
+    log.add_lineage("a", "b", identity_lineage(SHAPE))
+    text = log.planner.plan("a", ["b"]).describe()
+    assert "batched(np:cpu:4m)" in text
+    # a tuned twin geometry shows up in later notes
+    log.planner.executor._last_geometry["np"] = (1 << 20,)
+    assert "np:cpu:1m" in log.planner.plan("a", ["b"]).describe()
+
+
+def test_planner_discount_tracks_measured_occupancy():
+    """The batched-route discount widens back toward 1 as the executor
+    observes tile waste — cold executors keep the flat prior."""
+    from repro.core.planner import _BATCHED_PAIR_DISCOUNT
+
+    log = DSLog()
+    log.define_array("a", SHAPE)
+    p = log.planner
+    assert p._batched_discount() == pytest.approx(_BATCHED_PAIR_DISCOUNT)
+    p.executor._observe_occupancy(tile_cells=100_000, useful_cells=100)
+    assert p.executor.measured_waste > 1.0
+    assert p._batched_discount() > _BATCHED_PAIR_DISCOUNT
+    assert p._batched_discount() <= 1.0

@@ -176,3 +176,119 @@ def test_segmented_pack_matches_per_segment_joins():
         wq, wr = range_join_pairs(q_lo, q_hi, r_lo, r_hi, block_q=64, block_r=64)
         np.testing.assert_array_equal(qi, wq)
         np.testing.assert_array_equal(ri, wr)
+
+
+def _random_segments(r, k, widths=(1, 2, 3), max_rows=90, coords=(0, 25)):
+    segs = []
+    for i in range(k):
+        l = int(widths[i % len(widths)])
+        nq, nr = int(r.integers(1, max_rows)), int(r.integers(1, max_rows))
+        q_lo = r.integers(*coords, (nq, l))
+        q_hi = q_lo + r.integers(0, 5, (nq, l))
+        r_lo = r.integers(*coords, (nr, l))
+        r_hi = r_lo + r.integers(0, 5, (nr, l))
+        segs.append((q_lo, q_hi, r_lo, r_hi))
+    return segs
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_blockdiag_layout_property(data):
+    """ISSUE 8 tentpole: the block-diagonal tile schedule is bit-identical
+    to the masked cross-product launch and the per-segment oracle, across
+    ragged segment counts/sizes/widths, and never visits more tiles than
+    the cross product."""
+    from repro.kernels.ops import segmented_range_join_pairs
+
+    seed = data.draw(st.integers(0, 2**31))
+    k = data.draw(st.integers(2, 7))
+    bq = data.draw(st.sampled_from([32, 64, 128]))
+    br = data.draw(st.sampled_from([32, 64, 128]))
+    segs = _random_segments(np.random.default_rng(seed), k)
+    dense, dinfo = segmented_range_join_pairs(
+        segs, block_q=bq, block_r=br, interpret=True, layout="dense"
+    )
+    diag, ginfo = segmented_range_join_pairs(
+        segs, block_q=bq, block_r=br, interpret=True, layout="blockdiag"
+    )
+    assert ginfo["layout"] == "blockdiag" and dinfo["layout"] == "dense"
+    assert ginfo["tiles_visited"] + ginfo["tiles_skipped"] >= dinfo["tiles_visited"]
+    for s, (q_lo, q_hi, r_lo, r_hi) in enumerate(segs):
+        wq, wr = range_join_pairs(q_lo, q_hi, r_lo, r_hi, block_q=bq, block_r=br)
+        for got in (dense[s], diag[s]):
+            np.testing.assert_array_equal(got[0], wq)
+            np.testing.assert_array_equal(got[1], wr)
+
+
+def test_blockdiag_padding_rows_never_match():
+    """Per-segment padding rows carry (lo=1, hi=0); boxes spanning [<=0, >=1]
+    can graze them, so the extractor's bounds filter must drop any pair
+    touching a padded row."""
+    from repro.kernels.ops import segmented_range_join_pairs
+
+    segs = []
+    for _ in range(3):
+        nq, nr = int(rng.integers(3, 40)), int(rng.integers(3, 40))
+        q_lo = rng.integers(-4, 2, (nq, 2))  # spans the pad sentinel [1, 0]
+        q_hi = q_lo + rng.integers(0, 6, (nq, 2))
+        r_lo = rng.integers(-4, 2, (nr, 2))
+        r_hi = r_lo + rng.integers(0, 6, (nr, 2))
+        segs.append((q_lo, q_hi, r_lo, r_hi))
+    diag, _ = segmented_range_join_pairs(
+        segs, block_q=32, block_r=32, interpret=True, layout="blockdiag"
+    )
+    for (q_lo, q_hi, r_lo, r_hi), (qi, ri) in zip(segs, diag):
+        wq, wr = range_join_pairs(q_lo, q_hi, r_lo, r_hi)
+        np.testing.assert_array_equal(qi, wq)
+        np.testing.assert_array_equal(ri, wr)
+
+
+def test_segmented_auto_layout_routing():
+    """layout="auto" charges both schedules in tiles: a many-segment
+    frontier goes block-diagonal, one segment stays on the dense launch."""
+    from repro.kernels.ops import segmented_range_join_pairs
+
+    segs = _random_segments(np.random.default_rng(3), 6, max_rows=200)
+    _, info = segmented_range_join_pairs(segs, block_q=64, block_r=64,
+                                         interpret=True, layout="auto")
+    assert info["layout"] == "blockdiag"
+    assert info["tiles_skipped"] > 0
+    _, info1 = segmented_range_join_pairs(segs[:1], block_q=64, block_r=64,
+                                          interpret=True, layout="auto")
+    assert info1["layout"] == "dense" and info1["tiles_skipped"] == 0
+    with pytest.raises(ValueError, match="layout"):
+        segmented_range_join_pairs(segs, layout="ragged")
+
+
+def test_segmented_single_segment_skips_id_lane():
+    """ISSUE 8 satellite: a one-segment frontier needs no segment-id lane,
+    so the max packable width is LANES // 2 — one more than the segmented
+    pack admits."""
+    from repro.kernels.ops import segmented_range_join_pairs
+    from repro.kernels.range_join import LANES
+
+    l = LANES // 2  # 64: lo+hi fill all 128 lanes, no room for a seg id
+    box = (np.zeros((4, l)), np.ones((4, l)), np.zeros((5, l)), np.ones((5, l)))
+    got, info = segmented_range_join_pairs([box], interpret=True)
+    assert info["layout"] == "dense"
+    assert got[0][0].size == 4 * 5  # unit boxes all overlap
+    with pytest.raises(ValueError, match="lane capacity"):
+        segmented_range_join_pairs([box, box], interpret=True, layout="dense")
+
+
+@pytest.mark.parametrize("n", [1, 255, 1024, 1025])
+def test_run_boundary_pads_non_multiple_rows(n):
+    """Regression (ISSUE 8): run_boundaries_packed padded internally
+    instead of asserting ``n % block_rows == 0``."""
+    r = np.random.default_rng(n)
+    packed = np.zeros((n, 128), np.int32)
+    packed[:, 0] = np.sort(r.integers(0, 6, n))
+    lo = np.sort(r.integers(0, max(n // 3, 2), n))
+    packed[:, 1] = lo
+    packed[:, 2] = lo + r.integers(0, 3, n)
+    got = run_boundaries_packed(
+        jnp.asarray(packed), n_keys=1, block_rows=256, interpret=True
+    )
+    assert got.shape == (n,)
+    want = run_boundaries_ref(jnp.asarray(packed), 1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
