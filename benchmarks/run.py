@@ -9,11 +9,24 @@ human-readable narration to stderr-adjacent stdout sections.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 
 
 def _emit(name: str, us: float, derived) -> None:
     print(f"{name},{us:.1f},{derived}")
+
+
+def _emit_json(name: str, rows) -> None:
+    """Write an ablation's raw rows to ``BENCH_<name>.json`` at repo root."""
+    out = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        f"BENCH_{name}.json",
+    )
+    with open(out, "w") as fh:
+        json.dump(rows, fh, indent=2, default=str)
+    print(f"# wrote {out}", flush=True)
 
 
 def bench_table7(quick: bool) -> None:
@@ -77,6 +90,7 @@ def bench_shard(quick: bool) -> None:
     rows = run_shard_ablation(
         side=64 if quick else 96, smoke=_SMOKE,
     )
+    _emit_json("shard", rows)
     for r in rows:
         _emit(
             f"shard/side{r['side']}/b{r['branches']}/n{r['n_shards']}/plan",
@@ -107,6 +121,7 @@ def bench_wal(quick: bool) -> None:
     print("# WAL ingest ablation — sync saves vs group commit, writer "
           "scaling, parallel execution", flush=True)
     rows = run_wal_ablation(smoke=_SMOKE)
+    _emit_json("wal", rows)
     for r in rows:
         if r["kind"] == "modes":
             for m in ("sync_save", "wal_sync", "wal_group"):
@@ -129,9 +144,6 @@ def bench_wal(quick: bool) -> None:
 
 
 def bench_accel(quick: bool) -> None:
-    import json
-    import os
-
     from .fig89_query import run_accel_ablation
 
     print("# Accelerator batched execution — per-hop join loop vs packed "
@@ -184,13 +196,7 @@ def bench_accel(quick: bool) -> None:
                     f"cross-product on a {r['segments']}-segment frontier"
                 )
                 assert r["tiles_skipped"] > 0, "no tiles skipped"
-    out = os.path.join(
-        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        "BENCH_accel.json",
-    )
-    with open(out, "w") as fh:
-        json.dump(rows, fh, indent=2, default=str)
-    print(f"# wrote {out}", flush=True)
+    _emit_json("accel", rows)
 
 
 def bench_views(quick: bool) -> None:
@@ -199,6 +205,7 @@ def bench_views(quick: bool) -> None:
     print("# Materialized views + answer cache — hot-route repeats, cold vs "
           "warm, mid-run mutation", flush=True)
     rows = run_views_ablation(smoke=_SMOKE)
+    _emit_json("views", rows)
     for r in rows:
         tag = f"views/h{r['hops']}/q{r['n_cells']}"
         _emit(f"{tag}/cold", r["cold_s"] * 1e6, "")
@@ -227,6 +234,7 @@ def bench_dag(quick: bool) -> None:
     print("# DAG queries — planner-merged diamond vs naive per-path union",
           flush=True)
     rows = run_dag_ablation(side=64 if quick else 96)
+    _emit_json("dag", rows)
     for r in rows:
         _emit(
             f"dag/side{r['side']}/b{r['branches']}/planner",

@@ -40,12 +40,16 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
 import numpy as np
 
 from repro.kernels.autotune import GeometryTuner  # jax-free geometry table
+from repro.obs.export import telemetry_snapshot
+from repro.obs.metrics import IoStatsView, MetricsRegistry
+from repro.obs.trace import QueryTrace, maybe_span
 
 from . import _locks
 from .commit import CommitPipeline, WriterLease
@@ -77,6 +81,35 @@ _MANIFEST_VERSION = 3
 # Constructor options that open() may apply to an already-loaded store.
 # (reuse_m lands on the predictor: the ctor only forwards it there.)
 _OPEN_OVERRIDES = ("store_forward", "compress_method", "gzip", "hop_decay", "reuse_m")
+
+# Counters pre-seeded at zero in every store registry so reads and `in`
+# checks on the io_stats view behave like the historical dict did.
+SEED_COUNTERS = (
+    "tables_loaded",
+    "tables_written",
+    "manifests_written",
+    "sig_tables_written",
+    "bytes_written",
+    # batched plan-step execution: packed dense dispatches (device kernel
+    # launches, or their CPU-twin equivalents), how many joins rode each,
+    # and pack occupancy (rows used vs padded)
+    "kernel_launches",
+    "joins_packed",
+    "batch_rows",
+    "batch_rows_padded",
+    # tile schedule of those dispatches: tiles actually evaluated vs the
+    # cross-product tiles the block-diagonal layout skipped
+    "batch_tiles_visited",
+    "batch_tiles_skipped",
+    # materialized views + answer cache (repro/core/views.py)
+    "view_hits",
+    "view_misses",
+    "cache_hits",
+    "cache_misses",
+    "views_materialized",
+    "views_demoted",
+    "views_invalidated",
+)
 
 
 def _apply_open_overrides(log, ctor_kw: dict) -> None:
@@ -364,37 +397,16 @@ class DSLog:
         )
         # versioned-name counters for in-place ops: base name -> latest k
         self._versions: dict[str, int] = {}
-        self.io_stats = _locks.guard_mapping(
-            {
-                "tables_loaded": 0,
-                "tables_written": 0,
-                "manifests_written": 0,
-                "sig_tables_written": 0,
-                "bytes_written": 0,
-                # batched plan-step execution: packed dense dispatches
-                # (device kernel launches, or their CPU-twin equivalents),
-                # how many joins rode each, and pack occupancy (rows used
-                # vs padded)
-                "kernel_launches": 0,
-                "joins_packed": 0,
-                "batch_rows": 0,
-                "batch_rows_padded": 0,
-                # tile schedule of those dispatches: tiles actually
-                # evaluated vs the cross-product tiles the block-diagonal
-                # layout skipped (kernels/range_join.py)
-                "batch_tiles_visited": 0,
-                "batch_tiles_skipped": 0,
-                # materialized views + answer cache (repro/core/views.py)
-                "view_hits": 0,
-                "view_misses": 0,
-                "cache_hits": 0,
-                "cache_misses": 0,
-                "views_materialized": 0,
-                "views_invalidated": 0,
-            },
-            self._stats_lock,
-            "DSLog.io_stats",
-        )
+        # telemetry: all I/O meters live in the registry (internally
+        # locked, rank above _stats_lock); io_stats is a live read-only
+        # dict view over its unlabeled counters.
+        self.metrics = MetricsRegistry("dslog")
+        self.metrics.seed_counters(SEED_COUNTERS)
+        self.metrics.register_collector(self._collect_gauges)
+        self.io_stats = IoStatsView(self.metrics)
+        # per-query structured tracing (prov_query(..., trace=True));
+        # None = off, the only cost on untraced hot paths.
+        self._active_trace: QueryTrace | None = None
         # durability subsystem (attached by open()/load(); None = legacy
         # explicit-save store with no write-ahead log)
         self._wal: WriteAheadLog | None = None
@@ -407,8 +419,39 @@ class DSLog:
             os.makedirs(root, exist_ok=True)
 
     def _bump(self, key: str, n: int = 1) -> None:
+        self.metrics.inc(key, n)
+
+    def _collect_gauges(self):
+        """Snapshot-time gauges: hop-stat EMAs and view-manager state.
+
+        Runs outside the registry lock (it takes ``_stats_lock`` /
+        ``views._lock``), so derived state exports with zero hot-path
+        cost.
+        """
         with self._stats_lock:
-            self.io_stats[key] = self.io_stats.get(key, 0) + n
+            hops = {k: tuple(v) for k, v in self.hop_stats.items()}
+        # Cap the per-hop series so a huge store exports a bounded page.
+        top = sorted(hops.items(), key=lambda kv: -kv[1][0])[:32]
+        for key, (pairs, qrows) in top:
+            yield ("hop_pairs_ema", {"hop": key}, pairs)
+            yield ("hop_qrows_ema", {"hop": key}, qrows)
+        try:
+            vstats = self.views.stats()
+        except Exception:
+            return
+        for name, val in vstats.items():
+            if isinstance(val, (int, float)):
+                yield (f"views_{name}", {}, val)
+
+    def metrics_snapshot(self) -> dict:
+        """Structured dump of every instrument (see ``repro.obs``)."""
+        return self.metrics.snapshot()
+
+    def health(self, run_fsck: bool = True) -> dict:
+        """Registry red-flags + ``fsck`` findings (``repro.obs.export``)."""
+        from repro.obs.export import health as _health
+
+        return _health(self, run_fsck=run_fsck)
 
     def _drop_hop_stats(self, lineage_id: int) -> None:
         """Forget measured selectivities for one entry, under the stats lock.
@@ -482,7 +525,9 @@ class DSLog:
                 # store's log was already replayed by load() above.
                 log._attach_wal()
             log._wal.repair()  # we hold the lease: torn tails may be cut
-            log._pipeline = CommitPipeline(durability, flush_interval, max_batch)
+            log._pipeline = CommitPipeline(
+                durability, flush_interval, max_batch, metrics=log.metrics
+            )
             log._pipeline.attach(log._wal)
             log._lease = lease
             return log
@@ -579,7 +624,9 @@ class DSLog:
         mutate a log a live writer may still be appending to."""
         assert self.root is not None
         if self._wal is None:
-            self._wal = WriteAheadLog(os.path.join(self.root, WAL_FILENAME))
+            self._wal = WriteAheadLog(
+                os.path.join(self.root, WAL_FILENAME), metrics=self.metrics
+            )
         if pipeline is not None:
             self._pipeline = pipeline
             pipeline.attach(self._wal)
@@ -1041,7 +1088,8 @@ class DSLog:
         merge: bool = True,
         parallel: int | None = None,
         batched: bool | None = None,
-    ) -> "QueryBox | dict":
+        trace: bool = False,
+    ) -> "QueryBox | dict | tuple":
         """Lineage between cells of two arrays.
 
         Two call forms::
@@ -1059,22 +1107,47 @@ class DSLog:
         ``planner.batched``): packed frontier execution through the
         :class:`~repro.core.query.BatchedJoinExecutor` vs the per-hop join
         loop — results are bit-identical either way.
+
+        ``trace=True`` returns ``(result, QueryTrace)`` instead: a span
+        tree (plan / hop / kernel launch / exchange / cache probe / view
+        race) with per-span wall time and instrument deltas.  Tracing
+        never changes the answer.
         """
         form = self._parse_query_args(args)
         if form[0] == "path":
             _, path, cells, m_override = form
             if m_override is not None:
                 merge = m_override
-            return self.prov_query_batch(
-                path, [cells], merge=merge, parallel=parallel, batched=batched
-            )[0]
+            res = self.prov_query_batch(
+                path,
+                [cells],
+                merge=merge,
+                parallel=parallel,
+                batched=batched,
+                trace=trace,
+            )
+            if trace:
+                res, tr = res
+                return res[0], tr
+            return res[0]
         _, src, dst, cells = form
         res = self.prov_query_batch(
-            src, dst, [cells], merge=merge, parallel=parallel, batched=batched
+            src,
+            dst,
+            [cells],
+            merge=merge,
+            parallel=parallel,
+            batched=batched,
+            trace=trace,
         )
+        tr = None
+        if trace:
+            res, tr = res
         if isinstance(res, dict):
-            return {name: boxes[0] for name, boxes in res.items()}
-        return res[0]
+            res = {name: boxes[0] for name, boxes in res.items()}
+        else:
+            res = res[0]
+        return (res, tr) if trace else res
 
     def prov_query_batch(
         self,
@@ -1082,12 +1155,50 @@ class DSLog:
         merge: bool = True,
         parallel: int | None = None,
         batched: bool | None = None,
-    ) -> "list[QueryBox] | dict[str, list[QueryBox]]":
+        trace: bool = False,
+    ) -> "list[QueryBox] | dict[str, list[QueryBox]] | tuple":
         """Answer many independent queries in one pass (both call forms).
 
         The plan is computed once; each hop runs through the batched θ-join
         (shared index probes, deduplicated boxes across in-flight queries).
+        ``trace=True`` returns ``(result, QueryTrace)``.
         """
+        tr = QueryTrace(registry=self.metrics) if trace else None
+        workers = parallel if parallel is not None else 0
+        use_batched = (
+            getattr(self.planner, "batched", True) if batched is None else batched
+        )
+        engine = (
+            "parallel"
+            if workers and workers > 1
+            else ("batched" if use_batched else "serial")
+        )
+        prev = self._active_trace
+        if tr is not None:
+            self._active_trace = tr
+        t0 = time.perf_counter()
+        try:
+            out, path_label = self._query_batch_impl(
+                args, merge, parallel, batched, tr, engine
+            )
+        finally:
+            if tr is not None:
+                self._active_trace = prev
+                tr.finish()
+        # per-path query latency: cache hit / view shortcut / full plan,
+        # split by execution engine
+        self.metrics.observe(
+            "query_seconds", time.perf_counter() - t0, path=path_label, engine=engine
+        )
+        self.metrics.inc("queries", path=path_label)
+        return (out, tr) if trace else out
+
+    def _query_batch_impl(
+        self, args, merge, parallel, batched, tr, engine
+    ) -> tuple:
+        """Body of :meth:`prov_query_batch`; returns ``(result, path)``
+        where ``path`` labels how the answer was produced (``"cache"`` /
+        ``"view"`` / ``"planned"`` / explicit-``"path"`` form)."""
         form = self._parse_query_args(args)
         if form[0] == "path":
             _, path, queries, m_override = form
@@ -1096,40 +1207,65 @@ class DSLog:
             if len(path) < 2:
                 raise ValueError("path needs at least two arrays")
             if not queries:
-                return []
+                return [], "path"
             boxes = self._as_boxes(path[0], queries)
-            plan = self.planner.plan_path(path, frontier=boxes, batched=batched)
-            return self.planner.execute(
-                plan, boxes, merge=merge, parallel=parallel, batched=batched
-            )[path[-1]]
+            with maybe_span(tr, "plan", kind="plan", form="path") as sp:
+                plan = self.planner.plan_path(path, frontier=boxes, batched=batched)
+                sp.attrs["est_cost"] = round(plan.est_cost, 3)
+            with maybe_span(tr, "execute", kind="execute", engine=engine):
+                out = self.planner.execute(
+                    plan, boxes, merge=merge, parallel=parallel, batched=batched
+                )[path[-1]]
+            return out, "path"
         _, src, dst, queries = form
         multi = not isinstance(dst, str)
         targets = list(dst) if multi else [dst]
         if not queries:
-            return {t: [] for t in targets} if multi else []
+            return ({t: [] for t in targets} if multi else []), "planned"
         boxes = self._as_boxes(src, queries)
         # answer cache first, planner second: an exact repeat (same source,
         # targets, and canonicalized cell boxes) never plans at all
         ckey = self.views.cache_key(src, targets, boxes, merge)
+        hit = self.views.cache_get(ckey) if ckey is not None else None
+        if tr is not None:
+            tr.event(
+                "cache_probe",
+                kind="cache",
+                cacheable=ckey is not None,
+                hit=hit is not None,
+            )
+        if hit is not None:
+            return (hit if multi else hit[dst]), "cache"
         if ckey is not None:
-            hit = self.views.cache_get(ckey)
-            if hit is not None:
-                return hit if multi else hit[dst]
             self.views.note_route(src, targets)
         # plans are cell-independent: a hot route replans only after an
         # invalidation, admission, or demotion changes the shortcut race
-        plan = self.views.plan_get(src, targets, batched)
-        if plan is None:
-            plan = self.planner.plan(
-                src, targets, frontier=boxes, batched=batched
+        with maybe_span(tr, "plan", kind="plan", form="graph") as sp:
+            plan = self.views.plan_get(src, targets, batched)
+            sp.attrs["memo"] = plan is not None
+            if plan is None:
+                plan = self.planner.plan(
+                    src, targets, frontier=boxes, batched=batched
+                )
+                self.views.plan_put(src, targets, batched, plan)
+            sp.attrs["est_cost"] = round(plan.est_cost, 3)
+        path_label = (
+            "view"
+            if any(
+                c.lineage_id < 0
+                for steps in plan.steps.values()
+                for step in steps
+                for c in step.choices
             )
-            self.views.plan_put(src, targets, batched, plan)
-        out = self.planner.execute(
-            plan, boxes, merge=merge, parallel=parallel, batched=batched
+            else "planned"
         )
+        with maybe_span(tr, "execute", kind="execute", engine=engine):
+            out = self.planner.execute(
+                plan, boxes, merge=merge, parallel=parallel, batched=batched
+            )
         if ckey is not None:
             self.views.cache_put(ckey, out, src, targets, plan)
-        return out if multi else out[dst]
+        return (out if multi else out[dst]), path_label
 
     def _as_boxes(
         self, name: str, queries: Sequence["np.ndarray | QueryBox"]
@@ -1241,6 +1377,12 @@ class DSLog:
             json.dumps(self.autotune.to_manifest()),
         )
         self.autotune.dirty = False
+        # telemetry snapshot rides every checkpoint (write-only sidecar:
+        # load() never restores it, counters restart from zero)
+        _atomic_write(
+            os.path.join(self.root, "telemetry.json"),
+            json.dumps(telemetry_snapshot(self)),
+        )
 
         payload = json.dumps(meta)
         _atomic_write(os.path.join(self.root, "catalog.json"), payload)

@@ -37,6 +37,8 @@ import threading
 import time
 import uuid
 
+from repro.obs.metrics import MetricsRegistry, StatsView
+
 from . import _locks
 from .wal import WriteAheadLog
 
@@ -187,6 +189,7 @@ class CommitPipeline:
         mode: str = "group",
         flush_interval: float = 0.005,
         max_batch: int = 256,
+        metrics=None,
     ):
         if mode not in ("sync", "group", "manual"):
             raise ValueError(f"unknown durability mode {mode!r}")
@@ -204,9 +207,35 @@ class CommitPipeline:
         self._wake = threading.Event()
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
-        self.stats = {"records": 0, "group_flushes": 0, "synced_records": 0}
+        self.metrics = None
+        self.stats = None
+        self.bind_metrics(metrics or MetricsRegistry("commit"))
 
     # ------------------------------------------------------------------ #
+    def bind_metrics(self, registry) -> None:
+        """(Re)target the pipeline's instruments at ``registry``.
+
+        Both ``open()`` paths build the pipeline before the store object
+        exists, so the store registry is bound post-hoc; counts recorded
+        under the interim private registry carry over.
+        """
+        registry.seed_counters(
+            ("commit_records", "commit_group_flushes", "commit_synced_records")
+        )
+        if self.metrics is not None and self.metrics is not registry:
+            for key, val in self.metrics.counters_flat().items():
+                if val:
+                    registry.inc(key, val)
+        self.metrics = registry
+        self.stats = StatsView(
+            registry,
+            {
+                "records": "commit_records",
+                "group_flushes": "commit_group_flushes",
+                "synced_records": "commit_synced_records",
+            },
+        )
+
     def attach(self, wal: WriteAheadLog) -> WriteAheadLog:
         with self._lock:
             if wal not in self._wals:
@@ -220,8 +249,8 @@ class CommitPipeline:
                 self._wals.append(wal)
             self._dirty.add(self._wals.index(wal))
             self._pending += 1
-            self.stats["records"] += 1
             pending = self._pending
+        self.metrics.inc("commit_records")
         if self.mode == "sync":
             self._flush_dirty()
         elif self.mode == "group":
@@ -252,11 +281,17 @@ class CommitPipeline:
                 self._dirty.clear()
                 self._pending = 0
             for wal in targets:
+                t0 = time.perf_counter()
                 wal.flush(sync=True)
-            with self._lock:
-                if flushed:
-                    self.stats["group_flushes"] += 1
-                    self.stats["synced_records"] += flushed
+                # group-commit visibility latency: one sample per touched
+                # log per pass (the WAL itself meters the raw fsync)
+                self.metrics.observe(
+                    "commit_flush_seconds", time.perf_counter() - t0
+                )
+            if flushed:
+                self.metrics.inc("commit_group_flushes")
+                self.metrics.inc("commit_synced_records", flushed)
+                self.metrics.observe("commit_batch_records", float(flushed))
 
     def _ensure_thread(self) -> None:
         if self._thread is None or not self._thread.is_alive():

@@ -37,6 +37,7 @@ contributing), so ``DSLog.prov_query`` serves both forms from one engine.
 from __future__ import annotations
 
 import math
+import time
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Iterable, Sequence
 
@@ -133,13 +134,53 @@ class QueryPlan:
     # estimated frontier box count per plan node (filled by the planner;
     # consumed by the sharded planner's boundary-exchange cost term)
     est_boxes: dict[str, float] = field(default_factory=dict)
+    # EXPLAIN ANALYZE accumulators, filled as the plan executes (plans are
+    # memoized and shared across queries, so these are totals over every
+    # execution): (u, v, lineage_id, stored, frontier_on) -> counters,
+    # plus "__exec_ms__" for packed-dispatch wall time.  Guarded by the
+    # owning store's _stats_lock.
+    measured: dict = field(default_factory=dict)
 
-    def describe(self) -> str:
-        """Human-readable plan, one line per hop (EXPLAIN-style)."""
-        lines = [
+    def _measured_for(self, step: "EdgeStep", choice: "HopChoice"):
+        return self.measured.get(
+            (step.u, step.v, choice.lineage_id, choice.stored, choice.frontier_on)
+        )
+
+    def _analyze_line(self, step: "EdgeStep", choice: "HopChoice") -> str:
+        rec = self._measured_for(step, choice)
+        est = (
+            f"est_pairs={choice.est_pairs:.0f} est_cost={choice.est_cost:.0f}"
+        )
+        if rec is None:
+            return f"      {_fmt_lid(choice.lineage_id)}: {est} | not executed"
+        measured = (
+            f"measured pairs={rec['pairs']} qrows={rec['qrows']} "
+            f"calls={rec['calls']}"
+        )
+        if rec["timed"]:
+            measured += f" time={rec['ms']:.3f}ms"
+        return f"      {_fmt_lid(choice.lineage_id)}: {est} | {measured}"
+
+    def describe(self, analyze: bool = False) -> str:
+        """Human-readable plan, one line per hop (EXPLAIN-style).
+
+        ``analyze=True`` is EXPLAIN ANALYZE: each hop choice gains a
+        sub-line comparing the cost model's estimates against measured
+        pair counts (and per-hop wall time where the serial engine timed
+        individual joins) accumulated over the plan's executions.
+        """
+        header = (
             f"{self.direction} plan, {len(self.order)} nodes, "
             f"est_cost={self.est_cost:.0f}"
-        ]
+        )
+        if analyze:
+            exec_ms = self.measured.get("__exec_ms__")
+            if exec_ms is not None:
+                header += (
+                    f", measured exec={exec_ms[0]:.3f}ms"
+                    f" over {exec_ms[1]} dispatches"
+                )
+        lines = [header]
         for key in self.order:
             for step in self.steps.get(key, []):
                 opts = ", ".join(
@@ -152,6 +193,9 @@ class QueryPlan:
                     f"  {self.node_array[step.u]} -> "
                     f"{self.node_array[step.v]}  [{opts}]"
                 )
+                if analyze:
+                    for c in step.choices:
+                        lines.append(self._analyze_line(step, c))
         return "\n".join(lines)
 
 
@@ -179,6 +223,8 @@ class QueryPlanner:
             self._executor = BatchedJoinExecutor(
                 stats=self.log._bump,
                 tuner=getattr(self.log, "autotune", None),
+                metrics=getattr(self.log, "metrics", None),
+                trace_source=lambda: getattr(self.log, "_active_trace", None),
             )
         return self._executor
 
@@ -295,10 +341,29 @@ class QueryPlanner:
             vplan = self._view_plan(
                 next(iter(src_set)), next(iter(dst_set)), frontier, nq0, batched
             )
+            tr = getattr(self.log, "_active_trace", None)
             if vplan is not None and vplan.est_cost < plan.est_cost:
                 self.log._bump("view_hits")
+                if tr is not None:
+                    tr.event(
+                        "view_race",
+                        kind="view",
+                        winner="view",
+                        view_cost=round(vplan.est_cost, 3),
+                        base_cost=round(plan.est_cost, 3),
+                    )
                 return vplan
             self.log._bump("view_misses")
+            if tr is not None:
+                tr.event(
+                    "view_race",
+                    kind="view",
+                    winner="base",
+                    view_cost=(
+                        None if vplan is None else round(vplan.est_cost, 3)
+                    ),
+                    base_cost=round(plan.est_cost, 3),
+                )
         return plan
 
     def _view_plan(
@@ -737,6 +802,7 @@ class QueryPlanner:
         res_lists: list[list[QueryBox]],
         nB: int,
         merge: bool,
+        timings: list[float] | None = None,
     ) -> list[QueryBox]:
         """One node's frontier: its init share plus every step's results."""
         shape = self.log.arrays[plan.node_array[key]].shape
@@ -748,9 +814,18 @@ class QueryPlanner:
         for k, q in enumerate(init.get(key, [])):
             acc_lo[k].append(q.lo)
             acc_hi[k].append(q.hi)
-        for (step, choice, qs), res_list in zip(gathered, res_lists):
+        for i, ((step, choice, qs), res_list) in enumerate(
+            zip(gathered, res_lists)
+        ):
             self._record_step_output(plan, step, res_list)
-            self._record_choice(choice, qs, res_list)
+            self._record_choice(
+                choice,
+                qs,
+                res_list,
+                plan=plan,
+                step=step,
+                elapsed=None if timings is None else timings[i],
+            )
             for k, res in enumerate(res_list):
                 acc_lo[k].append(res.lo)
                 acc_hi[k].append(res.hi)
@@ -788,14 +863,20 @@ class QueryPlanner:
         it owns).  Results are identical either way.
         """
         gathered = self._gather_requests(plan, key, frontier)
+        timings: list[float] | None = None
         if use_batched and gathered:
             res_lists = self.executor.run(self._requests_for(gathered))
         else:
-            res_lists = [
-                self._join_choice(choice, qs) for _s, choice, qs in gathered
-            ]
+            # the per-hop loop is the one engine that can time individual
+            # joins — EXPLAIN ANALYZE shows true per-hop wall time here
+            res_lists = []
+            timings = []
+            for _s, choice, qs in gathered:
+                t0 = time.perf_counter()
+                res_lists.append(self._join_choice(choice, qs))
+                timings.append(time.perf_counter() - t0)
         return self._assemble_node(
-            plan, key, init, gathered, res_lists, nB, merge
+            plan, key, init, gathered, res_lists, nB, merge, timings=timings
         )
 
     def _execute_waves(
@@ -837,7 +918,16 @@ class QueryPlanner:
             reqs: list[JoinRequest] = []
             for k in wave:
                 reqs.extend(self._requests_for(gathered[k]))
-            res = self.executor.run(reqs, workers=workers) if reqs else []
+            if reqs:
+                t0 = time.perf_counter()
+                res = self.executor.run(reqs, workers=workers)
+                dt_ms = (time.perf_counter() - t0) * 1e3
+                with self.log._stats_lock:
+                    acc = plan.measured.setdefault("__exec_ms__", [0.0, 0])
+                    acc[0] += dt_ms
+                    acc[1] += 1
+            else:
+                res = []
             off = 0
             for k in wave:
                 n = len(gathered[k])
@@ -950,19 +1040,66 @@ class QueryPlanner:
         )
 
     def _record_choice(
-        self, choice: HopChoice, qs: list[QueryBox], res: list[QueryBox]
+        self,
+        choice: HopChoice,
+        qs: list[QueryBox],
+        res: list[QueryBox],
+        plan: QueryPlan | None = None,
+        step: EdgeStep | None = None,
+        elapsed: float | None = None,
     ) -> None:
         # cost-model feedback: the true pair counts this hop produced, keyed
         # by (entry, materialization, join side) — replanning the same
         # catalog prefers these measurements over the closed-form model
         qrows = sum(q.n_rows for q in qs)
+        pairs = sum(r.n_rows for r in res)
         if qrows:
             self.log.record_hop(
                 choice.lineage_id,
                 choice.stored,
                 choice.frontier_on,
-                pairs=sum(r.n_rows for r in res),
+                pairs=pairs,
                 qrows=qrows,
+            )
+        if plan is not None and step is not None:
+            # EXPLAIN ANALYZE: accumulate the measured side against the
+            # plan's estimates (plans are memoized — totals over runs)
+            mkey = (
+                step.u,
+                step.v,
+                choice.lineage_id,
+                choice.stored,
+                choice.frontier_on,
+            )
+            with self.log._stats_lock:
+                rec = plan.measured.get(mkey)
+                if rec is None:
+                    rec = plan.measured[mkey] = {
+                        "pairs": 0,
+                        "qrows": 0,
+                        "calls": 0,
+                        "ms": 0.0,
+                        "timed": 0,
+                    }
+                rec["pairs"] += pairs
+                rec["qrows"] += qrows
+                rec["calls"] += 1
+                if elapsed is not None:
+                    rec["ms"] += elapsed * 1e3
+                    rec["timed"] += 1
+        tr = getattr(self.log, "_active_trace", None)
+        if tr is not None and step is not None:
+            tr.event(
+                "hop",
+                kind="hop",
+                u=plan.node_array[step.u] if plan is not None else step.u,
+                v=plan.node_array[step.v] if plan is not None else step.v,
+                lid=choice.lineage_id,
+                stored=choice.stored,
+                route=choice.describe_route(),
+                qrows=qrows,
+                pairs=pairs,
+                duration=elapsed,
             )
 
     def _run_choice(

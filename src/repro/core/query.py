@@ -45,6 +45,7 @@ their owning queries.
 from __future__ import annotations
 
 import os
+import time
 from dataclasses import dataclass, field
 from typing import Sequence
 
@@ -748,6 +749,8 @@ class BatchedJoinExecutor:
         interpret: bool | None = None,
         tuner: "GeometryTuner | None" = None,
         engine: str | None = None,
+        metrics=None,
+        trace_source=None,
     ):
         if engine not in (None, "kernel", "twin"):
             raise ValueError(f"unknown dense engine {engine!r}")
@@ -755,6 +758,10 @@ class BatchedJoinExecutor:
         self._interpret = interpret
         self._tuner = tuner if tuner is not None else GeometryTuner()
         self._engine = engine
+        # optional registry (labeled autotune-decision counters) and a
+        # callable yielding the owning store's active QueryTrace (or None)
+        self._metrics = metrics
+        self._trace_source = trace_source
         self._pool = None  # lazy worker pool for twin-segment fan-out
         self._pool_width = 0
         # measured tile occupancy: EMA of (scheduled tile cells / useful
@@ -880,9 +887,11 @@ class BatchedJoinExecutor:
                 u_lo, u_hi, inv, ui, ri, req.merge,
             )
 
+        tr = self._trace_source() if self._trace_source is not None else None
         if kernel_idx:
             from repro.kernels.ops import segmented_range_join_pairs
 
+            t0 = time.perf_counter()
             segs = [
                 (items[k][2], items[k][3], items[k][5], items[k][6])
                 for k in kernel_idx
@@ -906,6 +915,12 @@ class BatchedJoinExecutor:
                             interpret=interpret,
                         ),
                     )
+                    if self._metrics is not None:
+                        self._metrics.inc(
+                            "autotune_decisions",
+                            backend=backend,
+                            bucket=str(bucket),
+                        )
                 else:
                     geom = DEFAULT_GEOMETRY
             if result is None:
@@ -926,10 +941,22 @@ class BatchedJoinExecutor:
                 float(info["tiles_visited"]) * geom[0] * geom[1],
                 float(sum(nq * nr for nq, nr, _ in shapes)),
             )
+            if tr is not None:
+                tr.event(
+                    "kernel_launch",
+                    kind="kernel",
+                    backend=backend,
+                    segments=len(kernel_idx),
+                    geometry=f"{geom[0]}x{geom[1]}",
+                    launches=info["launches"],
+                    rows=info["rows"],
+                    duration=time.perf_counter() - t0,
+                )
         done = set(kernel_idx)
         rest = [k for k in range(len(items)) if k not in done]
         if not rest:
             return
+        t0 = time.perf_counter()
         rows = sum(items[k][2].shape[0] + items[k][5].shape[0] for k in rest)
         pairs: dict[int, tuple[np.ndarray, np.ndarray]] = {}
 
@@ -974,6 +1001,12 @@ class BatchedJoinExecutor:
                     default=DEFAULT_TWIN_CELLS,
                     warmup=False,  # pure numpy: nothing to compile
                 )
+                if self._metrics is not None:
+                    self._metrics.inc(
+                        "autotune_decisions",
+                        backend="np",
+                        bucket=str(twin_bucket),
+                    )
                 if res is not None:
                     pairs[k_big] = res
             else:
@@ -1037,6 +1070,17 @@ class BatchedJoinExecutor:
         # per-segment evaluation has no tile padding: cells-exact occupancy
         useful = float(sum(nq * nr for nq, nr, _ in twin_shapes))
         self._observe_occupancy(useful, useful)
+        if tr is not None:
+            tr.event(
+                "twin",
+                kind="kernel",
+                backend="np",
+                segments=len(rest),
+                rows=rows,
+                block_cells=block_cells,
+                workers=width,
+                duration=time.perf_counter() - t0,
+            )
 
 
 # --------------------------------------------------------------------------- #

@@ -52,11 +52,15 @@ from collections.abc import Mapping
 from dataclasses import dataclass, field
 
 from repro.kernels.autotune import GeometryTuner
+from repro.obs.export import telemetry_snapshot
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import QueryTrace
 
 from . import _locks
 from .catalog import (
     ArrayDef,
     DSLog,
+    SEED_COUNTERS,
     _apply_open_overrides,
     _atomic_write,
     _write_blob,
@@ -313,12 +317,25 @@ class ShardedQueryPlan(QueryPlan):
             )
         return out
 
-    def describe(self) -> str:
-        """EXPLAIN output: per-hop lines tagged with shards, then exchanges."""
-        lines = [
+    def describe(self, analyze: bool = False) -> str:
+        """EXPLAIN output: per-hop lines tagged with shards, then exchanges.
+
+        ``analyze=True`` adds the measured side per hop choice (see
+        :meth:`QueryPlan.describe`) and measured shipped box counts per
+        exchange.
+        """
+        header = (
             f"sharded {self.direction} plan, {len(self.order)} nodes, "
             f"shards={self.shards_touched()}, est_cost={self.est_cost:.0f}"
-        ]
+        )
+        if analyze:
+            exec_ms = self.measured.get("__exec_ms__")
+            if exec_ms is not None:
+                header += (
+                    f", measured exec={exec_ms[0]:.3f}ms"
+                    f" over {exec_ms[1]} dispatches"
+                )
+        lines = [header]
         for key in self.order:
             for step in self.steps.get(key, []):
                 opts = ", ".join(
@@ -332,11 +349,17 @@ class ShardedQueryPlan(QueryPlan):
                     f"  [s{shard}] {self.node_array[step.u]} -> "
                     f"{self.node_array[step.v]}  [{opts}]"
                 )
+                if analyze:
+                    for c in step.choices:
+                        lines.append(self._analyze_line(step, c))
         for ex in self.exchanges:
-            lines.append(
+            line = (
                 f"  exchange {ex.array!r} ({ex.side}) s{ex.from_shard} -> "
                 f"s{ex.to_shard}  est_boxes={ex.est_boxes:.0f}"
             )
+            if analyze:
+                line += f" | measured shipped={ex.shipped_boxes}"
+            lines.append(line)
         return "\n".join(lines)
 
 
@@ -433,6 +456,7 @@ class ShardedQueryPlanner(QueryPlanner):
         with self.log._stats_lock:  # parallel sub-plans meter concurrently
             ex.shipped_boxes += n
         self.log._bump("boxes_exchanged", n)
+        self._meter_exchange(ex, n)
         return shipped
 
     def _record_step_output(self, plan, step, res_list):
@@ -445,6 +469,27 @@ class ShardedQueryPlanner(QueryPlanner):
         with self.log._stats_lock:
             ex.shipped_boxes += n
         self.log._bump("boxes_exchanged", n)
+        self._meter_exchange(ex, n)
+
+    def _meter_exchange(self, ex: ExchangeStep, n: int) -> None:
+        """Per-shard-pair exchange volume + trace event (outside locks)."""
+        self.log.metrics.inc(
+            "exchange_boxes",
+            n,
+            from_shard=str(ex.from_shard),
+            to_shard=str(ex.to_shard),
+        )
+        tr = getattr(self.log, "_active_trace", None)
+        if tr is not None:
+            tr.event(
+                "exchange",
+                kind="exchange",
+                array=ex.array,
+                side=ex.side,
+                from_shard=ex.from_shard,
+                to_shard=ex.to_shard,
+                boxes=n,
+            )
 
 
 # --------------------------------------------------------------------------- #
@@ -529,11 +574,14 @@ class ShardedDSLog:
         )
         self._predictor_chunk: dict | None = None
         self._meta_dirty = False
-        self._io: dict[str, int] = _locks.guard_mapping(
-            {"shards_loaded": 0, "boxes_exchanged": 0},
-            self._stats_lock,
-            "ShardedDSLog._io",
-        )
+        # facade-level telemetry: facade-minted counters (exchanges, shard
+        # loads, query latency) live here; io_stats / metrics_snapshot()
+        # aggregate this registry with every loaded shard's by key union.
+        self.metrics = MetricsRegistry("dslog-root")
+        self.metrics.seed_counters(SEED_COUNTERS)
+        self.metrics.seed_counters(("shards_loaded", "boxes_exchanged"))
+        self.metrics.register_collector(self._collect_gauges)
+        self._active_trace: QueryTrace | None = None
         # durability subsystem (attached by open(); see DSLog for the
         # single-store equivalent).  _exclusive=False is writer mode: this
         # process appends to shard WALs under per-shard leases and never
@@ -558,6 +606,7 @@ class ShardedDSLog:
     _check_shapes = DSLog._check_shapes
     prov_query = DSLog.prov_query
     prov_query_batch = DSLog.prov_query_batch
+    _query_batch_impl = DSLog._query_batch_impl
     _as_boxes = DSLog._as_boxes
     _parse_query_args = staticmethod(DSLog._parse_query_args)
     version = DSLog.version
@@ -700,38 +749,50 @@ class ShardedDSLog:
         return [k for k, sh in enumerate(self._shards) if sh is not None]
 
     def _bump(self, key: str, n: int = 1) -> None:
-        with self._stats_lock:  # parallel execution bumps from workers
-            self._io[key] = self._io.get(key, 0) + n
+        self.metrics.inc(key, n)
+
+    def _collect_gauges(self):
+        """Facade snapshot-time gauges: view-manager state (the cross-shard
+        views live here; per-shard hop gauges ride the shard registries)."""
+        try:
+            vstats = self.views.stats()
+        except Exception:
+            return
+        for name, val in vstats.items():
+            if isinstance(val, (int, float)):
+                yield (f"views_{name}", {}, val)
 
     @property
     def io_stats(self) -> dict[str, int]:
-        """Aggregated I/O counters: facade-level plus every loaded shard."""
-        total = {
-            "tables_loaded": 0,
-            "tables_written": 0,
-            "manifests_written": 0,
-            "sig_tables_written": 0,
-            "bytes_written": 0,
-            "kernel_launches": 0,
-            "joins_packed": 0,
-            "batch_rows": 0,
-            "batch_rows_padded": 0,
-            "batch_tiles_visited": 0,
-            "batch_tiles_skipped": 0,
-            "view_hits": 0,
-            "view_misses": 0,
-            "cache_hits": 0,
-            "cache_misses": 0,
-            "views_materialized": 0,
-            "views_invalidated": 0,
-        }
-        total.update(self._io)
+        """Aggregated I/O counters: facade-level plus every loaded shard.
+
+        Aggregation is by *key union* over the facade registry and every
+        loaded shard's counters — a counter a shard mints after this
+        facade was built (or one only some shards know) still shows up.
+        """
+        total = self.metrics.counters_flat()
         for sh in self._shards:
             if sh is None:
                 continue
             for key, val in sh.io_stats.items():
                 total[key] = total.get(key, 0) + val
         return total
+
+    def metrics_snapshot(self) -> dict:
+        """Merged telemetry: the facade registry plus every loaded shard's,
+        unioned by (instrument, labels) — histograms and labeled series
+        aggregate the same way ``io_stats`` unions counters."""
+        snaps = [self.metrics.snapshot()]
+        snaps.extend(
+            sh.metrics.snapshot() for sh in self._shards if sh is not None
+        )
+        return MetricsRegistry.merge_snapshots(snaps, name="dslog-root")
+
+    def health(self, run_fsck: bool = True) -> dict:
+        """Registry red-flags + ``fsck`` findings (``repro.obs.export``)."""
+        from repro.obs.export import health as _health
+
+        return _health(self, run_fsck=run_fsck)
 
     @property
     def dirty(self) -> bool:
@@ -963,9 +1024,14 @@ class ShardedDSLog:
             log._exclusive = exclusive
             log._root_lease = root_lease
             log._presence_lease = presence_lease
+            # the pipeline predates the store object: retarget its
+            # instruments at the facade registry (interim counts carry over)
+            pipeline.bind_metrics(log.metrics)
             if log._wal is None:
                 log._wal = WriteAheadLog(
-                    os.path.join(root, WAL_FILENAME), shared=True
+                    os.path.join(root, WAL_FILENAME),
+                    shared=True,
+                    metrics=log.metrics,
                 )
             pipeline.attach(log._wal)
             if exclusive:
@@ -1080,6 +1146,12 @@ class ShardedDSLog:
             ):
                 sh.save(checkpoint_wal=False)
                 saved_shards.append(sh)
+        # write-only telemetry sidecar (facade + loaded shards merged);
+        # refreshed on every checkpoint, never read back by load()
+        _atomic_write(
+            os.path.join(self.root, "telemetry.json"),
+            json.dumps(telemetry_snapshot(self)),
+        )
         manifest = os.path.join(self.root, "catalog.json")
         if not (
             self._meta_dirty

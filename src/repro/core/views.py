@@ -637,6 +637,7 @@ class ViewManager:
             vid = min(self.views, key=lambda k: self.views[k].last_use)
             total -= self.views[vid].total_rows
             self._remove_view(vid, count=False)
+            self._bump("views_demoted")
 
     def _remove_view(self, vid: int, count: bool = True) -> None:
         view = self.views.pop(vid)

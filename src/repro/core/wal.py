@@ -47,8 +47,11 @@ from __future__ import annotations
 import json
 import os
 import struct
+import time
 import zlib
 from typing import Iterator
+
+from repro.obs.metrics import MetricsRegistry, StatsView
 
 from . import _locks
 
@@ -114,7 +117,7 @@ class WriteAheadLog:
     ``flock`` so several processes can interleave whole records.
     """
 
-    def __init__(self, path: str, shared: bool = False):
+    def __init__(self, path: str, shared: bool = False, metrics=None):
         self.path = path
         self.shared = bool(shared)
         self._lock = _locks.new_lock("wal._lock")
@@ -123,10 +126,23 @@ class WriteAheadLog:
         self._end = _HEADER_SIZE  # exclusive mode: current file offset
         self._shared_good = _HEADER_SIZE  # shared mode: verified boundary
         self.base_lsn = 0
-        self.stats = _locks.guard_mapping(
-            {"records": 0, "flushes": 0, "syncs": 0, "bytes": 0},
-            self._lock,
-            "WriteAheadLog.stats",
+        # meters live in the (internally locked) registry — the owning
+        # store's when attached, a private one for standalone logs; the
+        # legacy ``wal.stats["records"]`` read surface is an alias view.
+        if metrics is None:
+            metrics = MetricsRegistry("wal")
+        self.metrics = metrics
+        metrics.seed_counters(
+            ("wal_records", "wal_flushes", "wal_syncs", "wal_bytes")
+        )
+        self.stats = StatsView(
+            metrics,
+            {
+                "records": "wal_records",
+                "flushes": "wal_flushes",
+                "syncs": "wal_syncs",
+                "bytes": "wal_bytes",
+            },
         )
         self._open()
 
@@ -265,8 +281,8 @@ class WriteAheadLog:
                 self._f.write(data)
                 self._end += len(data)
                 lsn = self.base_lsn + (self._end - _HEADER_SIZE)
-            self.stats["records"] += 1
-            self.stats["bytes"] += len(data)
+            self.metrics.inc("wal_records")
+            self.metrics.inc("wal_bytes", len(data))
             return lsn
 
     def flush(self, sync: bool = True) -> None:
@@ -302,11 +318,12 @@ class WriteAheadLog:
             else:
                 self._f.flush()
             fd = self._f.fileno()
-            self.stats["flushes"] += 1
+        self.metrics.inc("wal_flushes")
         if sync:
+            t0 = time.perf_counter()
             os.fsync(fd)
-            with self._lock:
-                self.stats["syncs"] += 1
+            self.metrics.inc("wal_syncs")
+            self.metrics.observe("wal_fsync_seconds", time.perf_counter() - t0)
 
     # ------------------------------------------------------------------ #
     def recover(self, min_lsn: int = 0, truncate: bool = False) -> list[WalRecord]:

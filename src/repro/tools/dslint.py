@@ -36,6 +36,14 @@ The rules encode invariants the type system can't express:
 ``mutable-default``
     No mutable default arguments (``[]``, ``{}``, ``set()``, …) in
     ``core/``, ``kernels/``, ``tools/``.
+``metric-registry``
+    In ``core/``, instrument state lives in the store's
+    :class:`~repro.obs.metrics.MetricsRegistry`; writing through a
+    legacy stats-dict attribute (``x.io_stats[...] = ...``,
+    ``x.stats[...] += n``, ``x._io.update(...)``) bypasses the
+    registry's lock and its exporters.  Mutate via ``metrics.inc`` /
+    ``observe`` / ``set_gauge`` instead (``hop_stats`` is exempt: it is
+    the planner's lock-guarded EMA table, not an instrument dict).
 ``int32-cast``
     In the kernel packers (``core/query.py``, ``kernels/``), a function
     performing ``.astype(np.int32)`` / ``.astype("int32")`` must reference
@@ -260,6 +268,60 @@ class LockNewRule:
                     f"direct threading.{fn.attr}() in core/; mint locks via "
                     "repro.core._locks so the race detector can instrument "
                     "them",
+                )
+
+
+@_rule
+class MetricRegistryRule:
+    name = "metric-registry"
+
+    # legacy instrument-dict attribute names; hop_stats is deliberately
+    # absent (the planner's EMA table is guarded state, not a counter)
+    _STATS_ATTRS = frozenset({"io_stats", "_io", "stats"})
+    _MUTATORS = frozenset({"update", "setdefault", "pop", "popitem", "clear"})
+
+    def applies(self, scope: str) -> bool:
+        return _in_dir(scope, "core")
+
+    def _stats_attr(self, node: ast.expr) -> str | None:
+        if isinstance(node, ast.Attribute) and node.attr in self._STATS_ATTRS:
+            return node.attr
+        return None
+
+    def check(self, ctx: Context) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            targets: list[ast.expr] = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                targets = [node.target]
+            for tgt in targets:
+                if not isinstance(tgt, ast.Subscript):
+                    continue
+                attr = self._stats_attr(tgt.value)
+                if attr is not None:
+                    yield Finding(
+                        ctx.path,
+                        node.lineno,
+                        self.name,
+                        f"direct write to {ast.unparse(tgt.value)}[...] "
+                        "bypasses the metrics registry; use "
+                        "metrics.inc/observe/set_gauge (the legacy "
+                        f"{attr!r} surface is a read-only view)",
+                    )
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in self._MUTATORS
+                and self._stats_attr(node.func.value) is not None
+            ):
+                yield Finding(
+                    ctx.path,
+                    node.lineno,
+                    self.name,
+                    f".{node.func.attr}() on "
+                    f"{ast.unparse(node.func.value)} bypasses the metrics "
+                    "registry; use metrics.inc/observe/set_gauge",
                 )
 
 

@@ -28,6 +28,13 @@ Rank order (outermost → innermost):
 6.  ``wal._lock`` — serialises appends/flushes on one ``WriteAheadLog``.
 7.  ``shard._stats_lock`` — ``ShardedDSLog`` I/O + hop-stats meters (leaf).
 8.  ``catalog._stats_lock`` — ``DSLog`` I/O + hop-stats meters (leaf).
+9.  ``metrics._lock`` — a ``MetricsRegistry``'s instrument table.  Every
+    counter/histogram update may fire while any of the locks above is
+    held (WAL appends, commit flushes, stats bookkeeping), so the
+    registry lock is a leaf below all of them and takes no other lock.
+10. ``trace._lock`` — a ``QueryTrace``'s span-attach lock.  Span exit
+    reads counter deltas (``metrics._lock``) *before* attaching, so the
+    trace lock nests innermost of all.
 
 Lock names are ``"<module stem>.<attribute>"``; every lock constructed via
 ``repro.core._locks`` carries one.
@@ -44,6 +51,8 @@ LOCK_ORDER: dict[str, int] = {
     "wal._lock": 50,
     "shard._stats_lock": 60,
     "catalog._stats_lock": 70,
+    "metrics._lock": 80,
+    "trace._lock": 90,
 }
 
 #: (module stem, attribute name) → declared lock name, for the static pass.
@@ -54,10 +63,15 @@ STATIC_LOCKS: dict[tuple[str, str], str] = {
     ("views", "_lock"): "views._lock",
     ("shard", "_stats_lock"): "shard._stats_lock",
     ("catalog", "_stats_lock"): "catalog._stats_lock",
+    # planner accumulates EXPLAIN ANALYZE measurements under the owning
+    # store's stats lock (self.log._stats_lock)
+    ("planner", "_stats_lock"): "catalog._stats_lock",
     ("table", "_lock"): "table._lock",
     ("wal", "_lock"): "wal._lock",
     ("commit", "_lock"): "commit._lock",
     ("commit", "_flush_mutex"): "commit._flush_mutex",
+    ("metrics", "_lock"): "metrics._lock",
+    ("trace", "_lock"): "trace._lock",
 }
 
 

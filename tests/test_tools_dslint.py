@@ -290,6 +290,65 @@ def test_int32_cast_out_of_scope_unchecked(tmp_path):
 
 
 # --------------------------------------------------------------------------- #
+# metric-registry
+# --------------------------------------------------------------------------- #
+def test_metric_registry_flags_subscript_writes(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/catalog.py",
+        "def f(self, n):\n"
+        '    self.io_stats["tables_loaded"] += 1\n'
+        '    self._io["bytes_written"] = n\n'
+        '    self.wal.stats["records"] = 0\n',
+    )
+    assert [f.rule for f in findings] == ["metric-registry"] * 3
+
+
+def test_metric_registry_flags_dict_mutators(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/shard.py",
+        "def f(self):\n"
+        '    self.io_stats.update({"cache_hits": 1})\n'
+        "    self.stats.clear()\n",
+    )
+    assert [f.rule for f in findings] == ["metric-registry"] * 2
+
+
+def test_metric_registry_allows_registry_and_local_dicts(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/catalog.py",
+        "def f(self, key, n):\n"
+        "    self.metrics.inc(key, n)\n"
+        '    self.hop_stats[key] = (1.0, 2.0)\n'  # guarded EMA table, exempt
+        '    stats = {"files_removed": 0}\n'
+        '    stats["files_removed"] += 1\n'  # local dict, not an instrument
+        "    return self.io_stats[key]\n",  # reads stay legal
+    )
+    assert "metric-registry" not in _rules(findings)
+
+
+def test_metric_registry_out_of_scope_unchecked(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/tools/bench.py",
+        'def f(log):\n    log.io_stats["cache_hits"] = 0\n',
+    )
+    assert "metric-registry" not in _rules(findings)
+
+
+def test_metric_registry_pragma_escape(tmp_path):
+    findings = _lint(
+        tmp_path,
+        "repro/core/catalog.py",
+        "def f(self):\n"
+        '    self.io_stats["x"] = 1  # dslint: ignore[metric-registry]\n',
+    )
+    assert "metric-registry" not in _rules(findings)
+
+
+# --------------------------------------------------------------------------- #
 # pragmas, plugins, driver
 # --------------------------------------------------------------------------- #
 def test_pragma_suppresses_named_rule(tmp_path):
