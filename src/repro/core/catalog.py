@@ -642,7 +642,11 @@ class DSLog:
     ) -> None:
         if wal is None or self._replaying:
             return
-        wal.append(rtype, meta, blobs)
+        # legacy single-writer stores append without a lease by design:
+        # they flush synchronously (below) and never truncate, so a torn
+        # tail is the worst a crash leaves.  Truncation stays lease-gated
+        # in the save()/checkpoint paths.
+        wal.append(rtype, meta, blobs)  # dsflow: ignore[wal-lease]
         if self._pipeline is not None:
             self._pipeline.notify(wal)
         else:  # no pipeline attached (plain load): stay conservative

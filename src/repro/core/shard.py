@@ -664,6 +664,13 @@ class ShardedDSLog:
                 os.path.join(sub, WAL_FILENAME)
             )
             if has_manifest or has_wal:
+                # lazy shard materialisation deliberately does recovery
+                # I/O (WAL flock/replay, lease rename) under the load
+                # lock: it is a single-fire latch, and publishing a
+                # half-recovered shard would be worse.  The shard→shard
+                # self-edge is a borrowed-method over-approximation: a
+                # sub-log's replay never dispatches back via the facade.
+                # dsflow: ignore[lock-fsync,lock-order,wal-lease]
                 sh = DSLog.load(sub)
                 sh.store_forward = self.store_forward
                 sh.compress_method = self.compress_method
@@ -681,6 +688,9 @@ class ShardedDSLog:
                 )
             if self._pipeline is not None and sub is not None:
                 if sh._wal is None:
+                    # same latch: attaching the WAL acquires the shard
+                    # lease (rename) and must finish before publication
+                    # dsflow: ignore[lock-fsync,lock-order]
                     sh._attach_wal(self._pipeline)
                 else:
                     sh._pipeline = self._pipeline

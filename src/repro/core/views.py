@@ -347,7 +347,7 @@ class ViewManager:
 
     def __init__(
         self,
-        log,
+        log: "DSLog | ShardedDSLog",
         *,
         enabled: bool = True,
         admit_after: float = 3.0,
@@ -790,35 +790,58 @@ class ViewManager:
     def manifest_chunk(self, write_blob) -> dict:
         """Manifest record of every live view; ``write_blob(fn, table)``
         persists a blob durably.  Marks the manager clean."""
+        # Snapshot which views still need blobs, then compose and write
+        # them *outside* the lock: ``write_blob`` fsyncs and
+        # ``view.backward`` may decode a table blob from disk, and every
+        # reader would serialise behind that latency if it ran under
+        # ``views._lock``.  Views are immutable once composed and each
+        # blob is written exactly once, so no lock is needed while
+        # writing; a view removed concurrently just leaves an
+        # unreferenced blob for ``compact()`` to vacuum.
+        with self._lock:
+            pending = [
+                (vid, self.views[vid])
+                for vid in sorted(self.views)
+                if self.views[vid]._rec is None
+            ]
+        written: dict[int, dict] = {}
+        for vid, view in pending:
+            fn = f"view_{vid}.prvc"
+            write_blob(fn, view.backward)
+            rec = {
+                "id": vid,
+                "src": view.src,
+                "dst": view.dst,
+                "lids": sorted(view.lids),
+                "arrays": sorted(view.arrays),
+                "file": fn,
+                "rows": view.backward_rows,
+                "fwd": None,
+                "fwd_rows": None,
+                "lsns": dict(view.lsns),
+            }
+            if view._fwd is not None:
+                fwd_fn = f"view_{vid}_fwd.prvc"
+                write_blob(fwd_fn, view.forward)
+                rec["fwd"] = fwd_fn
+                rec["fwd_rows"] = view.forward_rows
+            written[vid] = rec
         with self._lock:
             recs = []
+            clean = True
             for vid in sorted(self.views):
                 view = self.views[vid]
                 if view._rec is None:
-                    # views are immutable once composed: blobs go to disk
-                    # exactly once, later saves reuse the record verbatim
-                    fn = f"view_{vid}.prvc"
-                    write_blob(fn, view.backward)
-                    rec = {
-                        "id": vid,
-                        "src": view.src,
-                        "dst": view.dst,
-                        "lids": sorted(view.lids),
-                        "arrays": sorted(view.arrays),
-                        "file": fn,
-                        "rows": view.backward_rows,
-                        "fwd": None,
-                        "fwd_rows": None,
-                        "lsns": dict(view.lsns),
-                    }
-                    if view._fwd is not None:
-                        fwd_fn = f"view_{vid}_fwd.prvc"
-                        write_blob(fwd_fn, view.forward)
-                        rec["fwd"] = fwd_fn
-                        rec["fwd_rows"] = view.forward_rows
+                    rec = written.get(vid)
+                    if rec is None:
+                        # admitted after the snapshot: its blob is not on
+                        # disk yet, so it stays out of this manifest and
+                        # the manager stays dirty for the next save
+                        clean = False
+                        continue
                     view._rec = rec
                 recs.append(view._rec)
-            self._dirty = False
+            self._dirty = not clean
             return {"next_id": self._next_id, "views": recs}
 
     def load_chunk(self, chunk: dict, make_handle) -> None:

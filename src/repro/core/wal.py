@@ -314,7 +314,12 @@ class WriteAheadLog:
                         self._f.truncate(end)  # shrank past a long tear
                     self._shared_good = end
 
-                self._flocked(write_batch)
+                # shared-mode appends MUST flock under wal._lock: the
+                # flock serialises against *other processes* on the root
+                # log, and releasing our own lock first would let a second
+                # thread interleave a batch between boundary verification
+                # and the write
+                self._flocked(write_batch)  # dsflow: ignore[lock-fsync]
             else:
                 self._f.flush()
             fd = self._f.fileno()
@@ -345,6 +350,10 @@ class WriteAheadLog:
         out: list[WalRecord] = []
         with self._lock:
             if self.shared:
+                # the scan must not race a concurrent appender in another
+                # process; flock under wal._lock is the point of shared
+                # mode (cold path: runs once per open, not per query)
+                # dsflow: ignore[lock-fsync]
                 return self._flocked(lambda: self._scan(min_lsn, out, truncate))
             return self._scan(min_lsn, out, truncate)
 
@@ -407,7 +416,10 @@ class WriteAheadLog:
             self._f.write(_MAGIC + struct.pack("<Q", end))
             self._f.truncate(_HEADER_SIZE)
             self._f.flush()
-            os.fsync(self._f.fileno())
+            # the truncation and its fsync must be atomic w.r.t. appenders
+            # on this log: releasing wal._lock between them could fsync a
+            # header an interleaved append already grew past (cold path)
+            os.fsync(self._f.fileno())  # dsflow: ignore[lock-fsync]
             self.base_lsn = end
             self._end = _HEADER_SIZE
             self._shared_good = _HEADER_SIZE

@@ -21,6 +21,7 @@ invalidates the cache when a store moves machines — a table tuned under
 from __future__ import annotations
 
 import math
+import threading
 import time
 from typing import Callable, Iterable, Sequence
 
@@ -87,6 +88,16 @@ class GeometryTuner:
     """
 
     def __init__(self) -> None:
+        # parallel query workers race pick/lookup/to_manifest on one
+        # tuner; the lock (rank 75, a leaf) guards only the table —
+        # candidate measurement runs outside it, because runners execute
+        # real workloads that take stats locks and fire metrics
+        try:
+            from repro.core import _locks
+
+            self._lock = _locks.new_lock("autotune._lock")
+        except ImportError:  # standalone use outside the repo tree
+            self._lock = threading.Lock()
         self._table: dict[str, dict] = {}
         self.dirty = False
 
@@ -96,13 +107,15 @@ class GeometryTuner:
         return f"{backend}|{bucket}"
 
     def __len__(self) -> int:
-        return len(self._table)
+        with self._lock:
+            return len(self._table)
 
     def lookup(self, backend: str, bucket: str) -> "tuple[int, ...] | None":
         """The cached winning geometry, or None when this (backend, bucket)
         has never been measured — including after a backend change: entries
         are keyed by backend, so a table tuned elsewhere never answers."""
-        rec = self._table.get(self._key(backend, bucket))
+        with self._lock:
+            rec = self._table.get(self._key(backend, bucket))
         if rec is None or rec.get("backend") != backend:
             return None
         try:
@@ -148,21 +161,25 @@ class GeometryTuner:
             if dt < best_s:
                 best, best_s, best_result = geom, dt, result
         assert best is not None, "no candidate geometries supplied"
-        self._table[self._key(backend, bucket)] = {
-            "backend": backend,
-            "bucket": bucket,
-            "geometry": list(best),
-            "us": round(best_s * 1e6, 1),
-            "measured": measured,
-        }
-        self.dirty = True
+        # concurrent measurers of the same key race benignly: last writer
+        # wins and both winners came from real measurements
+        with self._lock:
+            self._table[self._key(backend, bucket)] = {
+                "backend": backend,
+                "bucket": bucket,
+                "geometry": list(best),
+                "us": round(best_s * 1e6, 1),
+                "measured": measured,
+            }
+            self.dirty = True
         return best, best_result
 
     # ------------------------------------------------------------------ #
     # persistence (catalog sidecar)
     # ------------------------------------------------------------------ #
     def to_manifest(self) -> dict:
-        return {"version": _TABLE_VERSION, "entries": dict(self._table)}
+        with self._lock:
+            return {"version": _TABLE_VERSION, "entries": dict(self._table)}
 
     def load_manifest(self, chunk: "dict | None") -> None:
         """Restore a persisted table, dropping anything malformed.

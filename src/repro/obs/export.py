@@ -229,14 +229,16 @@ def health(store, run_fsck: bool = True) -> dict:
             from repro.tools.fsck import fsck_store
 
             fsck_report = fsck_store(store.root).to_json()
+            # findings follow the shared analysis-tool schema
+            # (repro.tools.findings): rule = fsck category, message = detail
             for finding in fsck_report.get("findings", ()):
                 if finding.get("severity") == "error":
                     ok = False
                     _flag(
                         flags,
                         "error",
-                        f"fsck:{finding.get('category')}",
-                        finding.get("detail", ""),
+                        f"fsck:{finding.get('rule')}",
+                        finding.get("message", ""),
                     )
         except Exception as exc:  # fsck must never take the store down
             _flag(flags, "info", "fsck-unavailable", repr(exc))

@@ -64,9 +64,11 @@ import json
 import os
 import re
 import sys
+import time
 from dataclasses import dataclass
 from typing import Iterable, Iterator
 
+from . import astcache
 from .lockorder import STATIC_LOCKS, rank
 
 _PRAGMA = re.compile(r"#\s*dslint:\s*ignore(?:\[(?P<rules>[\w\-, ]+)\])?")
@@ -85,21 +87,29 @@ class Finding:
 
 
 class Context:
-    """One file being linted: source, AST, and pragma map."""
+    """One file being linted: the shared parse (AST + node index) and the
+    pragma map.  Rules query :meth:`nodes` instead of re-walking the tree,
+    so one ``ast.walk`` serves every rule (``repro.tools.astcache`` owns
+    the parse, so ``dsflow`` runs over the same trees for free)."""
 
-    def __init__(self, path: str, scope: str, source: str):
+    def __init__(self, path: str, scope: str, parsed: astcache.ParsedFile):
         self.path = path
         self.scope = scope  # normalized repo-relative key, e.g. repro/core/wal.py
-        self.source = source
-        self.tree = ast.parse(source, filename=path)
+        self.parsed = parsed
+        self.source = parsed.source
+        self.tree = parsed.tree
         self.ignores: dict[int, set[str] | None] = {}
-        for lineno, line in enumerate(source.splitlines(), start=1):
+        for lineno, line in enumerate(parsed.source.splitlines(), start=1):
             m = _PRAGMA.search(line)
             if m:
                 rules = m.group("rules")
                 self.ignores[lineno] = (
                     {r.strip() for r in rules.split(",")} if rules else None
                 )
+
+    def nodes(self, *types: type) -> tuple:
+        """All nodes of the given exact AST classes (cached index)."""
+        return self.parsed.by_type(*types)
 
     def suppressed(self, line: int, rule: str) -> bool:
         # a pragma suppresses its own line and the line directly below it
@@ -116,9 +126,7 @@ class Context:
         return os.path.splitext(os.path.basename(self.path))[0]
 
     def functions(self) -> Iterator[ast.AST]:
-        for node in ast.walk(self.tree):
-            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                yield node
+        yield from self.nodes(ast.FunctionDef, ast.AsyncFunctionDef)
 
 
 def _in_dir(scope: str, *dirs: str) -> bool:
@@ -159,8 +167,8 @@ class LockContextRule:
         return _in_dir(scope, "core") and not scope.endswith("_locks.py")
 
     def check(self, ctx: Context) -> Iterator[Finding]:
-        for node in ast.walk(ctx.tree):
-            if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)):
+        for node in ctx.nodes(ast.Call):
+            if not isinstance(node.func, ast.Attribute):
                 continue
             if node.func.attr not in ("acquire", "release"):
                 continue
@@ -251,9 +259,7 @@ class LockNewRule:
         return _in_dir(scope, "core") and not scope.endswith("_locks.py")
 
     def check(self, ctx: Context) -> Iterator[Finding]:
-        for node in ast.walk(ctx.tree):
-            if not isinstance(node, ast.Call):
-                continue
+        for node in ctx.nodes(ast.Call):
             fn = node.func
             if (
                 isinstance(fn, ast.Attribute)
@@ -289,7 +295,7 @@ class MetricRegistryRule:
         return None
 
     def check(self, ctx: Context) -> Iterator[Finding]:
-        for node in ast.walk(ctx.tree):
+        for node in ctx.nodes(ast.Assign, ast.AugAssign, ast.AnnAssign, ast.Call):
             targets: list[ast.expr] = []
             if isinstance(node, ast.Assign):
                 targets = node.targets
@@ -412,8 +418,8 @@ class BareExceptRule:
         return _in_dir(scope, "core", "kernels", "tools")
 
     def check(self, ctx: Context) -> Iterator[Finding]:
-        for node in ast.walk(ctx.tree):
-            if isinstance(node, ast.ExceptHandler) and node.type is None:
+        for node in ctx.nodes(ast.ExceptHandler):
+            if node.type is None:
                 yield Finding(
                     ctx.path,
                     node.lineno,
@@ -533,11 +539,9 @@ def iter_py_files(paths: Iterable[str]) -> Iterator[str]:
 
 
 def lint_file(path: str) -> list[Finding]:
-    with open(path, encoding="utf-8") as f:
-        source = f.read()
     scope = _scope_key(path)
     try:
-        ctx = Context(path, scope, source)
+        ctx = Context(path, scope, astcache.parse(path))
     except SyntaxError as exc:
         return [Finding(path, exc.lineno or 0, "syntax", str(exc))]
     out: list[Finding] = []
@@ -566,6 +570,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("paths", nargs="*", help="files or directories to lint")
     ap.add_argument("--json", action="store_true", help="machine-readable output")
     ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument(
+        "--stats", action="store_true", help="print file/timing stats to stderr"
+    )
     args = ap.parse_args(argv)
     if args.list_rules:
         for r in RULES:
@@ -573,7 +580,16 @@ def main(argv: list[str] | None = None) -> int:
         return 0
     if not args.paths:
         ap.error("no paths given")
-    findings = lint_paths(args.paths)
+    t0 = time.perf_counter()
+    files = list(iter_py_files(args.paths))
+    findings = lint_paths(files)
+    if args.stats:
+        print(
+            f"dslint stats: files={len(files)} rules={len(RULES)} "
+            f"findings={len(findings)} "
+            f"elapsed_s={time.perf_counter() - t0:.4f}",
+            file=sys.stderr,
+        )
     if args.json:
         print(
             json.dumps(

@@ -105,17 +105,19 @@ class Report:
         return not self.errors
 
     def to_json(self) -> dict:
+        # findings use the shared analysis-tool schema (repro.tools.findings):
+        # the rule is the fsck category, the message its detail, and line is
+        # 0 — findings are about on-disk store objects, not source lines
+        from .findings import finding_dict
+
         return {
             "root": self.root,
             "ok": self.ok,
             "checked": dict(self.checked),
             "findings": [
-                {
-                    "severity": f.severity,
-                    "category": f.category,
-                    "path": f.path,
-                    "detail": f.detail,
-                }
+                finding_dict(
+                    "fsck", f.category, f.severity, f.path, 0, f.detail
+                )
                 for f in self.findings
             ],
         }

@@ -121,6 +121,39 @@ def edges() -> dict[tuple[str, str], str]:
         return dict(_edges)
 
 
+def export_edges(path: str) -> int:
+    """Merge the current acquisition graph into a JSON edge file.
+
+    The file accumulates across test runs (``dsflow --check-dynamic``
+    consumes the union), so existing edges are kept and new ones merged in;
+    the write is atomic (tmp + rename) because parallel pytest workers may
+    export concurrently.  Returns the total edge count written.
+    """
+    import json
+
+    merged: dict[tuple[str, str], str] = {}
+    try:
+        with open(path, encoding="utf-8") as f:
+            prior = json.load(f)
+        for rec in prior.get("edges", ()):
+            merged[(rec["held"], rec["acquired"])] = rec.get("where", "?")
+    except (OSError, ValueError, KeyError, TypeError):
+        pass  # absent or torn file: start fresh
+    for (held, acquired), where in edges().items():
+        merged.setdefault((held, acquired), where)
+    payload = {
+        "edges": [
+            {"held": h, "acquired": a, "where": w}
+            for (h, a), w in sorted(merged.items())
+        ]
+    }
+    tmp = f"{path}.{os.getpid()}.tmp"
+    with open(tmp, "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=1)
+    os.replace(tmp, path)
+    return len(merged)
+
+
 # --------------------------------------------------------------------------
 # instrumented locks
 # --------------------------------------------------------------------------

@@ -38,5 +38,10 @@ def race_detector(monkeypatch):
     racecheck.reset()
     yield racecheck
     findings = racecheck.findings()
+    # static↔dynamic cross-check: CI sets DSLOG_RACE_EXPORT to a path and
+    # later runs `dsflow --check-dynamic` on the accumulated edge graph
+    export = os.environ.get("DSLOG_RACE_EXPORT")
+    if export:
+        racecheck.export_edges(export)
     racecheck.reset()
     assert not findings, "race-detector findings:\n" + "\n".join(findings)

@@ -1,0 +1,145 @@
+"""``dstat`` — the telemetry-sidecar inspector CLI.
+
+``diff`` gets a golden-output test (two hand-built snapshots, exact stdout)
+and ``watch`` a single-iteration smoke test — its loop is driven with
+``--count`` so the test never sleeps past one interval.
+"""
+
+import json
+
+from repro.tools import dstat
+
+_SCHEMA = "dslog-telemetry/v1"
+
+
+def _snap(counters, histograms=(), gauges=()):
+    return {
+        "schema": _SCHEMA,
+        "store": "DSLog",
+        "registry": "dslog",
+        "root": "/tmp/s",
+        "generated_at": 0.0,
+        "counters": [
+            {"name": n, "labels": dict(labels), "value": v}
+            for n, labels, v in counters
+        ],
+        "gauges": [
+            {"name": n, "labels": dict(labels), "value": v}
+            for n, labels, v in gauges
+        ],
+        "histograms": [
+            {
+                "name": n,
+                "labels": dict(labels),
+                "count": c,
+                "sum": float(c),
+                "min": 1.0,
+                "max": 1.0,
+                "p50": 1.0,
+                "p90": 1.0,
+                "p99": 1.0,
+                "buckets": [[0, c]],
+            }
+            for n, labels, c in histograms
+        ],
+    }
+
+
+def _write(path, snap) -> str:
+    path.write_text(json.dumps(snap))
+    return str(path)
+
+
+OLD = _snap(
+    counters=[
+        ("wal_appends", {}, 10),
+        ("cache_hits", {"route": "a->b"}, 4),
+        ("dropped", {}, 1),
+    ],
+    histograms=[("flush_seconds", {}, 3)],
+)
+NEW = _snap(
+    counters=[
+        ("wal_appends", {}, 25),
+        ("cache_hits", {"route": "a->b"}, 4),  # unchanged: omitted
+        ("dropped", {}, 1),
+        ("queries", {}, 7),  # new counter diffs against zero
+    ],
+    histograms=[("flush_seconds", {}, 9)],
+)
+
+
+def test_diff_snapshots_counter_and_histogram_deltas():
+    delta = dstat.diff_snapshots(OLD, NEW)
+    assert delta == {
+        "counters": {"queries": 7, "wal_appends": 15},
+        "histograms": {"flush_seconds": 6},
+    }
+
+
+def test_diff_golden_output(tmp_path, capsys):
+    old = _write(tmp_path / "old.json", OLD)
+    new = _write(tmp_path / "new.json", NEW)
+    rc = dstat.main(["diff", old, new])
+    assert rc == 0
+    assert capsys.readouterr().out == (
+        "counters:\n"
+        "  queries  +7\n"
+        "  wal_appends  +15\n"
+        "histograms:\n"
+        "  flush_seconds  +6\n"
+    )
+
+
+def test_diff_json_and_no_change(tmp_path, capsys):
+    old = _write(tmp_path / "old.json", OLD)
+    rc = dstat.main(["diff", old, old, "--json"])
+    assert rc == 0
+    assert json.loads(capsys.readouterr().out) == {
+        "counters": {},
+        "histograms": {},
+    }
+    rc = dstat.main(["diff", old, old])
+    assert rc == 0
+    assert capsys.readouterr().out == "no change\n"
+
+
+def test_diff_resolves_store_root(tmp_path, capsys):
+    """A directory operand resolves to its telemetry.json sidecar."""
+    _write(tmp_path / "telemetry.json", OLD)
+    new = _write(tmp_path / "new.json", NEW)
+    rc = dstat.main(["diff", str(tmp_path), new])
+    assert rc == 0
+    assert "wal_appends  +15" in capsys.readouterr().out
+
+
+def test_watch_single_iteration_smoke(tmp_path, capsys):
+    """One read (--count 1): prints the full first snapshot, then stops
+    without sleeping."""
+    target = _write(tmp_path / "telemetry.json", OLD)
+    rc = dstat.main(["watch", target, "--count", "1", "--interval", "0"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "counters:" in out
+    assert "wal_appends" in out
+    assert "[" not in out  # no delta lines on the first read
+
+
+def test_watch_two_reads_reports_no_change(tmp_path, capsys):
+    target = _write(tmp_path / "telemetry.json", OLD)
+    rc = dstat.main(["watch", target, "--count", "2", "--interval", "0"])
+    assert rc == 0
+    assert "(no change)" in capsys.readouterr().out
+
+
+def test_dump_rejects_invalid_snapshot(tmp_path, capsys):
+    bad = tmp_path / "telemetry.json"
+    bad.write_text(json.dumps({"schema": "nope"}))
+    rc = dstat.main(["dump", str(bad)])
+    assert rc == 2
+    assert "invalid telemetry" in capsys.readouterr().err
+
+
+def test_missing_file_exit_code(tmp_path):
+    rc = dstat.main(["diff", str(tmp_path / "a.json"), str(tmp_path / "b.json")])
+    assert rc == 2

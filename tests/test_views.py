@@ -568,7 +568,7 @@ def test_fsck_views_clean_and_stale(kind):
         log.commit()
         log.close(checkpoint=False)
         rc, rep = _fsck(root)
-        cats = {f["category"] for f in rep["findings"]}
+        cats = {f["rule"] for f in rep["findings"]}
         assert rc == 1 and "view-stale" in cats, rep
 
         # recovery folds the invalidation back in; a checkpoint then leaves
@@ -577,13 +577,13 @@ def test_fsck_views_clean_and_stale(kind):
         assert not re.views.views
         re.save()
         rc, rep = _fsck(root)
-        cats = {f["category"] for f in rep["findings"]}
+        cats = {f["rule"] for f in rep["findings"]}
         assert rc == 0 and "view-stale" not in cats, rep
         assert "orphan-blob" in cats, rep
         re.compact()
         rc, rep = _fsck(root)
         assert rc == 0 and "orphan-blob" not in {
-            f["category"] for f in rep["findings"]
+            f["rule"] for f in rep["findings"]
         }, rep
 
 
@@ -601,6 +601,6 @@ def test_fsck_flags_missing_view_blob():
         rc, rep = _fsck(root)
         assert rc == 1
         assert any(
-            f["category"] == "dangling-handle" and "view_" in f["path"]
+            f["rule"] == "dangling-handle" and "view_" in f["path"]
             for f in rep["findings"]
         ), rep
